@@ -1,0 +1,64 @@
+"""Paper Tables X / XII / XIV — best accuracy of the global model.
+
+Numeric federated training on synthetic stand-in datasets (offline
+container; DESIGN.md §6).  Task 1 runs at full paper scale; tasks 2/3 run
+scaled-down by default (--full for paper scale — hours on 1 CPU core).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_env, run_protocol
+from repro.data import make_images, make_regression, make_svm, partition
+from repro.data import tasks as task_mod
+
+PROTOS = ('local', 'fedavg', 'fedcs', 'fedasync', 'safa')
+
+
+def _bench(task_name, build, rounds, crs, cs, seed=0, scale=1.0):
+    for cr in crs:
+        env = make_env(task_name, cr, seed=seed, scale=scale)
+        task = build(env)
+        for C in cs:
+            for proto in PROTOS:
+                h = run_protocol(proto, env, C, rounds, task=task,
+                                 eval_every=max(2, rounds // 5))
+                acc = h.best_eval['acc'] if h.best_eval else float('nan')
+                emit(f'accuracy/{task_name}/{proto}/cr{cr}/C{C}',
+                     f'{acc:.4f}',
+                     f'loss={h.best_eval["loss"]:.4f};rounds={rounds}')
+
+
+def run(full: bool = False, seed: int = 0):
+    # Task 1: full paper scale (m=5)
+    def build1(env):
+        x, y = make_regression(n=env.dataset_size, seed=seed)
+        data = partition(x, y, env.partition_sizes, env.batch_size, seed=seed)
+        return task_mod.regression_task(data, lr=1e-3, epochs=env.epochs)
+    _bench('task1_regression', build1, rounds=60 if not full else 100,
+           crs=(0.1, 0.7), cs=(0.1, 0.3, 1.0), seed=seed)
+
+    # Task 3: SVM, scaled m=50 by default
+    def build3(env):
+        x, y = make_svm(n=env.dataset_size, seed=seed)
+        data = partition(x, y, env.partition_sizes, env.batch_size, seed=seed)
+        return task_mod.svm_task(data, lr=1e-2, epochs=env.epochs)
+    _bench('task3_svm', build3, rounds=25 if not full else 100,
+           crs=(0.3,), cs=(0.1, 0.3), seed=seed,
+           scale=1.0 if full else 0.1)
+
+    # Task 2: CNN, small demo by default (convs are slow on 1 CPU core);
+    # --full runs the paper-scale m=100 configuration
+    def build2(env):
+        x, y = make_images(n=env.dataset_size, seed=seed)
+        data = partition(x, y, env.partition_sizes, env.batch_size,
+                         dirichlet_alpha=None, seed=seed)
+        return task_mod.cnn_task(data, lr=1e-3,
+                                 epochs=env.epochs if full else 1)
+    _bench('task2_cnn', build2, rounds=5 if not full else 50,
+           crs=(0.3,), cs=(0.3,), seed=seed,
+           scale=1.0 if full else 0.04)
+
+
+if __name__ == '__main__':
+    run()

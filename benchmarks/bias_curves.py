@@ -1,0 +1,52 @@
+"""Paper Fig. 5 — bias between fastest/slowest clients vs round index, for
+FedAvg and the three SAFA selection cases.
+
+Emits both the paper-faithful curves (printed Eq. 15) and the corrected
+recurrence-solution curves (see repro.core.bias.sigma docstrings), plus a
+Monte-Carlo estimate from actual CFCFM selection.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import bias, selection
+
+
+def monte_carlo_pick_rate(C, cr=0.3, m=30, rounds=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    prev = np.zeros(m, bool)
+    pa, pb = [], []
+    for _ in range(rounds):
+        crashed = rng.random(m) < cr
+        arrival = rng.uniform(10, 20, m)
+        arrival[0], arrival[-1] = 1.0, 100.0
+        arrival = np.where(~crashed, arrival, np.inf)
+        sel = selection.cfcfm(arrival, ~crashed, prev, C, 1e9)
+        pa.append(sel.picked[0])
+        pb.append(sel.picked[-1])
+        prev = sel.picked
+    h = rounds // 2
+    return float(np.mean(pa[h:])), float(np.mean(pb[h:]))
+
+
+def run():
+    cr = 0.3
+    emit('bias/fedavg', f'{bias.bias_fedavg(cr, cr):.4f}', 'constant')
+    for (C, R), case in [((0.9, 0.5), 1), ((0.5, 0.3), 2), ((0.05, 0.3), 3)]:
+        for faithful in (True, False):
+            curve = bias.bias_curve(cr, cr, C, R, 30, faithful=faithful)
+            tag = 'paper_eq15' if faithful else 'corrected'
+            emit(f'bias/safa_case{case}/{tag}', f'{curve[-1]:.4f}',
+                 f'r5={curve[3]:.4f};r10={curve[8]:.4f};converged='
+                 f'{abs(curve[-1] - curve[-2]) < 1e-6}')
+    # Monte-Carlo ground truth for the steady-state pick probabilities
+    for C, case in [(1.0, 1), (0.1, 3)]:
+        pa, pb = monte_carlo_pick_rate(C, cr)
+        emit(f'bias/montecarlo_case{case}', f'{pa:.4f}',
+             f'pick_rate_B={pb:.4f};theory_A='
+             f'{(1 - cr) if case == 1 else (1 - cr) / (2 - cr):.4f}')
+
+
+if __name__ == '__main__':
+    run()

@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: paper environment grids + CSV output."""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.configs import PAPER_TASKS
+from repro.core import federation
+from repro.fedsim import FLEnv
+
+CR_GRID = (0.1, 0.3, 0.5, 0.7)
+C_GRID = (0.1, 0.3, 0.5, 0.7, 1.0)
+PROTOCOLS = ('fedavg', 'fedcs', 'safa')
+
+
+def make_env(task_name: str, cr: float, seed: int = 0, scale: float = 1.0) -> FLEnv:
+    t = PAPER_TASKS[task_name]
+    m = max(2, int(t['m'] * scale))
+    n = max(m * t['batch_size'], int(t['dataset_size'] * scale))
+    return FLEnv(m=m, crash_prob=cr, dataset_size=n,
+                 batch_size=t['batch_size'], epochs=t['epochs'],
+                 t_lim=t['t_lim'], seed=seed)
+
+
+def run_protocol(name: str, env: FLEnv, C: float, rounds: int,
+                 lag_tolerance: int = 5, task=None, **kw):
+    fn = federation.PROTOCOLS[name]
+    kwargs = dict(fraction=C, rounds=rounds, numeric=task is not None, **kw)
+    if name == 'safa':
+        kwargs['lag_tolerance'] = lag_tolerance
+    return fn(task, env, **kwargs)
+
+
+def emit(name: str, value, derived: str = ''):
+    """CSV row: name,us_per_call,derived."""
+    print(f'{name},{value},{derived}', flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+    @property
+    def us(self):
+        return self.dt * 1e6

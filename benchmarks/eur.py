@@ -1,0 +1,24 @@
+"""Paper Eq. 5 / Fig. 2 — Effective Update Ratio: theory vs simulation for
+SAFA's post-training selection and FedAvg's pre-training selection."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_env, run_protocol
+from repro.core import metrics
+
+
+def run(rounds: int = 40, seed: int = 0):
+    for cr in (0.1, 0.3, 0.5, 0.7):
+        for C in (0.1, 0.3, 0.5, 0.9):
+            env = make_env('task2_cnn', cr, seed=seed)
+            hs = run_protocol('safa', env, C, rounds)
+            hf = run_protocol('fedavg', env, C, rounds)
+            emit(f'eur/cr{cr}/C{C}', f'{hs.mean("eur"):.4f}',
+                 f'theory_safa={metrics.eur_theory_safa(C, cr):.4f};'
+                 f'fedavg={hf.mean("eur"):.4f};'
+                 f'theory_fedavg={metrics.eur_theory_fedavg(C, cr):.4f}')
+
+
+if __name__ == '__main__':
+    run()

@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: us/call for the Pallas kernels (interpret mode on
+CPU — structural validation; real perf is a TPU measurement) vs their jnp
+oracles, plus communication-compression byte accounting."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, emit
+from repro.kernels import ref
+from repro.kernels.comm_quant import QBLOCK, dequantize, quantize
+from repro.kernels.safa_aggregate import safa_aggregate
+from repro.kernels.swa_attention import swa_attention
+
+
+def _time(fn, *args, reps=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    with Timer() as t:
+        for _ in range(reps):
+            out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return t.us / reps
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    # --- safa_aggregate: m=16 silo clients, 1M params -----------------------
+    m, n = 16, 1_000_000
+    ks = jax.random.split(key, 7)
+    cache = jax.random.normal(ks[0], (m, n))
+    trained = jax.random.normal(ks[1], (m, n))
+    g = jax.random.normal(ks[2], (n,))
+    picked = jax.random.bernoulli(ks[3], 0.4, (m,))
+    undrafted = jax.random.bernoulli(ks[4], 0.3, (m,)) & ~picked
+    dep = jax.random.bernoulli(ks[5], 0.2, (m,))
+    w = jax.nn.softmax(jax.random.normal(ks[6], (m,)))
+
+    us_k = _time(safa_aggregate, cache, trained, g, picked, undrafted, dep, w)
+    jref = jax.jit(ref.safa_aggregate_ref)
+    us_r = _time(jref, cache, trained, g, picked, undrafted, dep, w)
+    hbm_naive = (5 * m + 2) * n * 4   # 3-step: reads c,t,g x stages
+    hbm_fused = (2 * m + 1 + m + 1) * n * 4
+    emit('kernel/safa_aggregate/16x1M', f'{us_k:.0f}',
+         f'jnp_ref_us={us_r:.0f};hbm_bytes_fused={hbm_fused};'
+         f'hbm_bytes_3step={hbm_naive};traffic_saving='
+         f'{hbm_naive / hbm_fused:.2f}x')
+
+    # --- comm_quant ----------------------------------------------------------
+    x = jax.random.normal(key, (4_000_000,))
+    us_q = _time(quantize, x)
+    q, s = quantize(x)
+    us_d = _time(dequantize, q, s, n=x.shape[0])
+    raw, wire = 4 * x.size, x.size + 4 * (x.size // QBLOCK)
+    emit('kernel/comm_quant/4M', f'{us_q:.0f}',
+         f'dequant_us={us_d:.0f};wire_bytes={wire};raw_bytes={raw};'
+         f'compression={raw / wire:.2f}x')
+
+    # --- swa_attention (interpret mode: correctness-scale shapes) ------------
+    B, S, H, KH, D = 1, 512, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q4 = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k4 = jax.random.normal(ks[1], (B, S, KH, D), jnp.float32)
+    v4 = jax.random.normal(ks[2], (B, S, KH, D), jnp.float32)
+    for win in (None, 128):
+        us = _time(swa_attention, q4, k4, v4, window=win, block_q=128,
+                   block_k=128, reps=2)
+        full_blocks = (S // 128) * (S // 128 + 1) // 2
+        win_blocks = (S // 128) * 2 if win else full_blocks
+        emit(f'kernel/swa_attention/S512_win{win}', f'{us:.0f}',
+             f'kv_blocks_visited~{win_blocks};full_causal={full_blocks};'
+             f'interpret_mode=True')
+
+
+if __name__ == '__main__':
+    run()

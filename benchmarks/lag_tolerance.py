@@ -1,0 +1,33 @@
+"""Paper Figs. 3-4 — impact of lag tolerance tau on best loss, SR, EUR, VV.
+
+Task 1 (regression) setup, tau in 1..10, C in {0.1, 0.5, 1.0},
+cr in {0.3, 0.7} — as in §III-D.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_env, run_protocol
+from repro.data import make_regression, partition
+from repro.data.tasks import regression_task
+
+
+def run(rounds: int = 60, seed: int = 0):
+    x, y = make_regression(seed=seed)
+    for cr in (0.3, 0.7):
+        for C in (0.1, 0.5, 1.0):
+            for tau in (1, 2, 3, 5, 7, 10):
+                env = make_env('task1_regression', cr, seed=seed)
+                data = partition(x, y, env.partition_sizes, env.batch_size,
+                                 seed=seed)
+                task = regression_task(data, lr=1e-3, epochs=env.epochs)
+                h = run_protocol('safa', env, C, rounds, lag_tolerance=tau,
+                                 task=task, eval_every=rounds // 5)
+                emit(f'lag_tolerance/cr{cr}/C{C}/tau{tau}',
+                     f'{h.best_eval["loss"]:.4f}',
+                     f'sr={h.mean("sr"):.3f};eur={h.mean("eur"):.3f};'
+                     f'vv={h.mean("vv"):.3f}')
+
+
+if __name__ == '__main__':
+    run()

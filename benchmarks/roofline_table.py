@@ -1,0 +1,57 @@
+"""Roofline report — renders EXPERIMENTS.md §Roofline from the dry-run
+results (results/dryrun.jsonl).  One row per (arch x shape x mesh)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), '..', 'results',
+                       'dryrun.jsonl')
+
+
+def rows(path=RESULTS):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def run():
+    rs = rows()
+    if not rs:
+        emit('roofline/missing', '0', 'run repro.launch.dryrun --all first')
+        return
+    for r in rs:
+        dom = {'compute': r['t_compute_s'], 'memory': r['t_memory_s'],
+               'collective': r['t_collective_s']}[r['bottleneck']]
+        emit(f'roofline/{r["arch"]}/{r["shape"]}/{r["mesh"]}',
+             f'{dom * 1e6:.0f}',
+             f'bottleneck={r["bottleneck"]};tc={r["t_compute_s"]:.3e};'
+             f'tm={r["t_memory_s"]:.3e};tcoll={r["t_collective_s"]:.3e};'
+             f'useful={r["useful_ratio"] if r["useful_ratio"] else 0:.2f};'
+             f'peak_GiB={r["peak_bytes"] / 2**30:.1f}')
+
+
+def markdown_table(path=RESULTS):
+    """Render the §Roofline markdown table."""
+    rs = rows(path)
+    out = ['| arch | shape | mesh | profile/step | t_compute (s) | '
+           't_memory (s) | t_collective (s) | bottleneck | 6ND/HLO | '
+           'peak GiB/dev |',
+           '|---|---|---|---|---|---|---|---|---|---|']
+    for r in sorted(rs, key=lambda r: (r['arch'], r['shape'], r['mesh'],
+                                       r.get('profile', 'tp'))):
+        ur = f"{r['useful_ratio']:.2f}" if r['useful_ratio'] else '-'
+        tag = f"{r.get('profile', 'tp')}/{r.get('step', '?')}"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tag} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['bottleneck']}** "
+            f"| {ur} | {r['peak_bytes'] / 2**30:.1f} |")
+    return '\n'.join(out)
+
+
+if __name__ == '__main__':
+    run()

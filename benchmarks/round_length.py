@@ -1,0 +1,44 @@
+"""Paper Tables IV / VI / VIII — average federated round length (s), and
+Tables V / VII / IX — average model distribution overhead T_dist (s).
+
+Timing metrics depend only on the event process (as in the paper), so these
+run at the full paper scale (m up to 500) with numeric training disabled.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (C_GRID, CR_GRID, PROTOCOLS, emit, make_env,
+                               run_protocol)
+
+TASKS = ('task1_regression', 'task2_cnn', 'task3_svm')
+
+
+def run(rounds: int = 30, seed: int = 0):
+    for task_name in TASKS:
+        for proto in PROTOCOLS:
+            for cr in CR_GRID:
+                for C in C_GRID:
+                    env = make_env(task_name, cr, seed=seed)
+                    h = run_protocol(proto, env, C, rounds)
+                    emit(f'round_length/{task_name}/{proto}/cr{cr}/C{C}',
+                         f'{h.mean("round_len"):.2f}',
+                         f'tdist={h.mean("t_dist"):.2f};eur={h.mean("eur"):.3f}')
+
+
+def summarize(rounds: int = 30, seed: int = 0):
+    """Headline claim check: SAFA speedup over FedAvg/FedCS at small C."""
+    for task_name in TASKS:
+        for cr in (0.3, 0.7):
+            env = {p: make_env(task_name, cr, seed=seed) for p in PROTOCOLS}
+            lens = {p: run_protocol(p, env[p], 0.1, rounds).mean('round_len')
+                    for p in PROTOCOLS}
+            emit(f'speedup/{task_name}/cr{cr}/C0.1',
+                 f'{lens["fedavg"] / lens["safa"]:.2f}',
+                 f'safa={lens["safa"]:.0f}s;fedavg={lens["fedavg"]:.0f}s;'
+                 f'fedcs={lens["fedcs"]:.0f}s')
+
+
+if __name__ == '__main__':
+    run()
+    summarize()

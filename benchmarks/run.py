@@ -1,0 +1,48 @@
+"""Benchmark entrypoint: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only SECTION]
+
+Prints ``name,us_per_call,derived`` CSV rows (values are seconds for the
+protocol-timing tables, accuracy for the accuracy tables, us/call for the
+kernel microbenches — the ``derived`` column says which).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (accuracy, bias_curves, eur, kernels_bench,
+                        lag_tolerance, roofline_table, round_length,
+                        selection_ablation, sr_futility)
+
+SECTIONS = {
+    'round_length': lambda full: (round_length.run(), round_length.summarize()),
+    'sr_futility': lambda full: sr_futility.run(),
+    'accuracy': lambda full: accuracy.run(full=full),
+    'lag_tolerance': lambda full: lag_tolerance.run(),
+    'bias': lambda full: bias_curves.run(),
+    'eur': lambda full: eur.run(),
+    'selection_ablation': lambda full: selection_ablation.run(),
+    'kernels': lambda full: kernels_bench.run(),
+    'roofline': lambda full: roofline_table.run(),
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--full', action='store_true',
+                    help='paper-scale numeric runs (slow on 1 CPU core)')
+    ap.add_argument('--only', choices=list(SECTIONS), default=None)
+    args = ap.parse_args(argv)
+    print('name,us_per_call,derived')
+    todo = [args.only] if args.only else list(SECTIONS)
+    for name in todo:
+        t0 = time.time()
+        print(f'# --- {name} ---', flush=True)
+        SECTIONS[name](args.full)
+        print(f'# {name} done in {time.time() - t0:.0f}s', flush=True)
+
+
+if __name__ == '__main__':
+    main()

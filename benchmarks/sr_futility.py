@@ -1,0 +1,24 @@
+"""Paper Tables XI / XIII / XV — Synchronization Ratio and Futility
+Percentage per protocol x C x cr."""
+from __future__ import annotations
+
+from benchmarks.common import (C_GRID, CR_GRID, PROTOCOLS, emit, make_env,
+                               run_protocol)
+
+TASKS = ('task1_regression', 'task2_cnn', 'task3_svm')
+
+
+def run(rounds: int = 30, seed: int = 0):
+    for task_name in TASKS:
+        for proto in PROTOCOLS:
+            for cr in CR_GRID:
+                for C in (0.1, 0.5, 1.0):
+                    env = make_env(task_name, cr, seed=seed)
+                    h = run_protocol(proto, env, C, rounds)
+                    emit(f'sr_futility/{task_name}/{proto}/cr{cr}/C{C}',
+                         f'{h.mean("sr"):.3f}',
+                         f'futility={h.futility:.3f};vv={h.mean("vv"):.3f}')
+
+
+if __name__ == '__main__':
+    run()

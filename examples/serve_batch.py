@@ -1,0 +1,11 @@
+"""Batched serving example: prefill + KV-cache decode on three architecture
+families (dense+SWA, SSM, MoE), demonstrating the family-specific caches.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import run
+
+for arch in ('h2o-danube-3-4b', 'mamba2-130m', 'llama4-scout-17b-a16e'):
+    print(f'=== {arch} (reduced config) ===')
+    run(arch, batch=2, prompt_len=16, gen=8)
+    print()

@@ -1,0 +1,41 @@
+"""Pytree checkpointing (npz) including federated protocol state, so a
+federation can stop and resume mid-training."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = '/'.join(str(getattr(p, 'key', getattr(p, 'idx', p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    np.savez(path, __meta__=json.dumps(metadata or {}), **arrays)
+
+
+def restore(path: str, like: Any):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Returns (tree, metadata)."""
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data['__meta__']))
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_k, leaf in flat[0]:
+        key = '/'.join(str(getattr(p, 'key', getattr(p, 'idx', p))) for p in path_k)
+        arr = data[key]
+        dtype = getattr(leaf, 'dtype', None)
+        leaves.append(jnp.asarray(arr, dtype=dtype))
+    return jax.tree_util.tree_unflatten(flat[1], leaves), meta

@@ -1,0 +1,352 @@
+"""Federation orchestrators: SAFA / FedAvg / FedCS / fully-local.
+
+The orchestrator owns the *protocol* state machine (versions, commit flags,
+pending straggler progress) in numpy, drives the event simulator for
+timing/crash draws, and (optionally, ``numeric=True``) executes the model
+math via the jit-able mask algebra in ``repro.core.protocol``.
+
+Timing-only mode (``numeric=False``) reproduces the paper's round-length /
+T_dist / SR / futility tables at full scale without touching model weights —
+those metrics depend only on the event process, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol, selection
+from repro.fedsim import FLEnv
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    round_len: float
+    t_dist: float
+    eur: float
+    sr: float
+    vv: float
+    n_picked: int
+    n_committed: int
+    n_crashed: int
+    eval: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class History:
+    protocol: str
+    records: list = dataclasses.field(default_factory=list)
+    futility: float = 0.0
+    best_eval: Optional[dict] = None
+    final_global: Any = None
+
+    def mean(self, field: str) -> float:
+        return float(np.mean([getattr(r, field) for r in self.records]))
+
+    def evals(self):
+        return [(r.round, r.eval) for r in self.records if r.eval is not None]
+
+
+class Task:
+    """A federated learning task: model init/train/eval, model-agnostic for
+    the protocol layer.  ``local_train(stacked_params, round_idx)`` must
+    train every client replica for E epochs (vmapped inside)."""
+
+    def init_global(self, key):
+        raise NotImplementedError
+
+    def local_train(self, stacked_params, round_idx: int):
+        raise NotImplementedError
+
+    def evaluate(self, global_params) -> dict:
+        raise NotImplementedError
+
+
+def _to_j(mask: np.ndarray):
+    return jnp.asarray(mask)
+
+
+class _NumericState:
+    def __init__(self, task: Task, m: int, seed: int):
+        key = jax.random.PRNGKey(seed)
+        self.global_w = task.init_global(key)
+        self.local_w = protocol.broadcast_global(self.global_w, m)
+        self.cache = protocol.broadcast_global(self.global_w, m)
+
+
+def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
+             lag_tolerance: int, rounds: int, eval_every: int = 10,
+             numeric: bool = True, use_kernel: bool = False,
+             quantize_uploads: bool = False, seed: int = 0) -> History:
+    m = env.m
+    hist = History('safa')
+    v = np.zeros(m, dtype=int)             # base-model versions
+    committed_prev = np.ones(m, bool)      # round 1: everyone holds w(0)
+    picked_prev = np.zeros(m, bool)
+    pending = np.zeros(m)                  # straggler partial progress (fraction)
+    full_tt = env.full_train_time()
+    work = env.n_batches * env.epochs      # per-round work units
+    wasted = 0.0
+    performed = 0.0
+    ns = _NumericState(task, m, seed) if numeric else None
+
+    for t in range(1, rounds + 1):
+        gv = t - 1
+        up, dep, tol = protocol.classify_versions(
+            jnp.asarray(v), gv, lag_tolerance, _to_j(committed_prev))
+        up, dep = np.asarray(up), np.asarray(dep)
+        sync = up | dep
+        # forced sync discards any pending straggler progress (futility)
+        wasted += float(np.sum(pending[sync] * work[sync]))
+        pending[sync] = 0.0
+        v[sync] = gv
+
+        crashed, cfrac = env.draw_round()
+        remaining = 1.0 - pending
+        t_train = remaining * full_tt
+        t_dist = env.t_dist(int(sync.sum()))
+        arrival = t_dist + env.t_updown * (1 + sync.astype(float)) + t_train
+        completed = ~crashed
+        arrival = np.where(completed, arrival, np.inf)
+        performed += float(np.sum(np.where(completed, remaining,
+                                           cfrac * remaining) * work))
+        base_versions = v.copy()
+
+        sel = selection.cfcfm(arrival, completed, picked_prev, fraction, env.t_lim)
+        pending = np.where(crashed, np.minimum(pending + cfrac * remaining, 0.999),
+                           pending)
+        pending[sel.committed] = 0.0
+        v[sel.committed] = t
+
+        if numeric:
+            train_fn = task.local_train
+            if quantize_uploads:
+                # int8-compressed uplink (beyond-paper; comm_quant kernel):
+                # the server sees the dequantised client update, exactly as
+                # a real compressed transfer would deliver it
+                def train_fn(stacked, *args, _f=task.local_train):
+                    from repro.kernels import ops as kops
+                    trained = _f(stacked, *args)
+                    return kops.dequantize_tree(kops.quantize_tree(trained),
+                                                trained)
+            ns.global_w, ns.local_w, ns.cache = protocol.safa_round(
+                ns.global_w, ns.local_w, ns.cache,
+                sync_mask=_to_j(sync), completed=_to_j(sel.committed),
+                picked=_to_j(sel.picked), undrafted=_to_j(sel.undrafted),
+                deprecated=_to_j(dep), weights=jnp.asarray(env.weights),
+                local_train_fn=train_fn, train_args=(t,),
+                use_kernel=use_kernel)
+
+        trained_v = base_versions[sel.committed]
+        rec = RoundRecord(
+            round=t,
+            round_len=min(env.t_lim, sel.quota_met_time),
+            t_dist=t_dist,
+            eur=float(sel.picked.sum()) / m,
+            sr=float(sync.sum()) / m,
+            vv=float(np.var(trained_v)) if trained_v.size else 0.0,
+            n_picked=int(sel.picked.sum()),
+            n_committed=int(sel.committed.sum()),
+            n_crashed=int(crashed.sum()),
+        )
+        if numeric and (t % eval_every == 0 or t == rounds):
+            rec.eval = task.evaluate(ns.global_w)
+            if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
+                hist.best_eval = rec.eval
+        hist.records.append(rec)
+        committed_prev = sel.committed.copy()
+        picked_prev = sel.picked.copy()
+
+    hist.futility = wasted / max(performed, 1e-9)
+    if numeric:
+        hist.final_global = ns.global_w
+    return hist
+
+
+def _sync_round_common(env: FLEnv, selected: np.ndarray, crashed: np.ndarray,
+                       cfrac: np.ndarray, full_tt: np.ndarray):
+    """Shared FedAvg/FedCS timing: server waits for every selected client;
+    a crash is detected when the client drops (at its partial-progress
+    point), so the round ends at max(finish/drop times), capped at T_lim."""
+    t_dist = env.t_dist(int(selected.sum()))
+    finish = t_dist + 2 * env.t_updown + full_tt
+    drop = t_dist + env.t_updown + cfrac * full_tt
+    per_client = np.where(crashed, drop, finish)
+    if selected.any():
+        round_len = float(np.max(per_client[selected]))
+    else:
+        round_len = t_dist
+    return min(env.t_lim, round_len), t_dist
+
+
+def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
+               rounds: int, eval_every: int = 10, numeric: bool = True,
+               seed: int = 0, fedcs: bool = False) -> History:
+    m = env.m
+    hist = History('fedcs' if fedcs else 'fedavg')
+    rng = np.random.default_rng(seed + 1)
+    full_tt = env.full_train_time()
+    work = env.n_batches * env.epochs
+    wasted = 0.0
+    performed = 0.0
+    ns = _NumericState(task, m, seed) if numeric else None
+
+    for t in range(1, rounds + 1):
+        if fedcs:
+            est = 2 * env.t_updown + full_tt
+            sel = selection.fedcs_select(est, fraction, env.t_lim)
+        else:
+            sel = selection.fedavg_select(rng, m, fraction)
+        crashed, cfrac = env.draw_round()
+        round_len, t_dist = _sync_round_common(env, sel, crashed, cfrac, full_tt)
+        # clients that cannot make the deadline are reckoned crashed (§III-B)
+        too_slow = (t_dist + 2 * env.t_updown + full_tt) > env.t_lim
+        crashed = crashed | too_slow
+        completed = sel & ~crashed
+        performed += float(np.sum(np.where(sel, np.where(crashed, cfrac, 1.0), 0.0) * work))
+        wasted += float(np.sum((sel & crashed) * cfrac * work))
+
+        if numeric:
+            ns.global_w, ns.local_w = protocol.fedavg_round(
+                ns.global_w, ns.local_w, selected=_to_j(sel),
+                completed=_to_j(~crashed), weights=jnp.asarray(env.weights),
+                local_train_fn=task.local_train, train_args=(t,))
+
+        rec = RoundRecord(
+            round=t, round_len=round_len, t_dist=t_dist,
+            eur=float(completed.sum()) / m,
+            sr=float(sel.sum()) / m, vv=0.0,
+            n_picked=int(completed.sum()), n_committed=int(completed.sum()),
+            n_crashed=int(crashed.sum()))
+        if numeric and (t % eval_every == 0 or t == rounds):
+            rec.eval = task.evaluate(ns.global_w)
+            if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
+                hist.best_eval = rec.eval
+        hist.records.append(rec)
+
+    hist.futility = wasted / max(performed, 1e-9)
+    if numeric:
+        hist.final_global = ns.global_w
+    return hist
+
+
+def run_fedcs(task, env, **kw) -> History:
+    return run_fedavg(task, env, fedcs=True, **kw)
+
+
+def run_local(task: Optional[Task], env: FLEnv, *, fraction: float,
+              rounds: int, eval_every: int = 10, numeric: bool = True,
+              seed: int = 0) -> History:
+    """Fully-local baseline: C-fraction of clients train each round with no
+    aggregation; a single weighted aggregation happens after the last round."""
+    m = env.m
+    hist = History('local')
+    rng = np.random.default_rng(seed + 2)
+    ns = _NumericState(task, m, seed) if numeric else None
+    full_tt = env.full_train_time()
+
+    for t in range(1, rounds + 1):
+        sel = selection.fedavg_select(rng, m, fraction)
+        crashed, cfrac = env.draw_round()
+        completed = sel & ~crashed
+        round_len, t_dist = _sync_round_common(env, sel, crashed, cfrac, full_tt)
+        if numeric:
+            trained = task.local_train(ns.local_w, t)
+            ns.local_w = protocol.masked_select(_to_j(completed), trained, ns.local_w)
+        rec = RoundRecord(round=t, round_len=round_len, t_dist=0.0,
+                          eur=0.0, sr=0.0, vv=0.0,
+                          n_picked=0, n_committed=int(completed.sum()),
+                          n_crashed=int(crashed.sum()))
+        if numeric and (t % eval_every == 0 or t == rounds):
+            gw = protocol.aggregate(ns.local_w, jnp.asarray(env.weights))
+            rec.eval = task.evaluate(gw)
+            if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
+                hist.best_eval = rec.eval
+        hist.records.append(rec)
+
+    if numeric:
+        hist.final_global = protocol.aggregate(ns.local_w, jnp.asarray(env.weights))
+    hist.futility = 0.0
+    return hist
+
+
+def run_fedasync(task: Optional[Task], env: FLEnv, *, fraction: float = 1.0,
+                 rounds: int = 100, eval_every: int = 10,
+                 numeric: bool = True, alpha: float = 0.6,
+                 staleness_exp: float = 0.5, seed: int = 0) -> History:
+    """FedAsync baseline (Xie et al. [9], paper §II): every willing client
+    trains every round and the server merges each arriving update
+    immediately with staleness-polynomial mixing
+    alpha_eff = alpha * (1 + staleness)^(-staleness_exp).
+
+    ``fraction`` is ignored (fully asynchronous — the paper's critique is
+    precisely that the server must absorb every update: SR == 1 and m
+    model merges per virtual round).
+    """
+    del fraction
+    m = env.m
+    hist = History('fedasync')
+    full_tt = env.full_train_time()
+    versions = np.zeros(m, dtype=float)   # global version at last pull
+    global_version = 0
+    ns = _NumericState(task, m, seed) if numeric else None
+
+    for t in range(1, rounds + 1):
+        crashed, cfrac = env.draw_round()
+        arrival = env.t_dist(m) + 2 * env.t_updown + full_tt
+        arrival = np.where(~crashed, arrival, np.inf)
+        too_slow = arrival > env.t_lim
+        committed = ~crashed & ~too_slow
+        order = np.argsort(arrival, kind='stable')
+        staleness = np.maximum(0.0, global_version - versions)
+        alphas = np.where(committed,
+                          alpha * (1.0 + staleness) ** (-staleness_exp), 0.0)
+
+        if numeric:
+            trained = task.local_train(ns.local_w, t)
+            trained = protocol.masked_select(_to_j(committed), trained,
+                                             ns.local_w)
+            ns.global_w = protocol.fedasync_merge(
+                ns.global_w, trained, order=jnp.asarray(order),
+                alphas=jnp.asarray(alphas, jnp.float32))
+            # committed clients pull the fresh global model
+            ns.local_w = protocol.masked_select(
+                _to_j(committed), protocol.broadcast_global(ns.global_w, m),
+                protocol.masked_select(_to_j(committed), trained, ns.local_w))
+
+        global_version += int(committed.sum())
+        versions[committed] = global_version
+        rec = RoundRecord(
+            round=t,
+            round_len=min(env.t_lim, float(np.max(arrival[committed]))
+                          if committed.any() else env.t_lim),
+            t_dist=env.t_dist(int(committed.sum())),
+            eur=float(committed.sum()) / m,
+            sr=1.0,  # every client syncs every round: max downlink pressure
+            vv=float(np.var(staleness[committed])) if committed.any() else 0.0,
+            n_picked=int(committed.sum()),
+            n_committed=int(committed.sum()),
+            n_crashed=int(crashed.sum()))
+        if numeric and (t % eval_every == 0 or t == rounds):
+            rec.eval = task.evaluate(ns.global_w)
+            if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
+                hist.best_eval = rec.eval
+        hist.records.append(rec)
+
+    if numeric:
+        hist.final_global = ns.global_w
+    return hist
+
+
+PROTOCOLS = {
+    'safa': run_safa,
+    'fedavg': run_fedavg,
+    'fedcs': run_fedcs,
+    'local': run_local,
+    'fedasync': run_fedasync,
+}

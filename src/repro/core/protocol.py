@@ -1,0 +1,194 @@
+"""SAFA numeric protocol algebra (Eq. 3, 6, 7, 8) on stacked client pytrees.
+
+Everything here is mask-driven and jit-able.  Client pytrees carry a leading
+``clients`` dim of size m; in simulation mode it is a stacked replica axis,
+in silo mode it is sharded over the ``("pod", "data")`` mesh axes.
+
+The server's *cache* (one entry per client) and the *bypass* are realised as
+masked updates: picked entries overwrite pre-aggregation (Eq. 6), undrafted
+entries overwrite post-aggregation (Eq. 8) — bit-identical to the paper's
+three-step discriminative aggregation (tests assert the step-by-step
+equivalence).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _bmask(mask, leaf):
+    """Broadcast a [m] client mask against a [m, ...] leaf."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
+
+
+def masked_select(mask, a, b):
+    """Per-client where: leaf = mask ? a : b  (mask: [m] bool)."""
+    return jax.tree.map(lambda x, y: jnp.where(_bmask(mask, x), x, y), a, b)
+
+
+def broadcast_global(global_tree, m: int):
+    """Tile the global model across the clients dim."""
+    return jax.tree.map(
+        lambda g: jnp.broadcast_to(g[None], (m,) + g.shape), global_tree)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3 — lag-tolerant distribution
+# ---------------------------------------------------------------------------
+
+def distribute(global_w, local_w, sync_mask):
+    """sync_mask[k] True => client k (up-to-date or deprecated) takes the
+    latest global model; tolerable clients keep their local model."""
+    m = sync_mask.shape[0]
+    g = broadcast_global(global_w, m)
+    return masked_select(sync_mask, g, local_w)
+
+
+def classify_versions(versions, global_version, lag_tolerance,
+                      committed_prev=None):
+    """Client states at round start.
+
+    versions[k] = version of the base model client k currently holds.
+    up-to-date:  committed last round (their base will be the new global);
+    deprecated:  staleness >= lag_tolerance (Eq. 3: v < t - tau);
+    tolerable:   in between.
+    """
+    staleness = global_version - versions
+    if committed_prev is None:
+        up_to_date = staleness <= 0
+    else:
+        up_to_date = committed_prev
+    deprecated = (~up_to_date) & (staleness >= lag_tolerance)
+    tolerable = (~up_to_date) & (~deprecated)
+    return up_to_date, deprecated, tolerable
+
+
+# ---------------------------------------------------------------------------
+# Eq. 6/7/8 — three-step discriminative aggregation
+# ---------------------------------------------------------------------------
+
+class AggregationResult(NamedTuple):
+    new_global: Any
+    new_cache: Any
+
+
+def pre_agg_cache_update(cache, trained, global_prev, picked, deprecated):
+    """Eq. 6.  picked -> trained update; deprecated (and not picked) ->
+    previous global; otherwise keep the existing entry."""
+    m = picked.shape[0]
+    g = broadcast_global(global_prev, m)
+    out = masked_select(deprecated & ~picked, g, cache)
+    out = masked_select(picked, trained, out)
+    return out
+
+
+def aggregate(cache, weights):
+    """Eq. 7: w(t) = sum_k (n_k / n) * cache_k.  weights: [m], sums to 1."""
+    def red(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(leaf.astype(jnp.float32) * w, axis=0).astype(leaf.dtype)
+    return jax.tree.map(red, cache)
+
+
+def post_agg_cache_update(cache, trained, undrafted):
+    """Eq. 8: undrafted updates enter the cache for the *next* round."""
+    return masked_select(undrafted, trained, cache)
+
+
+def discriminative_aggregation(cache, trained, global_prev, *, picked,
+                               undrafted, deprecated, weights,
+                               use_kernel: bool = False) -> AggregationResult:
+    """The full three-step aggregation.  ``use_kernel`` routes the fused
+    Pallas path (kernels/safa_aggregate)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.safa_aggregate_tree(
+            cache, trained, global_prev, picked=picked, undrafted=undrafted,
+            deprecated=deprecated, weights=weights)
+    cache1 = pre_agg_cache_update(cache, trained, global_prev, picked, deprecated)
+    new_global = aggregate(cache1, weights)
+    cache2 = post_agg_cache_update(cache1, trained, undrafted)
+    return AggregationResult(new_global, cache2)
+
+
+# ---------------------------------------------------------------------------
+# One full numeric SAFA round (jit-able), generic over a local-train fn
+# ---------------------------------------------------------------------------
+
+def safa_round(global_w, local_w, cache, *, sync_mask, completed, picked,
+               undrafted, deprecated, weights, local_train_fn, train_args=(),
+               use_kernel: bool = False):
+    """Run one SAFA round numerically.
+
+    local_train_fn(stacked_params, *train_args) -> stacked trained params
+    (it is responsible for vmapping over the clients dim).
+
+    Returns (new_global, new_local, new_cache).
+    """
+    base = distribute(global_w, local_w, sync_mask)
+    trained = local_train_fn(base, *train_args)
+    # crashed clients make no visible progress this round
+    trained = masked_select(completed, trained, base)
+    res = discriminative_aggregation(
+        cache, trained, global_w, picked=picked, undrafted=undrafted,
+        deprecated=deprecated, weights=weights, use_kernel=use_kernel)
+    # committed clients now hold their own trained model locally
+    new_local = masked_select(completed, trained, base)
+    return res.new_global, new_local, res.new_cache
+
+
+# ---------------------------------------------------------------------------
+# Baseline numeric rounds
+# ---------------------------------------------------------------------------
+
+def fedavg_round(global_w, local_w, *, selected, completed, weights,
+                 local_train_fn, train_args=()):
+    """FedAvg: selected clients sync + train; aggregate over the selected
+    clients that actually committed (renormalised weights); everyone else
+    idles.  Returns (new_global, new_local)."""
+    m = selected.shape[0]
+    base = distribute(global_w, local_w, selected)
+    trained = local_train_fn(base, *train_args)
+    ok = selected & completed
+    wsum = jnp.maximum(jnp.sum(weights * ok), 1e-12)
+    eff_w = jnp.where(ok, weights, 0.0) / wsum
+
+    def red(t, g):
+        w = eff_w.reshape((-1,) + (1,) * (t.ndim - 1)).astype(jnp.float32)
+        agg = jnp.sum(t.astype(jnp.float32) * w, axis=0)
+        any_ok = jnp.sum(ok) > 0
+        return jnp.where(any_ok, agg, g.astype(jnp.float32)).astype(g.dtype)
+
+    new_global = jax.tree.map(red, trained, global_w)
+    new_local = masked_select(ok, trained, base)
+    return new_global, new_local
+
+
+def local_only_round(local_w, *, completed, local_train_fn, train_args=()):
+    """Fully-local baseline: train, never aggregate."""
+    trained = local_train_fn(local_w, *train_args)
+    return masked_select(completed, trained, local_w)
+
+
+def fedasync_merge(global_w, trained, *, order, alphas):
+    """FedAsync (Xie et al. [9]) server: merge updates one-by-one in arrival
+    order with staleness-scaled mixing:
+
+        w <- (1 - alpha_k) w + alpha_k w'_k
+
+    trained: stacked [m, ...]; order: [m] int arrival permutation;
+    alphas: [m] effective mixing weight per client (0 for non-commits).
+    Returns the post-merge global model.
+    """
+    def merge(g, idx):
+        a = alphas[idx].astype(jnp.float32)
+        def mix(gl, tr):
+            upd = tr[idx].astype(jnp.float32)
+            return ((1.0 - a) * gl.astype(jnp.float32) + a * upd).astype(gl.dtype)
+        return jax.tree.map(mix, g, trained), None
+
+    new_global, _ = jax.lax.scan(merge, global_w, order)
+    return new_global

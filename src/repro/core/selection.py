@@ -1,0 +1,86 @@
+"""Client selection policies (server-side orchestration; numpy).
+
+CFCFM (Algorithm 1) — Compensatory First-Come-First-Merge: the server picks
+arriving updates until the quota C*m is met, giving priority to clients that
+were NOT picked in the previous round; leftover quota is filled from the
+remaining arrivals in arrival order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SelectionResult:
+    picked: np.ndarray       # [m] bool — P(t)
+    undrafted: np.ndarray    # [m] bool — Q(t): committed but not picked
+    committed: np.ndarray    # [m] bool — W(t): finished & arrived by deadline
+    quota_met_time: float    # arrival time of the quota-filling update (or deadline)
+
+
+def cfcfm(arrival: np.ndarray, completed: np.ndarray, picked_prev: np.ndarray,
+          fraction: float, deadline: float) -> SelectionResult:
+    """arrival: [m] float arrival times (inf for crashed); completed: [m]
+    bool (finished training); picked_prev: [m] bool = P(t-1)."""
+    m = arrival.shape[0]
+    quota = max(1, int(round(fraction * m)))
+    committed = completed & (arrival <= deadline)
+    picked = np.zeros(m, bool)
+
+    # Phase 1: priority clients (not picked last round), in arrival order.
+    prio = committed & ~picked_prev
+    order = np.argsort(np.where(prio, arrival, np.inf), kind='stable')
+    take = order[:quota][prio[order[:quota]]]
+    picked[take] = True
+
+    # Phase 2: fill remaining quota from the rest (picked last round).
+    short = quota - picked.sum()
+    if short > 0:
+        rest = committed & ~picked
+        order2 = np.argsort(np.where(rest, arrival, np.inf), kind='stable')
+        take2 = order2[:short][rest[order2[:short]]]
+        picked[take2] = True
+
+    undrafted = committed & ~picked
+    if short <= 0 and picked.any():
+        # quota filled by priority arrivals: round closes at the quota-th one
+        quota_met = float(np.max(arrival[picked]))
+    elif committed.any():
+        # the server waits for all live clients (crashes are detectable),
+        # then tops the quota up from the remaining arrivals
+        quota_met = float(np.max(arrival[committed]))
+    else:
+        quota_met = deadline
+    return SelectionResult(picked, undrafted, committed, min(quota_met, deadline))
+
+
+def fedavg_select(rng: np.random.Generator, m: int, fraction: float) -> np.ndarray:
+    """Random pre-training selection (FedAvg)."""
+    quota = max(1, int(round(fraction * m)))
+    sel = np.zeros(m, bool)
+    sel[rng.choice(m, size=quota, replace=False)] = True
+    return sel
+
+
+def fedcs_select(est_round_time: np.ndarray, fraction: float,
+                 deadline: float) -> np.ndarray:
+    """FedCS (Nishio & Yonetani): the server estimates each client's round
+    time and greedily admits the fastest clients that fit the deadline, up
+    to the C*m quota."""
+    m = est_round_time.shape[0]
+    quota = max(1, int(round(fraction * m)))
+    order = np.argsort(est_round_time, kind='stable')
+    sel = np.zeros(m, bool)
+    n = 0
+    for k in order:
+        if n >= quota:
+            break
+        if est_round_time[k] <= deadline:
+            sel[k] = True
+            n += 1
+    if n == 0:  # degenerate: admit the single fastest client
+        sel[order[0]] = True
+    return sel

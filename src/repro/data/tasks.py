@@ -1,0 +1,182 @@
+"""Concrete federated tasks mirroring the paper's three experiments.
+
+Task 1: regression  (Boston-like,   m=5,   linear model, MSE)
+Task 2: CNN         (MNIST-like,    m=100, 2x conv5x5 + fc, softmax)
+Task 3: SVM         (KDD-like,      m=500, linear SVM, hinge loss)
+
+Each implements ``repro.core.federation.Task``: ``local_train`` vmaps E
+epochs of mini-batch SGD (Algorithm 2's client_update) over the stacked
+clients dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core.federation import Task
+from repro.data import FederatedData
+
+
+class SupervisedTask(Task):
+    def __init__(self, data: FederatedData, *, init_fn, loss_fn, acc_fn,
+                 lr: float, epochs: int):
+        self.data = data
+        self.init_fn = init_fn
+        self.loss_fn = loss_fn          # (params, x, y) -> scalar
+        self.acc_fn = acc_fn            # (params, x, y) -> scalar
+        self.epochs = epochs
+        self.opt = optim.sgd(lr)
+        self._x = jnp.asarray(data.x)   # [m, nb, B, ...]
+        self._y = jnp.asarray(data.y)
+        self._train_jit = jax.jit(self._train_all)
+
+    def init_global(self, key):
+        return self.init_fn(key)
+
+    # -- client_update (Algorithm 2), vmapped over clients --------------------
+    def _train_one(self, params, x, y):
+        def epoch(params, _):
+            def step(p, batch):
+                bx, by = batch
+                g = jax.grad(self.loss_fn)(p, bx, by)
+                p, _ = self.opt.update(g, (), p)
+                return p, None
+            params, _ = jax.lax.scan(step, params, (x, y))
+            return params, None
+        params, _ = jax.lax.scan(epoch, params, None, length=self.epochs)
+        return params
+
+    def _train_all(self, stacked_params):
+        return jax.vmap(self._train_one)(stacked_params, self._x, self._y)
+
+    def local_train(self, stacked_params, round_idx: int):
+        del round_idx  # full-pass SGD; order fixed as in the paper
+        return self._train_jit(stacked_params)
+
+    def evaluate(self, global_params) -> dict:
+        x = jnp.asarray(self.data.test_x)
+        y = jnp.asarray(self.data.test_y)
+        return {
+            'loss': float(self.loss_fn(global_params, x, y)),
+            'acc': float(self.acc_fn(global_params, x, y)),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Task 1: regression
+# ---------------------------------------------------------------------------
+
+def _reg_init(key, d=13):
+    kw, _ = jax.random.split(key)
+    return {'w': 0.01 * jax.random.normal(kw, (d,)), 'b': jnp.zeros(())}
+
+
+def _reg_pred(p, x):
+    return x @ p['w'] + p['b']
+
+
+def _reg_loss(p, x, y):
+    return jnp.mean(jnp.square(_reg_pred(p, x) - y))
+
+
+def _reg_acc(p, x, y):
+    """Paper Table III: acc = 1 - mean(|y - yhat| / max(y, yhat))."""
+    yh = _reg_pred(p, x)
+    return 1.0 - jnp.mean(jnp.abs(y - yh) / jnp.maximum(jnp.maximum(y, yh), 1e-6))
+
+
+def regression_task(data: FederatedData, lr=1e-4, epochs=3) -> SupervisedTask:
+    d = data.x.shape[-1]
+    return SupervisedTask(data, init_fn=functools.partial(_reg_init, d=d),
+                          loss_fn=_reg_loss, acc_fn=_reg_acc, lr=lr,
+                          epochs=epochs)
+
+
+# ---------------------------------------------------------------------------
+# Task 2: CNN (2x conv 5x5 [20, 50 ch] + 2x2 maxpool + fc relu + softmax)
+# ---------------------------------------------------------------------------
+
+def _cnn_init(key, side=28, classes=10, c1=20, c2=50, hidden=128):
+    ks = jax.random.split(key, 4)
+    s = side // 4
+    def conv_w(k, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(k, shape) / jnp.sqrt(fan_in)
+    return {
+        'c1': conv_w(ks[0], (5, 5, 1, c1)), 'b1': jnp.zeros((c1,)),
+        'c2': conv_w(ks[1], (5, 5, c1, c2)), 'b2': jnp.zeros((c2,)),
+        'f1': jax.random.normal(ks[2], (s * s * c2, hidden)) / jnp.sqrt(s * s * c2),
+        'fb1': jnp.zeros((hidden,)),
+        'f2': jax.random.normal(ks[3], (hidden, classes)) / jnp.sqrt(hidden),
+        'fb2': jnp.zeros((classes,)),
+    }
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), 'VALID')
+
+
+def _cnn_logits(p, x):
+    h = jax.lax.conv_general_dilated(x, p['c1'], (1, 1), 'SAME',
+                                     dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+    h = _maxpool2(jax.nn.relu(h + p['b1']))
+    h = jax.lax.conv_general_dilated(h, p['c2'], (1, 1), 'SAME',
+                                     dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+    h = _maxpool2(jax.nn.relu(h + p['b2']))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p['f1'] + p['fb1'])
+    return h @ p['f2'] + p['fb2']
+
+
+def _cnn_loss(p, x, y):
+    logits = _cnn_logits(p, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def _cnn_acc(p, x, y):
+    return jnp.mean((jnp.argmax(_cnn_logits(p, x), -1) == y).astype(jnp.float32))
+
+
+def cnn_task(data: FederatedData, lr=1e-3, epochs=5) -> SupervisedTask:
+    side = data.x.shape[-3]
+    classes = int(data.y.max()) + 1
+    return SupervisedTask(
+        data, init_fn=functools.partial(_cnn_init, side=side, classes=classes),
+        loss_fn=_cnn_loss, acc_fn=_cnn_acc, lr=lr, epochs=epochs)
+
+
+# ---------------------------------------------------------------------------
+# Task 3: linear SVM, hinge loss, labels in {-1, +1}
+# ---------------------------------------------------------------------------
+
+def _svm_init(key, d=35):
+    return {'w': 0.01 * jax.random.normal(key, (d,)), 'b': jnp.zeros(())}
+
+
+def _svm_margin(p, x):
+    return x @ p['w'] + p['b']
+
+
+def _svm_loss(p, x, y, l2=1e-4):
+    hinge = jnp.mean(jnp.maximum(0.0, 1.0 - y * _svm_margin(p, x)))
+    return hinge + l2 * jnp.sum(jnp.square(p['w']))
+
+
+def _svm_acc(p, x, y):
+    """Paper Table III: mean(max(0, sign(y * yhat)))."""
+    return jnp.mean(jnp.maximum(0.0, jnp.sign(y * _svm_margin(p, x))))
+
+
+def svm_task(data: FederatedData, lr=1e-2, epochs=5) -> SupervisedTask:
+    d = data.x.shape[-1]
+    return SupervisedTask(data, init_fn=functools.partial(_svm_init, d=d),
+                          loss_fn=_svm_loss, acc_fn=_svm_acc, lr=lr,
+                          epochs=epochs)

@@ -1,0 +1,71 @@
+"""Client environment simulator (paper §IV-A).
+
+Reproduces the paper's experimental environment model:
+  * local data sizes  n_k ~ N(mu, 0.3 mu), mu = n/m      (data imbalance)
+  * client performance s_k ~ Exp(lambda=1) batches/sec   (heterogeneity)
+  * independent crash probability cr per client per round (unreliability)
+  * timing model Eq. 17-19: T_train = |B_k| E / s_k; up/down-link at
+    1.40 Mbps per client; server distribution at ``server_bw_mbps``.
+
+SAFA-specific realism: a crashed client keeps its partial progress
+(``pending``) and *resumes* next round — that is the paper's straggler;
+synchronous protocols discard partial progress on re-selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FLEnv:
+    m: int                      # number of clients
+    crash_prob: float           # cr
+    dataset_size: int           # n
+    batch_size: int             # B
+    epochs: int                 # E
+    t_lim: float                # round deadline (seconds)
+    model_size_mb: float = 10.0
+    client_bw_mbps: float = 1.40
+    server_bw_mbps: float = 198.0   # ~0.404 s per model copy (paper tables)
+    lambda_perf: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        mu = self.dataset_size / self.m
+        sizes = np.maximum(rng.normal(mu, 0.3 * mu, self.m), 1.0)
+        self.partition_sizes = np.round(sizes).astype(int)
+        self.n_batches = np.maximum(1, -(-self.partition_sizes // self.batch_size))
+        # performance: batches per second, Exp(lambda); floor to avoid /0
+        self.perf = np.maximum(rng.exponential(1.0 / self.lambda_perf, self.m), 1e-3)
+        self._rng = rng
+
+    # -- per-client constants ------------------------------------------------
+    @property
+    def weights(self) -> np.ndarray:
+        """Aggregation weights n_k / n (Eq. 7)."""
+        return self.partition_sizes / self.partition_sizes.sum()
+
+    @property
+    def t_updown(self) -> float:
+        """Model upload or download time per client (Eq. 17 terms)."""
+        return self.model_size_mb * 8.0 / self.client_bw_mbps
+
+    def t_dist(self, n_copies: int) -> float:
+        """Server-side distribution overhead (Eq. 19)."""
+        return n_copies * self.model_size_mb * 8.0 / self.server_bw_mbps
+
+    def full_train_time(self) -> np.ndarray:
+        """T_train per client (Eq. 18)."""
+        return self.n_batches * self.epochs / self.perf
+
+    # -- per-round draws -------------------------------------------------------
+    def draw_round(self):
+        """Returns (crashed [m] bool, crash_frac [m] in (0,1)) — crash_frac
+        is the fraction of this round's work done before the crash."""
+        crashed = self._rng.random(self.m) < self.crash_prob
+        crash_frac = self._rng.random(self.m)
+        return crashed, crash_frac

@@ -1,0 +1,80 @@
+"""Int8 symmetric per-block quantisation for model transfer compression.
+
+The paper assumes "models are usually compressed before transmission"
+(§IV-A, model_size = 10MB after compression).  We make compression a
+first-class, kernel-backed feature: client uploads / server distribution can
+be quantised to int8 with one fp32 scale per QBLOCK values (4.03 bits/value
+of overhead at QBLOCK=128... 0.25 extra bytes per 128), cutting uplink bytes
+~3.97x vs f32.  Both directions run as single-pass Pallas kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 128
+DEFAULT_TILE = 2048  # values per program instance; must be multiple of QBLOCK
+INTERPRET = jax.default_backend() != 'tpu'
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)              # [1, T]
+    xb = x.reshape(-1, QBLOCK)                      # [T/QB, QB]
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q.reshape(1, -1)
+    scale_ref[...] = scale.reshape(1, -1)
+
+
+def _dequant_kernel(q_ref, scale_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32).reshape(-1, QBLOCK)
+    scale = scale_ref[...].reshape(-1, 1)
+    x_ref[...] = (q * scale).reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def quantize(x, *, tile: int = DEFAULT_TILE):
+    """x: [N] float -> (q [N] int8, scales [N/QBLOCK] f32).  N padded
+    internally to a tile multiple."""
+    n = x.shape[0]
+    pad = (-n) % tile
+    xp = jnp.pad(x, (0, pad)).reshape(1, -1)
+    np_ = xp.shape[1]
+    grid = (np_ // tile,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, tile), lambda i: (0, i)),
+                   pl.BlockSpec((1, tile // QBLOCK), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((1, np_), jnp.int8),
+                   jax.ShapeDtypeStruct((1, np_ // QBLOCK), jnp.float32)],
+        interpret=INTERPRET,
+    )(xp)
+    n_scales = -(-n // QBLOCK)
+    return q[0, :n], s[0, :n_scales]
+
+
+@functools.partial(jax.jit, static_argnames=('tile', 'n'))
+def dequantize(q, scales, *, n: int, tile: int = DEFAULT_TILE):
+    """Inverse of ``quantize``; ``n`` = original length."""
+    pad = (-n) % tile
+    qp = jnp.pad(q, (0, pad)).reshape(1, -1)
+    np_ = qp.shape[1]
+    sp = jnp.pad(scales, (0, np_ // QBLOCK - scales.shape[0]),
+                 constant_values=1.0).reshape(1, -1)
+    grid = (np_ // tile,)
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i)),
+                  pl.BlockSpec((1, tile // QBLOCK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(qp, sp)
+    return x[0, :n]

@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels, including pytree plumbing
+so the protocol layer can call the fused aggregation on whole model trees.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.protocol import AggregationResult
+from repro.kernels.comm_quant import dequantize, quantize
+from repro.kernels.safa_aggregate import safa_aggregate
+from repro.kernels.swa_attention import swa_attention
+
+__all__ = ['safa_aggregate', 'safa_aggregate_tree', 'quantize', 'dequantize',
+           'swa_attention', 'quantize_tree', 'dequantize_tree']
+
+
+def safa_aggregate_tree(cache, trained, global_prev, *, picked, undrafted,
+                        deprecated, weights) -> AggregationResult:
+    """Apply the fused Eq. 6-8 kernel leaf-by-leaf over stacked pytrees.
+
+    cache/trained: pytrees with leading clients dim m; global_prev: pytree.
+    """
+    def one(c, t, g):
+        m = c.shape[0]
+        ng, nc = safa_aggregate(
+            c.reshape(m, -1), t.reshape(m, -1), g.reshape(-1).astype(c.dtype),
+            picked, undrafted, deprecated, weights)
+        return ng.reshape(g.shape).astype(g.dtype), nc.reshape(c.shape)
+
+    flat_c, treedef = jax.tree_util.tree_flatten(cache)
+    flat_t = jax.tree_util.tree_flatten(trained)[0]
+    flat_g = jax.tree_util.tree_flatten(global_prev)[0]
+    outs = [one(c, t, g) for c, t, g in zip(flat_c, flat_t, flat_g)]
+    new_global = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_cache = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return AggregationResult(new_global, new_cache)
+
+
+def quantize_tree(tree):
+    """Quantise every leaf (for communication-compressed uploads)."""
+    return jax.tree.map(lambda x: quantize(x.reshape(-1)), tree)
+
+
+def dequantize_tree(qtree, like):
+    flat_q, _ = jax.tree_util.tree_flatten(qtree, is_leaf=lambda x: isinstance(x, tuple))
+    flat_l, treedef = jax.tree_util.tree_flatten(like)
+    outs = [dequantize(q, s, n=l.size).reshape(l.shape).astype(l.dtype)
+            for (q, s), l in zip(flat_q, flat_l)]
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def comm_bytes(tree, quantized: bool) -> int:
+    """Bytes on the wire for one model transfer (benchmark accounting)."""
+    leaves = jax.tree.leaves(tree)
+    n = sum(l.size for l in leaves)
+    if not quantized:
+        return sum(l.size * l.dtype.itemsize for l in leaves)
+    from repro.kernels.comm_quant import QBLOCK
+    return n + 4 * sum(-(-l.size // QBLOCK) for l in leaves)

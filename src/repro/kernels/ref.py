@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the test ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+
+
+def safa_aggregate_ref(cache, trained, global_prev, picked, undrafted,
+                       deprecated, weights):
+    """Three-step discriminative aggregation on [m, N] matrices (Eq. 6-8)."""
+    picked = picked[:, None]
+    undrafted = undrafted[:, None]
+    deprecated = deprecated[:, None]
+    c1 = jnp.where(deprecated & ~picked, global_prev[None, :], cache)
+    c1 = jnp.where(picked, trained, c1)
+    new_global = jnp.sum(c1.astype(jnp.float32) * weights[:, None], axis=0)
+    c2 = jnp.where(undrafted, trained, c1)
+    return new_global.astype(cache.dtype), c2
+
+
+def quantize_ref(x, qblock=128):
+    n = x.shape[0]
+    pad = (-n) % qblock
+    xp = jnp.pad(x, (0, pad)).astype(jnp.float32).reshape(-1, qblock)
+    amax = jnp.max(jnp.abs(xp), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:n], scale[:, 0]
+
+
+def dequantize_ref(q, scales, n, qblock=128):
+    pad = (-q.shape[0]) % qblock
+    qp = jnp.pad(q, (0, pad)).astype(jnp.float32).reshape(-1, qblock)
+    return (qp * scales[:, None]).reshape(-1)[:n]
+
+
+def swa_attention_ref(q, k, v, *, window=None):
+    """Causal (+window) attention oracle — the naive O(S^2) path."""
+    return attn_mod.attention_ref(q, k, v, causal=True, window=window)

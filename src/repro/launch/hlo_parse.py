@@ -1,0 +1,159 @@
+"""Structural HLO parsing: collective bytes with while-loop trip counts.
+
+``compiled.cost_analysis()`` (and any flat text scan) counts a while-loop
+body ONCE, but our stacks are lax.scan-over-layers, so collective traffic
+inside the loop must be multiplied by the trip count.  We split the HLO
+module into computations, find ``while`` ops with their condition/body
+computations, read the trip count from the loop-bound constant in the
+condition, and accumulate collective output bytes with the correct
+multipliers (nested scans compose).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    'pred': 1, 's8': 1, 'u8': 1, 'f8e4m3fn': 1, 'f8e5m2': 1,
+    's16': 2, 'u16': 2, 'bf16': 2, 'f16': 2,
+    's32': 4, 'u32': 4, 'f32': 4,
+    's64': 8, 'u64': 8, 'f64': 8, 'c64': 8, 'c128': 16,
+}
+
+COLLECTIVES = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+               'collective-permute', 'ragged-all-to-all')
+
+# computation headers may contain nested parens in tuple-typed params
+_COMP_START = re.compile(r'^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$')
+_SHAPE_RE = re.compile(r'([a-z0-9]+)\[([0-9,]*)\]')
+_WHILE_RE = re.compile(r'\bwhile\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)')
+_CONST_RE = re.compile(r'constant\((\d+)\)')
+_COLL_RE = re.compile(
+    r'=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*(' +
+    '|'.join(COLLECTIVES) + r')\(')
+
+
+def _shape_bytes_from(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(','):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_START.match(line.strip()) if not line.startswith(' ') else None
+        if m and (line.startswith('%') or line.startswith('ENTRY')):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.startswith('}'):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    comps['__entry__'] = [entry]  # type: ignore
+    return comps
+
+
+def analyze_collectives(hlo: str) -> dict:
+    """Returns {'bytes': {kind: B}, 'counts': {kind: n}, 'total_bytes': B}
+    with while-loop trip multipliers applied (dynamic executions counted)."""
+    comps = split_computations(hlo)
+    entry = comps.pop('__entry__')[0]
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for c in _CONST_RE.findall(
+            '\n'.join(comps.get(cond_name, [])))]
+        big = [c for c in consts if c > 0]
+        return max(big) if big else 1
+
+    byt = {k: 0.0 for k in COLLECTIVES}
+    cnt = {k: 0.0 for k in COLLECTIVES}
+    adj = {k: 0.0 for k in COLLECTIVES}
+    visited_stack = []
+
+    def walk(comp_name: str, mult: float):
+        if comp_name in visited_stack:   # defensive: no recursion
+            return
+        visited_stack.append(comp_name)
+        for line in comps.get(comp_name, []):
+            mw = _WHILE_RE.search(line)
+            if mw:
+                cond, body = mw.groups()
+                walk(body, mult * trip_count(cond))
+                continue
+            mc = _COLL_RE.search(line)
+            if mc:
+                shape_txt, kind = mc.groups()
+                b = _shape_bytes_from(shape_txt)
+                byt[kind] += mult * b
+                cnt[kind] += mult
+                # CPU XLA lowers bf16 dot partial-sums as f32 collectives
+                # (convert -> f32 AR -> convert); the TPU target keeps them
+                # in bf16.  The adjusted figure halves f32 collective bytes
+                # to reflect the TPU lowering (EXPERIMENTS.md §Roofline).
+                f32b = _shape_bytes_from(' '.join(
+                    re.findall(r'f32\[[0-9,]*\]', shape_txt)))
+                adj[kind] += mult * (b - f32b / 2)
+                continue
+            # conditionals: visit both branches at same multiplier
+            mcond = re.search(r'conditional\(.*branch_computations=\{([^}]*)\}',
+                              line)
+            if mcond:
+                for b in mcond.group(1).split(','):
+                    walk(b.strip().lstrip('%'), mult)
+        visited_stack.pop()
+
+    if entry:
+        walk(entry, 1.0)
+    return {'bytes': byt, 'counts': cnt, 'total_bytes': sum(byt.values()),
+            'adjusted_bytes': adj,
+            'adjusted_total_bytes': sum(adj.values())}
+
+
+def top_collectives(hlo: str, k: int = 20):
+    """List individual collective ops sorted by (trip-mult x bytes):
+    [(kind, bytes, mult, computation, line_snippet)] — the §Perf profile."""
+    comps = split_computations(hlo)
+    entry = comps.pop('__entry__')[0]
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for c in _CONST_RE.findall(
+            '\n'.join(comps.get(cond_name, [])))]
+        big = [c for c in consts if c > 0]
+        return max(big) if big else 1
+
+    found = []
+    stack = []
+
+    def walk(comp_name: str, mult: float):
+        if comp_name in stack:
+            return
+        stack.append(comp_name)
+        for line in comps.get(comp_name, []):
+            mw = _WHILE_RE.search(line)
+            if mw:
+                cond, body = mw.groups()
+                walk(body, mult * trip_count(cond))
+                continue
+            mc = _COLL_RE.search(line)
+            if mc:
+                shape_txt, kind = mc.groups()
+                b = _shape_bytes_from(shape_txt)
+                found.append((kind, b, mult, comp_name, line[:140]))
+        stack.pop()
+
+    if entry:
+        walk(entry, 1.0)
+    found.sort(key=lambda t: -t[1] * t[2])
+    return found[:k]

@@ -1,0 +1,323 @@
+"""Jit-able step functions + sharding/spec builders for the production mesh.
+
+Silo-mode SAFA (DESIGN.md §3.2): federated clients = (pod, data) mesh
+slices.  Every state pytree carries a leading ``clients`` dim; the paper's
+server cache/bypass live distributed across the clients; Eq. 7 is a single
+weighted all-reduce over the client axis.
+
+``serve_step`` / ``prefill_step`` lower the *global* (aggregated) model for
+the inference shapes.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.core import protocol
+from repro.launch import mesh as mesh_lib
+from repro.models import common as cm
+from repro.models import decode as dec
+from repro.models.config import ModelConfig
+from repro.models.model import Model, build_model
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis trees for caches and batches
+# ---------------------------------------------------------------------------
+
+def cache_axes(cfg: ModelConfig):
+    ax = {'length': ()}
+    kv = ('layers', 'batch', 'kv_seq', 'kv_heads', 'head_dim')
+    if cfg.family in ('dense', 'moe', 'vlm', 'audio'):
+        ax['k'] = kv
+        ax['v'] = kv
+        ax['positions'] = ('kv_seq',)
+    if cfg.family == 'audio':
+        ax['xk'] = kv
+        ax['xv'] = kv
+    if cfg.family in ('ssm', 'hybrid'):
+        ax['conv'] = ('layers', 'batch', None, 'ssm_inner')
+        ax['ssm'] = ('layers', 'batch', 'ssm_heads', 'ssm_headdim', 'ssm_state')
+    if cfg.family == 'hybrid':
+        ax['k'] = kv
+        ax['v'] = kv
+        ax['positions'] = ('kv_seq',)
+    return ax
+
+
+SERVE_RULES = dict(shd.DEFAULT_RULES,
+                   kv_seq=(), kv_heads=('model',), head_dim=('model',),
+                   ssm_heads=('model',), ssm_headdim=('model',), ssm_state=())
+
+# §Perf serve profile — "split-KV" decode: shard the cache SEQUENCE dim over
+# the model axis instead of kv_heads/head_dim.  The per-token attention then
+# partial-sums tiny [B,H] softmax stats across shards instead of
+# all-gathering the KV cache per layer (nemotron decode_32k baseline moves
+# 154 GiB/step of cache all-gathers; split-KV moves 0.07 GiB — measured,
+# EXPERIMENTS.md §Perf serve iteration).
+SERVE_SPLITKV_RULES = dict(SERVE_RULES, kv_seq=('model',), kv_heads=(),
+                           head_dim=())
+
+SERVE_PROFILES = {'gqa': SERVE_RULES, 'splitkv': SERVE_SPLITKV_RULES}
+
+
+def batch_axes_train(cfg: ModelConfig):
+    ax = {'tokens': ('clients', 'local_batch', 'seq'),
+          'labels': ('clients', 'local_batch', 'seq')}
+    if cfg.family == 'vlm':
+        ax['patch_embeds'] = ('clients', None, None, None)
+    if cfg.family == 'audio':
+        ax['frame_embeds'] = ('clients', None, None, None)
+    ax['meta'] = {k: ('clients',) for k in
+                  ('sync', 'picked', 'undrafted', 'deprecated', 'completed',
+                   'weights')}
+    return ax
+
+
+def _shardings_for(axes_tree, sds_tree, mesh: Mesh, rules=None):
+    rules = rules or shd.DEFAULT_RULES
+    return jax.tree.map(
+        lambda a, s: NamedSharding(mesh, shd.spec_for(a, s.shape, mesh, rules)),
+        axes_tree, sds_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# Silo-mode federated train step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SiloSetup:
+    model: Model
+    n_clients: int
+    local_steps: int = 1
+    learning_rate: float = 1e-2
+    rules: dict = None   # sharding profile (repro.sharding.PROFILES); None=tp
+
+    def client_batch(self, shape, mesh: Mesh):
+        """ShapeDtypeStructs for one round's input batch on this mesh."""
+        cfg = self.model.cfg
+        C = self.n_clients
+        b = max(1, shape.global_batch // C)
+        S = shape.seq_len
+        sds = {
+            'tokens': jax.ShapeDtypeStruct((C, b, S), jnp.int32),
+            'labels': jax.ShapeDtypeStruct((C, b, S), jnp.int32),
+            'meta': {
+                **{k: jax.ShapeDtypeStruct((C,), jnp.bool_) for k in
+                   ('sync', 'picked', 'undrafted', 'deprecated', 'completed')},
+                'weights': jax.ShapeDtypeStruct((C,), jnp.float32),
+            },
+        }
+        if cfg.family == 'vlm':
+            sds['patch_embeds'] = jax.ShapeDtypeStruct(
+                (C, b, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == 'audio':
+            sds['frame_embeds'] = jax.ShapeDtypeStruct(
+                (C, b, cfg.enc_seq, cfg.d_model), jnp.float32)
+        return sds
+
+    def state_sds(self):
+        C = self.n_clients
+        shapes = self.model.param_shapes()
+        stack = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((C,) + s.shape, s.dtype), shapes)
+        return {'global': shapes, 'local': stack, 'cache': stack}
+
+    def state_axes(self):
+        axes = self.model.param_axes()
+        stacked = jax.tree.map(lambda a: ('clients',) + a, axes,
+                               is_leaf=_is_axes)
+        return {'global': axes, 'local': stacked, 'cache': stacked}
+
+    def shardings(self, mesh: Mesh, shape):
+        self._mesh = mesh
+        state_sh = _shardings_for(self.state_axes(), self.state_sds(), mesh,
+                                  self.rules)
+        batch_sh = _shardings_for(batch_axes_train(self.model.cfg),
+                                  self.client_batch(shape, mesh), mesh,
+                                  self.rules)
+        return state_sh, batch_sh
+
+    def _maybe_gather_weights(self, stacked):
+        """FSDP profile: explicitly all-gather each client's weights before
+        local compute (weights-stay-sharded-at-rest, gathered-for-use).
+        Without this GSPMD resolves row-sharded weights by all-reducing
+        activations instead — measured 2.5x WORSE than TP (§Perf).
+
+        MoE expert tables are NOT gathered: they keep expert-parallel
+        sharding (gathering 400B-class expert weights would move TiBs per
+        step — measured; §Perf maverick iteration)."""
+        if self.rules is not shd.FSDP_RULES or getattr(self, '_mesh', None) is None:
+            return stacked
+        mesh = self._mesh
+        axes = self.state_axes()['local']
+
+        def gather(x, ax):
+            keep = tuple(a if a == 'experts' else None for a in ax[1:])
+            spec = shd.spec_for(('clients',) + keep, x.shape, mesh,
+                                self.rules)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+
+        flat_x, treedef = jax.tree_util.tree_flatten(stacked)
+        flat_a = treedef.flatten_up_to(axes)
+        return jax.tree_util.tree_unflatten(
+            treedef, [gather(x, a) for x, a in zip(flat_x, flat_a)])
+
+    # -- the step itself -----------------------------------------------------
+    def train_step(self, state, batch):
+        """One SAFA round in silo mode: Eq.3 -> local SGD -> Eq.6/7/8."""
+        model = self.model
+        meta = batch['meta']
+        client_batch = {k: v for k, v in batch.items() if k != 'meta'}
+
+        base = protocol.distribute(state['global'], state['local'], meta['sync'])
+        base = self._maybe_gather_weights(base)
+
+        def train_one(params, cb):
+            def sgd_step(p, _):
+                loss, g = jax.value_and_grad(model.loss)(p, cb)
+                p = jax.tree.map(lambda w, gw: (w - self.learning_rate
+                                                * gw.astype(jnp.float32)).astype(w.dtype),
+                                 p, g)
+                return p, loss
+            p, losses = jax.lax.scan(sgd_step, params, None,
+                                     length=self.local_steps)
+            return p, jnp.mean(losses)
+
+        mesh = getattr(self, '_mesh', None)
+        if self.rules is shd.FSDP_RULES and mesh is not None:
+            # pin the interior layout (GSPMD propagation otherwise reverts
+            # scan/vmap interiors to its own TP solution — see §Perf)
+            ctx = shd.activation_sharding(mesh, self.rules)
+            client_axes = tuple(a for a in ('pod', 'data')
+                                if a in mesh.axis_names)
+            vmapped = jax.vmap(train_one, spmd_axis_name=client_axes)
+        else:
+            ctx = contextlib.nullcontext()
+            vmapped = jax.vmap(train_one)
+        with ctx:
+            trained, losses = vmapped(base, client_batch)
+        trained = protocol.masked_select(meta['completed'], trained, base)
+
+        agg = protocol.discriminative_aggregation(
+            state['cache'], trained, state['global'],
+            picked=meta['picked'], undrafted=meta['undrafted'],
+            deprecated=meta['deprecated'], weights=meta['weights'])
+        new_local = protocol.masked_select(meta['completed'], trained, base)
+        new_state = {'global': agg.new_global, 'local': new_local,
+                     'cache': agg.new_cache}
+        metrics = {'loss': jnp.mean(losses),
+                   'picked_frac': jnp.mean(meta['picked'].astype(jnp.float32))}
+        return new_state, metrics
+
+    def fedavg_train_step(self, state, batch):
+        """Baseline: synchronous FedAvg round on the same mesh (no cache)."""
+        model = self.model
+        meta = batch['meta']
+        client_batch = {k: v for k, v in batch.items() if k != 'meta'}
+
+        def train_one(params, cb):
+            def sgd_step(p, _):
+                loss, g = jax.value_and_grad(model.loss)(p, cb)
+                p = jax.tree.map(lambda w, gw: (w - self.learning_rate
+                                                * gw.astype(jnp.float32)).astype(w.dtype),
+                                 p, g)
+                return p, loss
+            p, losses = jax.lax.scan(sgd_step, params, None,
+                                     length=self.local_steps)
+            return p, jnp.mean(losses)
+
+        new_global, new_local = protocol.fedavg_round(
+            state['global'], state['local'], selected=meta['picked'],
+            completed=meta['completed'], weights=meta['weights'],
+            local_train_fn=lambda b: jax.vmap(train_one)(b, client_batch)[0])
+        return {'global': new_global, 'local': new_local,
+                'cache': state['cache']}, {}
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+# ---------------------------------------------------------------------------
+# Serving steps (global model)
+# ---------------------------------------------------------------------------
+
+def make_serve_setup(model: Model):
+    return ServeSetup(model)
+
+
+@dataclasses.dataclass
+class ServeSetup:
+    model: Model
+    serve_rules: dict = None   # SERVE_PROFILES entry; None = SERVE_RULES
+
+    @property
+    def _rules(self):
+        return self.serve_rules or SERVE_RULES
+
+    def param_shardings(self, mesh: Mesh):
+        return _shardings_for(self.model.param_axes(),
+                              self.model.param_shapes(), mesh)
+
+    def prefill_batch(self, shape):
+        cfg = self.model.cfg
+        B, S = shape.global_batch, shape.seq_len
+        sds = {'tokens': jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == 'vlm':
+            sds['patch_embeds'] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == 'audio':
+            sds['frame_embeds'] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+        return sds
+
+    def prefill_axes(self):
+        cfg = self.model.cfg
+        ax = {'tokens': ('batch', None)}
+        if cfg.family == 'vlm':
+            ax['patch_embeds'] = ('batch', None, None)
+        if cfg.family == 'audio':
+            ax['frame_embeds'] = ('batch', None, None)
+        return ax
+
+    def prefill_step(self, params, batch):
+        logits, _ = self.model.logits(params, batch)
+        return logits[:, -1].argmax(-1)
+
+    def decode_batch(self, shape):
+        """(cache, tokens) ShapeDtypeStructs for one decode step with a full
+        seq_len KV/SSM cache."""
+        B, S = shape.global_batch, shape.seq_len
+        cache = jax.eval_shape(
+            lambda: self.model.init_cache(B, S, length=S - 1))
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        return cache, tokens
+
+    def decode_shardings(self, mesh: Mesh, shape):
+        cache_sds, tok_sds = self.decode_batch(shape)
+        cache_sh = _shardings_for(cache_axes(self.model.cfg), cache_sds, mesh,
+                                  self._rules)
+        tok_sh = NamedSharding(mesh, shd.spec_for(('batch', None),
+                                                  tok_sds.shape, mesh,
+                                                  self._rules))
+        return cache_sh, tok_sh
+
+    def prefill_shardings(self, mesh: Mesh, shape):
+        return _shardings_for(self.prefill_axes(), self.prefill_batch(shape),
+                              mesh, self._rules)
+
+    def serve_step(self, params, cache, tokens):
+        new_cache, logits = self.model.decode_step(params, cache, tokens)
+        return new_cache, logits.argmax(-1)

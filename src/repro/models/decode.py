@@ -1,0 +1,242 @@
+"""Serving path: KV / SSM caches and single-token decode steps.
+
+``decode_step`` consumes a cache representing ``length`` already-processed
+tokens and produces logits for one new token — this is what the
+``decode_32k`` / ``long_500k`` dry-run shapes lower.
+
+Sliding-window architectures use a ring-buffer cache of ``window`` slots, so
+their decode memory is O(window), independent of context length — that is
+what qualifies them for ``long_500k``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import common as cm
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+
+def kv_cache_slots(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.window is not None:
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, length: int = 0):
+    """Zero-initialised cache pytree.  ``length`` marks how many tokens the
+    cache is considered to already hold (for dry-run decode shapes we set
+    it to seq_len)."""
+    hd = cfg.head_dim
+    c = {'length': jnp.asarray(length, jnp.int32)}
+    if cfg.family in ('dense', 'moe', 'vlm', 'audio'):
+        S = kv_cache_slots(cfg, max_len)
+        L = cfg.n_layers
+        c['k'] = jnp.zeros((L, batch, S, cfg.n_kv_heads, hd), cfg.dtype)
+        c['v'] = jnp.zeros((L, batch, S, cfg.n_kv_heads, hd), cfg.dtype)
+        c['positions'] = jnp.where(jnp.arange(S) < length,
+                                   jnp.arange(S, dtype=jnp.int32), -1)
+    if cfg.family == 'audio':
+        c['xk'] = jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                             cfg.n_kv_heads, hd), cfg.dtype)
+        c['xv'] = jnp.zeros_like(c['xk'])
+    if cfg.family in ('ssm', 'hybrid'):
+        d_inner = 2 * cfg.d_model
+        n_heads_ssm = d_inner // cfg.ssm_headdim
+        conv_ch = d_inner + 2 * cfg.ssm_state
+        L = cfg.n_layers
+        c['conv'] = jnp.zeros((L, batch, ssm_mod.CONV_K - 1, conv_ch), cfg.dtype)
+        c['ssm'] = jnp.zeros((L, batch, n_heads_ssm, cfg.ssm_headdim,
+                              cfg.ssm_state), jnp.float32)
+    if cfg.family == 'hybrid':
+        n_attn = max(0, len(tfm.hybrid_groups(cfg)) - 1)
+        S = kv_cache_slots(cfg, max_len)
+        c['k'] = jnp.zeros((n_attn, batch, S, cfg.n_kv_heads, hd), cfg.dtype)
+        c['v'] = jnp.zeros_like(c['k'])
+        c['positions'] = jnp.where(jnp.arange(S) < length,
+                                   jnp.arange(S, dtype=jnp.int32), -1)
+    return c
+
+
+def _attn_decode(layer_attn, h, kc, vc, positions, length, cfg: ModelConfig):
+    """One attention decode step against (and updating) a cache slice.
+
+    h: [B,1,D]; kc/vc: [B,S,KH,hd].  Returns (attn_out, new_kc, new_vc,
+    new_positions)."""
+    B = h.shape[0]
+    S = kc.shape[1]
+    pos = length  # position of the incoming token
+    q, k, v = tfm._project_qkv(layer_attn, h, cfg, pos[None].astype(jnp.int32))
+    slot = jax.lax.rem(pos, S)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+    positions = jax.lax.dynamic_update_slice(positions, pos[None].astype(jnp.int32), (slot,))
+    cache_pos = jnp.broadcast_to(positions[None, :], (B, S))
+    o = attn_mod.decode_attention(q, kc, vc, pos + 1, window=cfg.window,
+                                  cache_positions=cache_pos)
+    o = jnp.einsum('bse,ed->bsd', o.reshape(B, 1, -1), layer_attn['wo'])
+    return o, kc, vc, positions
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """tokens: [B, 1] -> (new_cache, logits [B, V_padded])."""
+    B = tokens.shape[0]
+    x = tfm.embed_tokens(params, tokens, cfg)
+    length = cache['length']
+    new_cache = dict(cache)
+
+    if cfg.family in ('dense', 'moe', 'vlm'):
+        positions0 = cache['positions']
+
+        def one_layer(layer, h, kc, vc):
+            xn = cm.rms_norm(h, layer['ln1'])
+            o, kc, vc, new_pos = _attn_decode(layer['attn'], xn, kc, vc,
+                                              positions0, length, cfg)
+            h = h + o
+            pre = cm.rms_norm(h, layer['ln2'])
+            if 'moe' in layer:
+                # no-drop capacity at decode time: a single-token routing
+                # group would otherwise drop tokens that competed fine in
+                # the full prefill group (train/serve capacity mismatch)
+                y, _ = moe_mod.apply_moe(
+                    layer['moe'], pre,
+                    capacity_factor=float(max(cfg.capacity_factor,
+                                              cfg.n_experts)))
+            else:
+                y = mlp_mod.apply_mlp(layer['mlp'], pre, cfg.mlp_kind)
+            return h + y, kc, vc, new_pos
+
+        layers = params['layers']
+        if isinstance(layers, dict) and 'moe' in layers and 'dense' in layers:
+            nb = cfg.n_layers // cfg.moe_every
+            kcb = cache['k'].reshape((nb, cfg.moe_every) + cache['k'].shape[1:])
+            vcb = cache['v'].reshape((nb, cfg.moe_every) + cache['v'].shape[1:])
+
+            def block_body(carry, inputs):
+                h, positions = carry
+                block, kcs, vcs = inputs
+
+                def sub(carry2, inp):
+                    h2, pos2 = carry2
+                    layer, kc1, vc1 = inp
+                    h2, kc1, vc1, np_ = one_layer(layer, h2, kc1, vc1)
+                    return (h2, np_), (kc1, vc1)
+
+                (h, positions), (kd, vd) = jax.lax.scan(
+                    sub, (h, positions), (block['dense'], kcs[:-1], vcs[:-1]))
+                h, km, vm, positions = one_layer(block['moe'], h, kcs[-1], vcs[-1])
+                nk = jnp.concatenate([kd, km[None]], axis=0)
+                nv = jnp.concatenate([vd, vm[None]], axis=0)
+                return (h, positions), (nk, nv)
+
+            (x, new_pos), (nk, nv) = jax.lax.scan(
+                block_body, (x, positions0), (layers, kcb, vcb))
+            nk = nk.reshape(cache['k'].shape)
+            nv = nv.reshape(cache['v'].shape)
+        else:
+            def body(carry, inputs):
+                h, positions = carry
+                layer, kc, vc = inputs
+                h, kc, vc, new_pos = one_layer(layer, h, kc, vc)
+                return (h, new_pos), (kc, vc)
+
+            (x, new_pos), (nk, nv) = jax.lax.scan(
+                body, (x, positions0), (layers, cache['k'], cache['v']))
+        new_cache.update(k=nk, v=nv, positions=new_pos)
+
+    elif cfg.family == 'ssm':
+        def body(h, inputs):
+            layer, conv_c, ssm_c = inputs
+            xn = cm.rms_norm(h, layer['ln1'])
+            nc, y = ssm_mod.step_mamba_block(
+                layer['mamba'], {'conv': conv_c, 'ssm': ssm_c}, xn,
+                d_state=cfg.ssm_state, headdim=cfg.ssm_headdim)
+            return h + y, (nc['conv'], nc['ssm'])
+
+        x, (nconv, nssm) = jax.lax.scan(
+            body, x, (params['layers'], cache['conv'], cache['ssm']))
+        new_cache.update(conv=nconv, ssm=nssm)
+
+    elif cfg.family == 'hybrid':
+        groups = tfm.hybrid_groups(cfg)
+        nconv, nssm = [], []
+        nk, nv = [], []
+        new_pos = cache['positions']
+        for gi, (s, e) in enumerate(groups):
+            chunk = jax.tree.map(lambda a: a[s:e], params['layers'])
+
+            def body(h, inputs):
+                layer, conv_c, ssm_c = inputs
+                xn = cm.rms_norm(h, layer['ln1'])
+                nc, y = ssm_mod.step_mamba_block(
+                    layer['mamba'], {'conv': conv_c, 'ssm': ssm_c}, xn,
+                    d_state=cfg.ssm_state, headdim=cfg.ssm_headdim)
+                return h + y, (nc['conv'], nc['ssm'])
+
+            x, (cconv, cssm) = jax.lax.scan(
+                body, x, (chunk, cache['conv'][s:e], cache['ssm'][s:e]))
+            nconv.append(cconv)
+            nssm.append(cssm)
+            if gi < len(groups) - 1:
+                layer = params['shared_attn']
+                xn = cm.rms_norm(x, layer['ln1'])
+                o, kc, vc, new_pos = _attn_decode(
+                    layer['attn'], xn, cache['k'][gi], cache['v'][gi],
+                    cache['positions'], length, cfg)
+                x = x + o
+                pre = cm.rms_norm(x, layer['ln2'])
+                x = x + mlp_mod.apply_mlp(layer['mlp'], pre, cfg.mlp_kind)
+                nk.append(kc)
+                nv.append(vc)
+        new_cache.update(conv=jnp.concatenate(nconv), ssm=jnp.concatenate(nssm))
+        if nk:
+            new_cache.update(k=jnp.stack(nk), v=jnp.stack(nv), positions=new_pos)
+
+    elif cfg.family == 'audio':
+        positions0 = cache['positions']
+
+        def body(carry, inputs):
+            h, positions = carry
+            layer, kc, vc, xk, xv = inputs
+            xn = cm.rms_norm(h, layer['ln1'])
+            o, kc, vc, new_pos = _attn_decode(layer['attn'], xn, kc, vc,
+                                              positions0, length, cfg)
+            h = h + o
+            h = h + tfm.cross_attn_block(layer['xattn'],
+                                         cm.rms_norm(h, layer['ln_x']),
+                                         (xk, xv), cfg)
+            h = h + mlp_mod.apply_mlp(layer['mlp'],
+                                      cm.rms_norm(h, layer['ln2']), 'gelu')
+            return (h, new_pos), (kc, vc)
+
+        (x, new_pos), (nk, nv) = jax.lax.scan(
+            body, (x, positions0),
+            (params['dec_layers'], cache['k'], cache['v'],
+             cache['xk'], cache['xv']))
+        new_cache.update(k=nk, v=nv, positions=new_pos)
+    else:
+        raise ValueError(cfg.family)
+
+    new_cache['length'] = length + 1
+    x = cm.rms_norm(x, params['ln_f'])
+    logits = jnp.einsum('bsd,dv->bsv', x, params['unembed'])[:, 0]
+    return new_cache, logits
+
+
+def prefill(params, cache, tokens, cfg: ModelConfig):
+    """Sequential prefill via decode steps (correct, not fast — used by tests
+    and small-scale serving examples; bulk prefill benchmarking uses
+    ``forward_logits``)."""
+    def step(c, tok):
+        c, logits = decode_step(params, c, tok[:, None], cfg)
+        return c, logits
+    cache, all_logits = jax.lax.scan(step, cache, tokens.T)
+    return cache, jnp.transpose(all_logits, (1, 0, 2))

@@ -1,0 +1,32 @@
+"""Feed-forward variants: SwiGLU (llama-style) and squared-ReLU (nemotron)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def init_mlp(key, d_model, d_ff, kind: str, dtype):
+    ks = cm.split_keys(key, 3)
+    p = {
+        'w_up': cm.param(ks[0], (d_model, d_ff), ('embed', 'mlp'), dtype),
+        'w_down': cm.param(ks[1], (d_ff, d_model), ('mlp', 'embed'), dtype),
+    }
+    if kind == 'swiglu':
+        p['w_gate'] = cm.param(ks[2], (d_model, d_ff), ('embed', 'mlp'), dtype)
+    return p
+
+
+def apply_mlp(p, x, kind: str):
+    up = jnp.einsum('...d,df->...f', x, p['w_up'])
+    if kind == 'swiglu':
+        gate = jnp.einsum('...d,df->...f', x, p['w_gate'])
+        h = jax.nn.silu(gate) * up
+    elif kind == 'relu2':
+        h = jnp.square(jax.nn.relu(up))
+    elif kind == 'gelu':
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(kind)
+    return jnp.einsum('...f,fd->...d', h, p['w_down'])

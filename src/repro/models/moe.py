@@ -1,0 +1,84 @@
+"""Top-1 routed Mixture-of-Experts (llama4-style early-fusion MoE layers).
+
+Capacity-based dispatch in the Mesh-TensorFlow style: tokens are grouped,
+each token routed to its top-1 expert, tokens beyond an expert's capacity are
+dropped (residual passes through).  Experts are sharded over the ``model``
+mesh axis (expert parallelism); under GSPMD the dispatch/combine einsums
+lower to all-to-all-style collectives.
+
+llama4 additionally has a *shared* expert applied to every token; we include
+it (``shared_expert=True``) since it's part of the cited architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import mlp as mlp_mod
+
+
+def init_moe(key, d_model, d_ff, n_experts, dtype, shared_expert=True):
+    ks = cm.split_keys(key, 5)
+    p = {
+        'router': cm.param(ks[0], (d_model, n_experts), ('embed', 'experts'),
+                           jnp.float32),
+        'w_gate': cm.param(ks[1], (n_experts, d_model, d_ff),
+                           ('experts', 'embed', 'mlp'), dtype),
+        'w_up': cm.param(ks[2], (n_experts, d_model, d_ff),
+                         ('experts', 'embed', 'mlp'), dtype),
+        'w_down': cm.param(ks[3], (n_experts, d_ff, d_model),
+                           ('experts', 'mlp', 'embed'), dtype),
+    }
+    if shared_expert:
+        p['shared'] = mlp_mod.init_mlp(ks[4], d_model, d_ff, 'swiglu', dtype)
+    return p
+
+
+def apply_moe(p, x, *, capacity_factor=1.25, group_size=None):
+    """x: [B, S, M] -> (y, aux) where aux carries router load-balance stats."""
+    B, S, M = x.shape
+    E = p['router'].shape[-1]
+    tokens = x.reshape(B * S, M)
+    N = B * S
+    if group_size is None:
+        group_size = min(N, 1024)
+    # pad N to a multiple of group_size
+    pad = (-N) % group_size
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    G = tokens.shape[0] // group_size
+    tg = tokens.reshape(G, group_size, M)
+
+    logits = jnp.einsum('gsm,me->gse', tg.astype(jnp.float32), p['router'])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jnp.max(probs, axis=-1), jnp.argmax(probs, axis=-1)  # [G,S]
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)               # [G,S,E]
+
+    C = max(1, int(capacity_factor * group_size / E))
+    # position of each token within its expert queue
+    pos = jnp.cumsum(onehot, axis=1) * onehot - 1.0                  # [G,S,E]
+    keep = (pos >= 0) & (pos < C)
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+    poh = jax.nn.one_hot(jnp.where(keep, pos, C), C, dtype=jnp.float32)  # drops -> all-zero row via index C
+    dispatch = onehot[..., None] * poh                               # [G,S,E,C]
+    # (dropped tokens already vanish: their ``poh`` row is all-zero)
+    combine = dispatch * gate[..., None, None]
+
+    xin = jnp.einsum('gsec,gsm->egcm', dispatch.astype(tg.dtype), tg)  # [E,G,C,M]
+    h_gate = jnp.einsum('egcm,emf->egcf', xin, p['w_gate'])
+    h_up = jnp.einsum('egcm,emf->egcf', xin, p['w_up'])
+    h = jax.nn.silu(h_gate) * h_up
+    xout = jnp.einsum('egcf,efm->egcm', h, p['w_down'])               # [E,G,C,M]
+    y = jnp.einsum('gsec,egcm->gsm', combine.astype(xout.dtype), xout)
+
+    y = y.reshape(-1, M)[:N].reshape(B, S, M)
+    if 'shared' in p:
+        y = y + mlp_mod.apply_mlp(p['shared'], x, 'swiglu')
+
+    # load-balance aux loss (Shazeer-style): E * sum(frac_tokens * frac_probs)
+    frac_tokens = jnp.mean(onehot, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = {'load_balance_loss': E * jnp.sum(frac_tokens * frac_probs),
+           'dropped_frac': 1.0 - jnp.sum(dispatch) / max(1, N)}
+    return y, aux

@@ -1,0 +1,360 @@
+"""Decoder stacks for all assigned families.
+
+Uniform layers are stacked ([L, ...] leading dim) and driven by
+``lax.scan`` so the lowered HLO stays small even for 96-layer configs —
+essential for CPU-hosted multi-pod dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models import attention as attn_mod
+from repro.models import common as cm
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attn_layer(key, cfg: ModelConfig):
+    hd = cfg.head_dim
+    ks = cm.split_keys(key, 6)
+    p = {
+        'wq': cm.param(ks[0], (cfg.d_model, cfg.n_heads * hd), ('embed', 'qkv'), cfg.dtype),
+        'wk': cm.param(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), ('embed', 'kv'), cfg.dtype),
+        'wv': cm.param(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), ('embed', 'kv'), cfg.dtype),
+        'wo': cm.param(ks[3], (cfg.n_heads * hd, cfg.d_model), ('qkv', 'embed'), cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p['q_norm'] = cm.param(ks[4], (hd,), (None,), jnp.float32, init=cm.zeros_init)
+        p['k_norm'] = cm.param(ks[5], (hd,), (None,), jnp.float32, init=cm.zeros_init)
+    return p
+
+
+def init_dense_layer(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = cm.split_keys(key, 4)
+    layer = {
+        'ln1': cm.param(k1, (cfg.d_model,), ('embed',), jnp.float32, init=cm.zeros_init),
+        'attn': init_attn_layer(k2, cfg),
+        'ln2': cm.param(k3, (cfg.d_model,), ('embed',), jnp.float32, init=cm.zeros_init),
+    }
+    if cfg.n_experts:
+        layer['moe'] = moe_mod.init_moe(k4, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                        cfg.dtype, cfg.moe_shared_expert)
+    else:
+        layer['mlp'] = mlp_mod.init_mlp(k4, cfg.d_model, cfg.d_ff, cfg.mlp_kind, cfg.dtype)
+    return layer
+
+
+def init_ssm_layer(key, cfg: ModelConfig):
+    k1, k2 = cm.split_keys(key, 2)
+    return {
+        'ln1': cm.param(k1, (cfg.d_model,), ('embed',), jnp.float32, init=cm.zeros_init),
+        'mamba': ssm_mod.init_mamba_block(k2, cfg.d_model, cfg.ssm_state,
+                                          cfg.ssm_headdim, cfg.dtype),
+    }
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and not isinstance(x, cm.Box) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def _stack_layers(key, n_layers, init_one):
+    """Stack per-layer inits along a leading 'layers' dim."""
+    with cm.abstract_init():
+        shapes, axes = cm.unbox(init_one(jax.random.PRNGKey(0)))
+    axes = jax.tree.map(lambda a: ('layers',) + a, axes, is_leaf=_is_axes)
+    if cm.is_abstract_init():
+        values = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_layers,) + s.shape, s.dtype), shapes)
+    else:
+        keys = jax.random.split(key, n_layers)
+        values = jax.vmap(lambda k: cm.unbox(init_one(k))[0])(keys)
+    return jax.tree.map(lambda v, a: cm.Box(v, a), values, axes, is_leaf=None)
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns a boxed param tree for the whole model."""
+    ks = cm.split_keys(key, 8)
+    p = {
+        'embed': cm.param(ks[0], (cfg.padded_vocab, cfg.d_model),
+                          ('vocab', 'embed'), cfg.dtype, init=cm.embed_init),
+        'ln_f': cm.param(ks[1], (cfg.d_model,), ('embed',), jnp.float32,
+                         init=cm.zeros_init),
+        'unembed': cm.param(ks[2], (cfg.d_model, cfg.padded_vocab),
+                            ('embed', 'vocab'), cfg.dtype),
+    }
+    if cfg.family in ('dense', 'moe', 'vlm'):
+        if cfg.n_experts and cfg.moe_every > 1:
+            # interleaved dense/MoE blocks (llama4-maverick style): scan over
+            # super-blocks of (moe_every - 1) dense layers + 1 MoE layer.
+            import dataclasses as _dc
+            dense_cfg = _dc.replace(cfg, n_experts=0)
+            assert cfg.n_layers % cfg.moe_every == 0
+
+            def init_block(k):
+                kd, km = cm.split_keys(k, 2)
+                return {
+                    'dense': _stack_layers(kd, cfg.moe_every - 1,
+                                           functools.partial(init_dense_layer,
+                                                             cfg=dense_cfg)),
+                    'moe': init_dense_layer(km, cfg),
+                }
+            p['layers'] = _stack_layers(ks[3], cfg.n_layers // cfg.moe_every,
+                                        init_block)
+        else:
+            p['layers'] = _stack_layers(ks[3], cfg.n_layers,
+                                        functools.partial(init_dense_layer, cfg=cfg))
+    elif cfg.family == 'ssm':
+        p['layers'] = _stack_layers(ks[3], cfg.n_layers,
+                                    functools.partial(init_ssm_layer, cfg=cfg))
+    elif cfg.family == 'hybrid':
+        p['layers'] = _stack_layers(ks[3], cfg.n_layers,
+                                    functools.partial(init_ssm_layer, cfg=cfg))
+        p['shared_attn'] = init_dense_layer(ks[4], cfg)  # one shared block
+    elif cfg.family == 'audio':
+        p['enc_layers'] = _stack_layers(ks[3], cfg.enc_layers,
+                                        functools.partial(init_dense_layer, cfg=cfg))
+        p['dec_layers'] = _stack_layers(ks[4], cfg.n_layers,
+                                        functools.partial(init_dec_layer, cfg=cfg))
+        p['enc_ln_f'] = cm.param(ks[5], (cfg.d_model,), ('embed',), jnp.float32,
+                                 init=cm.zeros_init)
+        p['enc_pos'] = cm.param(ks[6], (cfg.enc_seq, cfg.d_model),
+                                (None, 'embed'), cfg.dtype, init=cm.embed_init)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == 'vlm':
+        # projector from the (stubbed) vision encoder into the LLM embedding
+        p['patch_proj'] = cm.param(ks[7], (cfg.d_model, cfg.d_model),
+                                   ('embed', 'embed_out'), cfg.dtype)
+    return p
+
+
+def init_dec_layer(key, cfg: ModelConfig):
+    """Encoder-decoder (whisper) decoder layer: self-attn + cross-attn + mlp."""
+    ks = cm.split_keys(key, 6)
+    return {
+        'ln1': cm.param(ks[0], (cfg.d_model,), ('embed',), jnp.float32, init=cm.zeros_init),
+        'attn': init_attn_layer(ks[1], cfg),
+        'ln_x': cm.param(ks[2], (cfg.d_model,), ('embed',), jnp.float32, init=cm.zeros_init),
+        'xattn': init_attn_layer(ks[3], cfg),
+        'ln2': cm.param(ks[4], (cfg.d_model,), ('embed',), jnp.float32, init=cm.zeros_init),
+        'mlp': mlp_mod.init_mlp(ks[5], cfg.d_model, cfg.d_ff, 'gelu', cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward primitives
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, rope=True):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = jnp.einsum('bsd,de->bse', x, p['wq']).reshape(B, S, cfg.n_heads, hd)
+    k = jnp.einsum('bsd,de->bse', x, p['wk']).reshape(B, S, cfg.n_kv_heads, hd)
+    v = jnp.einsum('bsd,de->bse', x, p['wv']).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, p['q_norm'])
+        k = cm.rms_norm(k, p['k_norm'])
+    if rope:
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(p, x, cfg: ModelConfig, *, causal=True, positions=None,
+               window=None):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions, rope=causal)
+    if cfg.attn_impl == 'pallas' and causal:
+        from repro.kernels.swa_attention import swa_attention
+        o = swa_attention(q, k, v, window=window,
+                          block_q=cfg.q_block, block_k=cfg.kv_block)
+    else:
+        o = attn_mod.flash_attention(q, k, v, causal=causal, window=window,
+                                     q_positions=positions, k_positions=positions,
+                                     q_block=cfg.q_block, kv_block=cfg.kv_block)
+    return jnp.einsum('bse,ed->bsd', o.reshape(B, S, -1), p['wo'])
+
+
+def cross_attn_block(p, x, enc_kv, cfg: ModelConfig):
+    """x: [B,S,D]; enc_kv: (k, v) each [B,Senc,KH,hd] (already projected)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = jnp.einsum('bsd,de->bse', x, p['wq']).reshape(B, S, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, p['q_norm'])
+    k, v = enc_kv
+    o = attn_mod.flash_attention(q, k, v, causal=False,
+                                 q_block=cfg.q_block, kv_block=cfg.kv_block)
+    return jnp.einsum('bse,ed->bsd', o.reshape(B, S, -1), p['wo'])
+
+
+def project_enc_kv(p, enc_out, cfg: ModelConfig):
+    B, Se, _ = enc_out.shape
+    hd = cfg.head_dim
+    k = jnp.einsum('bsd,de->bse', enc_out, p['wk']).reshape(B, Se, cfg.n_kv_heads, hd)
+    v = jnp.einsum('bsd,de->bse', enc_out, p['wv']).reshape(B, Se, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = cm.rms_norm(k, p['k_norm'])
+    return k, v
+
+
+def dense_layer_fwd(layer, x, cfg: ModelConfig, *, causal=True, positions=None):
+    x = shd.constrain_act(x, 'local_batch', 'seq', None)
+    h = x + attn_block(layer['attn'], cm.rms_norm(x, layer['ln1']), cfg,
+                       causal=causal, positions=positions, window=cfg.window)
+    pre = cm.rms_norm(h, layer['ln2'])
+    if 'moe' in layer:
+        y, aux = moe_mod.apply_moe(layer['moe'], pre,
+                                   capacity_factor=cfg.capacity_factor)
+    else:
+        y, aux = mlp_mod.apply_mlp(layer['mlp'], pre, cfg.mlp_kind), {}
+    return h + y, aux
+
+
+def ssm_layer_fwd(layer, x, cfg: ModelConfig):
+    x = shd.constrain_act(x, 'local_batch', 'seq', None)
+    return x + ssm_mod.apply_mamba_block(
+        layer['mamba'], cm.rms_norm(x, layer['ln1']),
+        d_state=cfg.ssm_state, headdim=cfg.ssm_headdim, chunk=cfg.ssm_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over layers)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def run_dense_stack(stacked, x, cfg: ModelConfig, *, causal=True, positions=None):
+    if isinstance(stacked, dict) and 'moe' in stacked and 'dense' in stacked:
+        # interleaved super-blocks (moe_every > 1)
+        def block_body(h, block):
+            def sub(h2, layer):
+                out, _ = dense_layer_fwd(layer, h2, cfg, causal=causal,
+                                         positions=positions)
+                return out, None
+            h, _ = jax.lax.scan(sub, h, block['dense'])
+            h, aux = dense_layer_fwd(block['moe'], h, cfg, causal=causal,
+                                     positions=positions)
+            return h, aux.get('load_balance_loss', jnp.zeros((), jnp.float32))
+        h, lbs = jax.lax.scan(_maybe_remat(block_body, cfg), x, stacked)
+        return h, jnp.sum(lbs)
+
+    def body(h, layer):
+        out, aux = dense_layer_fwd(layer, h, cfg, causal=causal, positions=positions)
+        lb = aux.get('load_balance_loss', jnp.zeros((), jnp.float32))
+        return out, lb
+    h, lbs = jax.lax.scan(_maybe_remat(body, cfg), x, stacked)
+    return h, jnp.sum(lbs)
+
+
+def run_ssm_stack(stacked, x, cfg: ModelConfig):
+    def body(h, layer):
+        return ssm_layer_fwd(layer, h, cfg), None
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), x, stacked)
+    return h
+
+
+def hybrid_groups(cfg: ModelConfig):
+    """Split cfg.n_layers ssm layers into groups; a shared attention block
+    runs between consecutive groups (zamba2-style)."""
+    k = cfg.attn_every
+    bounds, start = [], 0
+    while start < cfg.n_layers:
+        end = min(start + k, cfg.n_layers)
+        bounds.append((start, end))
+        start = end
+    return bounds  # attention after every group except the last
+
+
+def run_hybrid_stack(params, x, cfg: ModelConfig, *, positions=None):
+    groups = hybrid_groups(cfg)
+    for gi, (s, e) in enumerate(groups):
+        chunk = jax.tree.map(lambda a: a[s:e], params['layers'])
+        x = run_ssm_stack(chunk, x, cfg)
+        if gi < len(groups) - 1:
+            x, _ = dense_layer_fwd(params['shared_attn'], x, cfg,
+                                   causal=True, positions=positions)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Model-level forward (training / prefill logits)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    return jnp.take(params['embed'], tokens, axis=0)
+
+
+def forward_logits(params, batch, cfg: ModelConfig):
+    """batch: dict with 'tokens' [B,S]; vlm adds 'patch_embeds'
+    [B,n_patches,D]; audio adds 'frame_embeds' [B,enc_seq,D].
+    Returns (logits [B,S,V_padded], aux)."""
+    tokens = batch['tokens']
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    aux = {}
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    if cfg.family == 'vlm':
+        patches = jnp.einsum('bpd,de->bpe', batch['patch_embeds'].astype(cfg.dtype),
+                             params['patch_proj'])
+        x = jnp.concatenate([patches, x], axis=1)  # early fusion: prepend
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    if cfg.family in ('dense', 'moe', 'vlm'):
+        x, lb = run_dense_stack(params['layers'], x, cfg, positions=positions)
+        aux['load_balance_loss'] = lb
+    elif cfg.family == 'ssm':
+        x = run_ssm_stack(params['layers'], x, cfg)
+    elif cfg.family == 'hybrid':
+        x = run_hybrid_stack(params, x, cfg, positions=positions)
+    elif cfg.family == 'audio':
+        frames = batch['frame_embeds'].astype(cfg.dtype) + params['enc_pos'][None]
+        enc, _ = run_dense_stack(params['enc_layers'], frames, cfg, causal=False)
+        enc = cm.rms_norm(enc, params['enc_ln_f'])
+
+        def body(h, layer):
+            h1 = h + attn_block(layer['attn'], cm.rms_norm(h, layer['ln1']),
+                                cfg, causal=True, positions=positions)
+            kv = project_enc_kv(layer['xattn'], enc, cfg)
+            h2 = h1 + cross_attn_block(layer['xattn'],
+                                       cm.rms_norm(h1, layer['ln_x']), kv, cfg)
+            h3 = h2 + mlp_mod.apply_mlp(layer['mlp'],
+                                        cm.rms_norm(h2, layer['ln2']), 'gelu')
+            return h3, None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params['dec_layers'])
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == 'vlm':
+        x = x[:, -S:]  # logits for the text positions only
+    # gradient dtype barrier: keep f32 cotangents confined to the loss head
+    x = cm.grad_cast(x, cfg.dtype)
+    x = cm.rms_norm(x, params['ln_f'])
+    logits = jnp.einsum('bsd,dv->bsv', x, params['unembed'])
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = forward_logits(params, batch, cfg)
+    loss = cm.cross_entropy_loss(logits, batch['labels'], cfg.vocab_size,
+                                 batch.get('loss_mask'))
+    if 'load_balance_loss' in aux:
+        loss = loss + 0.01 * aux['load_balance_loss']
+    return loss

@@ -1,0 +1,71 @@
+"""Optimizers as pure pytree transforms (no optax in this environment).
+
+Clients in the paper use plain mini-batch SGD (Algorithm 2); AdamW is
+provided for the LLM-scale silo-mode examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (new_params, new_state)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+            return new, ()
+        vel = jax.tree.map(lambda v, g: momentum * v + g, state, grads)
+        new = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype), params, vel)
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            'mu': jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            'nu': jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            'count': jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state['count'] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state['mu'], grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state['nu'], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def step(p, m, n):
+            upd = (m / c1) / (jnp.sqrt(n / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new = jax.tree.map(step, params, mu, nu)
+        return new, {'mu': mu, 'nu': nu, 'count': count}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

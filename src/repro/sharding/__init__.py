@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Parameters and activations carry *logical* axis names; rules map them to
+physical mesh axes.  Helpers gracefully drop axes that are absent from the
+mesh or that don't divide the dimension, so one rule set serves the 1-device
+CPU test mesh, the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# logical axis -> preferred mesh axes (first that fits wins, in order)
+DEFAULT_RULES = {
+    'clients': ('pod', 'data'),     # FL silo mode: client dim over pod+data
+    'batch': ('pod', 'data'),       # serving / plain training
+    'local_batch': (),              # per-client batch: unsharded
+    'vocab': ('model',),
+    'mlp': ('model',),
+    'qkv': ('model',),
+    'kv': ('model',),
+    'experts': ('model',),
+    'ssm_inner': ('model',),
+    'heads': ('model',),
+    'embed': (),
+    'embed_out': (),
+    'layers': (),
+    'seq': (),
+}
+
+# Beyond-paper §Perf profile: FSDP-style weight sharding on the model axis.
+# Weights shard on their d_model (row) dim and are all-gathered per layer;
+# activations stay local to each client slice, eliminating the per-layer
+# tensor-parallel activation all-reduces that dominate small-model FL
+# training (EXPERIMENTS.md §Perf).  Experts keep expert-parallel sharding.
+FSDP_RULES = {
+    'clients': ('pod', 'data'),
+    'batch': ('pod', 'data'),
+    'vocab': ('model',),            # embed/unembed stay vocab-sharded
+    'mlp': (),
+    'qkv': (),
+    'kv': (),
+    'experts': ('model',),
+    'ssm_inner': (),
+    'heads': (),
+    'embed': ('model',),            # shard the d_model row dim instead
+    'embed_out': (),
+    'layers': (),
+    'seq': (),
+    'local_batch': ('model',),      # ZeRO-3 style: per-client batch is
+                                    # data-parallel across the client's
+                                    # model-axis slice; weights gathered
+}
+
+# Multi-pod variant: clients on `data` only (C=16), so each client spans
+# pod x model = 32 chips; per-client batch (16) stays divisible by the
+# model axis and the seq dim shards over `pod` (sequence parallelism
+# between pods inside a client).  With clients over (pod, data) the
+# per-client batch (256/32 = 8) does not divide the 16-way model axis and
+# ZeRO-3 degenerates (measured — EXPERIMENTS.md §Perf multi-pod note).
+FSDP_MULTIPOD_RULES = dict(FSDP_RULES, clients=('data',), seq=('pod',))
+
+PROFILES = {'tp': DEFAULT_RULES, 'fsdp': FSDP_RULES,
+            'fsdp_mp': FSDP_MULTIPOD_RULES}
+
+
+def _axes_in_mesh(mesh: Mesh, names):
+    return tuple(n for n in names if n in mesh.axis_names)
+
+
+def spec_for(logical_axes, shape, mesh: Mesh, rules=None) -> P:
+    """Build a PartitionSpec for one array given its logical axes + shape."""
+    rules = rules or DEFAULT_RULES
+    used = set()
+    entries = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None or name not in rules:
+            entries.append(None)
+            continue
+        cand = _axes_in_mesh(mesh, rules[name])
+        cand = tuple(a for a in cand if a not in used)
+        # shrink until the product of axis sizes divides the dim
+        while cand and dim % int(np.prod([mesh.shape[a] for a in cand])):
+            cand = cand[:-1]
+        if not cand:
+            entries.append(None)
+        elif len(cand) == 1:
+            entries.append(cand[0])
+            used.add(cand[0])
+        else:
+            entries.append(cand)
+            used.update(cand)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_specs(axes_tree, shapes_tree, mesh: Mesh, rules=None):
+    """Map (logical-axes tree, ShapeDtypeStruct tree) -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda a, s: spec_for(a, s.shape, mesh, rules), axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh, rules=None):
+    specs = tree_specs(axes_tree, shapes_tree, mesh, rules)
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Optional[Mesh], *logical_axes, rules=None):
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(logical_axes, x.shape, mesh, rules)))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding context (§Perf): GSPMD's propagation freely re-shards
+# scan/vmap interiors, overriding boundary in_shardings — the only reliable
+# way to impose a parallelism layout (e.g. ZeRO-3 batch sharding instead of
+# tensor parallelism) is to pin activations INSIDE the layer loop.  Model
+# code calls ``constrain_act`` on the residual stream; by default it is a
+# no-op, and step builders activate it with a (mesh, rules) context at
+# trace time.
+# ---------------------------------------------------------------------------
+
+_ACT_CTX = None  # (mesh, rules) or None
+
+
+class activation_sharding:
+    def __init__(self, mesh, rules):
+        self.ctx = (mesh, rules)
+
+    def __enter__(self):
+        global _ACT_CTX
+        self._prev = _ACT_CTX
+        _ACT_CTX = self.ctx
+
+    def __exit__(self, *exc):
+        global _ACT_CTX
+        _ACT_CTX = self._prev
+
+
+def constrain_act(x, *logical_axes):
+    if _ACT_CTX is None:
+        return x
+    mesh, rules = _ACT_CTX
+    spec = spec_for(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, spec)

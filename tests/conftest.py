@@ -1,0 +1,6 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here.  Smoke tests
+# and benches must see the real 1-device CPU platform; only the dry-run
+# entrypoint (repro.launch.dryrun) creates 512 placeholder devices.
+import jax
+
+jax.config.update('jax_enable_x64', False)

@@ -1,0 +1,64 @@
+"""Monte-Carlo validation of the bias analysis (paper §III-E, Appendix A).
+
+Simulates CFCFM selection with a fastest client A and slowest client B and
+checks the steady-state pick probabilities against the recurrence solution
+(the corrected sigma — see repro.core.bias.sigma docstring).
+"""
+import numpy as np
+import pytest
+
+from repro.core import bias, selection
+
+
+def simulate(m=30, cr=0.3, C=0.1, rounds=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    picked_prev = np.zeros(m, bool)
+    picked_A, picked_B, undrafted_B = [], [], []
+    for _ in range(rounds):
+        crashed = rng.random(m) < cr
+        # A = client 0 is always fastest; B = client m-1 always slowest
+        arrival = rng.uniform(10, 20, m)
+        arrival[0] = 1.0
+        arrival[-1] = 100.0
+        arrival = np.where(~crashed, arrival, np.inf)
+        sel = selection.cfcfm(arrival, ~crashed, picked_prev, C, 1e9)
+        picked_A.append(bool(sel.picked[0]))
+        picked_B.append(bool(sel.picked[-1]))
+        undrafted_B.append(bool(sel.undrafted[-1]))
+        picked_prev = sel.picked
+    half = rounds // 2  # steady state
+    return (np.mean(picked_A[half:]), np.mean(picked_B[half:]),
+            np.mean(undrafted_B[half:]))
+
+
+class TestBiasMonteCarlo:
+    def test_case1_everyone_picked(self):
+        """C >= 1-R: every committed update is aggregated; P = 1-cr."""
+        cr = 0.3
+        pA, pB, _ = simulate(cr=cr, C=1.0, rounds=2000)
+        assert pA == pytest.approx(1 - cr, abs=0.04)
+        assert pB == pytest.approx(1 - cr, abs=0.04)
+
+    def test_case3_fast_client_alternation(self):
+        """C < (1-C)(1-R): A is picked iff it missed the previous round;
+        steady state P_D(A) = (1-cr)/(2-cr) = (1-cr) sigma^(inf)."""
+        cr = 0.3
+        pA, pB, uB = simulate(cr=cr, C=0.1, rounds=4000)
+        expect = (1 - cr) / (2 - cr)
+        assert pA == pytest.approx(expect, abs=0.03)
+        # B never reaches the quota directly but commits via the bypass
+        assert pB == pytest.approx(0.0, abs=0.01)
+        assert uB == pytest.approx(1 - cr, abs=0.04)
+
+    def test_sigma_limit_matches_fixed_point(self):
+        cr = 0.3
+        assert bias.sigma(cr, 500) == pytest.approx(1 / (2 - cr), rel=1e-9)
+        # P_D(inf) = (1-cr) * sigma(inf)
+        assert (1 - cr) * bias.sigma(cr, 500) == pytest.approx(
+            (1 - cr) / (2 - cr), rel=1e-9)
+
+    def test_compensation_reduces_bias_case2_paper_faithful(self):
+        """Fig. 5 (paper-faithful formulas): case-2 bias below FedAvg's."""
+        b_fed = bias.bias_fedavg(0.3, 0.3)
+        b_safa = bias.bias_safa(0.3, 0.3, C=0.5, R=0.3, r=20, faithful=True)
+        assert b_safa < b_fed

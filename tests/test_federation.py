@@ -1,0 +1,186 @@
+"""End-to-end federation runs + bias theory + timing model."""
+import numpy as np
+import pytest
+
+from repro.core import bias, federation
+from repro.data import make_regression, make_svm, partition
+from repro.data.tasks import regression_task, svm_task
+from repro.fedsim import FLEnv
+
+
+@pytest.fixture(scope='module')
+def reg_setup():
+    env = FLEnv(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
+                epochs=3, t_lim=830.0, seed=3)
+    x, y = make_regression()
+    data = partition(x, y, env.partition_sizes, 5, seed=1)
+    task = regression_task(data, lr=1e-3, epochs=3)
+    return env, task
+
+
+class TestProtocolRuns:
+    def test_safa_converges(self, reg_setup):
+        env, task = reg_setup
+        h = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
+                                rounds=40, eval_every=10)
+        evals = [e['loss'] for _, e in h.evals()]
+        assert evals[-1] < evals[0] * 0.5
+        assert 0 <= h.futility <= 1
+        assert all(r.round_len <= env.t_lim for r in h.records)
+
+    def test_all_protocols_run_timing_only(self, reg_setup):
+        env, _ = reg_setup
+        for name, fn in federation.PROTOCOLS.items():
+            kw = dict(fraction=0.3, rounds=20, numeric=False)
+            if name == 'safa':
+                kw['lag_tolerance'] = 5
+            h = fn(None, env, **kw)
+            assert len(h.records) == 20, name
+            assert h.mean('round_len') > 0
+
+    def test_safa_round_shorter_than_fedavg(self):
+        """Paper's headline: SAFA shortens rounds, esp. at small C."""
+        env = FLEnv(m=100, crash_prob=0.3, dataset_size=70000, batch_size=40,
+                    epochs=5, t_lim=5600.0, seed=0)
+        hs = federation.run_safa(None, env, fraction=0.1, lag_tolerance=5,
+                                 rounds=30, numeric=False)
+        hf = federation.run_fedavg(None, env, fraction=0.1, rounds=30,
+                                   numeric=False)
+        assert hs.mean('round_len') < 0.5 * hf.mean('round_len')
+
+    def test_eur_improves_over_fedavg(self):
+        env = FLEnv(m=100, crash_prob=0.3, dataset_size=70000, batch_size=40,
+                    epochs=5, t_lim=5600.0, seed=1)
+        hs = federation.run_safa(None, env, fraction=0.3, lag_tolerance=5,
+                                 rounds=30, numeric=False)
+        hf = federation.run_fedavg(None, env, fraction=0.3, rounds=30,
+                                   numeric=False)
+        assert hs.mean('eur') > hf.mean('eur')
+
+    def test_sr_decreases_with_lag_tolerance(self):
+        """Fig. 3(b): larger tau => fewer forced synchronisations."""
+        env_kw = dict(m=100, crash_prob=0.5, dataset_size=70000,
+                      batch_size=40, epochs=5, t_lim=5600.0)
+        srs = []
+        for tau in (1, 5, 10):
+            env = FLEnv(seed=2, **env_kw)
+            h = federation.run_safa(None, env, fraction=0.3,
+                                    lag_tolerance=tau, rounds=40,
+                                    numeric=False)
+            srs.append(h.mean('sr'))
+        assert srs[0] >= srs[1] >= srs[2]
+
+    def test_vv_increases_with_lag_tolerance(self):
+        """Fig. 4(b): larger tau => higher version variance."""
+        env_kw = dict(m=100, crash_prob=0.5, dataset_size=70000,
+                      batch_size=40, epochs=5, t_lim=5600.0)
+        vvs = []
+        for tau in (1, 10):
+            env = FLEnv(seed=2, **env_kw)
+            h = federation.run_safa(None, env, fraction=0.3,
+                                    lag_tolerance=tau, rounds=40,
+                                    numeric=False)
+            vvs.append(h.mean('vv'))
+        assert vvs[1] > vvs[0]
+
+    def test_futility_smaller_than_fedavg(self):
+        """SAFA preserves straggler progress (Tables XI/XIII/XV)."""
+        env_kw = dict(m=100, crash_prob=0.5, dataset_size=70000,
+                      batch_size=40, epochs=5, t_lim=5600.0, seed=4)
+        hs = federation.run_safa(None, FLEnv(**env_kw), fraction=0.3,
+                                 lag_tolerance=5, rounds=40, numeric=False)
+        hf = federation.run_fedavg(None, FLEnv(**env_kw), fraction=0.3,
+                                   rounds=40, numeric=False)
+        assert hs.futility < hf.futility
+
+
+class TestBiasTheory:
+    @pytest.mark.parametrize('cr', [0.1, 0.3, 0.7])
+    def test_sigma_closed_form_matches_recurrence(self, cr):
+        """Eq. 15 closed form == unrolled case-3 recurrence of Eq. 22:
+        P_D^(r) = (1-cr)(1 - P_D^(r-1)), sigma^(k) = 1 - P_D^(k)."""
+        pd = 1 - cr  # P_D^(1)
+        for k in range(1, 12):
+            assert bias.sigma(cr, k) == pytest.approx(1 - pd, rel=1e-9)
+            pd = (1 - cr) * (1 - pd)  # P_D^(k+1)
+
+    def test_case_selection(self):
+        assert bias.case_of(0.8, 0.5) == 1   # C >= 1-R
+        assert bias.case_of(0.5, 0.3) == 2
+        assert bias.case_of(0.1, 0.3) == 3   # C < (1-C)(1-R)
+
+    def test_fedavg_bias_constant(self):
+        assert bias.bias_fedavg(0.3, 0.3) == pytest.approx(1.0)
+        assert bias.bias_fedavg(0.1, 0.5) == pytest.approx(0.9 / 0.5)
+
+    def test_safa_bias_case1_equals_fedavg(self):
+        for r in range(2, 10):
+            assert bias.bias_safa(0.3, 0.3, C=0.9, R=0.5, r=r) == \
+                pytest.approx(bias.bias_fedavg(0.3, 0.3))
+
+    def test_bias_converges(self):
+        """Fig. 5: bias converges after a few rounds in all cases."""
+        for C, R in [(0.9, 0.5), (0.5, 0.3), (0.05, 0.3)]:
+            curve = bias.bias_curve(0.3, 0.3, C, R, 40)
+            assert np.all(np.isfinite(curve))
+            assert abs(curve[-1] - curve[-2]) < 1e-6
+
+
+class TestTimingModel:
+    def test_eq18_train_time(self):
+        env = FLEnv(m=10, crash_prob=0.0, dataset_size=1000, batch_size=10,
+                    epochs=3, t_lim=100.0, seed=0)
+        tt = env.full_train_time()
+        expect = env.n_batches * env.epochs / env.perf
+        np.testing.assert_allclose(tt, expect)
+
+    def test_eq19_t_dist_linear_in_copies(self):
+        env = FLEnv(m=10, crash_prob=0.0, dataset_size=1000, batch_size=10,
+                    epochs=1, t_lim=100.0)
+        assert env.t_dist(10) == pytest.approx(10 * env.t_dist(1))
+
+    def test_partition_imbalance(self):
+        env = FLEnv(m=200, crash_prob=0.0, dataset_size=20000, batch_size=10,
+                    epochs=1, t_lim=100.0, seed=1)
+        sizes = env.partition_sizes
+        mu = 20000 / 200
+        assert abs(sizes.mean() - mu) < 0.15 * mu
+        assert 0.15 * mu < sizes.std() < 0.5 * mu  # ~N(mu, 0.3mu)
+
+
+class TestQuantizedUplink:
+    def test_safa_with_int8_uploads_converges(self, reg_setup):
+        """Beyond-paper: int8-compressed client uploads barely change the
+        global model trajectory (comm_quant kernel in the loop)."""
+        env, task = reg_setup
+        h_q = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
+                                  rounds=25, eval_every=25,
+                                  quantize_uploads=True)
+        h_f = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
+                                  rounds=25, eval_every=25)
+        assert h_q.best_eval['loss'] < h_f.best_eval['loss'] * 1.5 + 1.0
+
+
+class TestFedAsync:
+    def test_fedasync_converges_with_higher_comm(self, reg_setup):
+        """FedAsync (related-work baseline): converges, but every client
+        syncs every round (SR=1) and the server does ~m merges per round —
+        the communication pressure SAFA's semi-async design avoids."""
+        env, task = reg_setup
+        ha = federation.run_fedasync(task, env, rounds=40, eval_every=20)
+        hs = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
+                                 rounds=40, eval_every=20)
+        assert ha.best_eval['loss'] < 5.0
+        assert ha.mean('sr') == 1.0
+        assert hs.mean('sr') < 1.0  # SAFA syncs only up-to-date + deprecated
+
+    def test_staleness_scaling(self):
+        import jax.numpy as jnp
+        from repro.core import protocol
+        g = {'w': jnp.zeros(3)}
+        trained = {'w': jnp.stack([jnp.ones(3), 2 * jnp.ones(3)])}
+        out = protocol.fedasync_merge(
+            g, trained, order=jnp.array([0, 1]),
+            alphas=jnp.array([0.5, 0.5]))
+        # w = 0.5*1 after first merge; 0.5*0.5 + 0.5*2 = 1.25 after second
+        np.testing.assert_allclose(np.asarray(out['w']), 1.25 * np.ones(3))

@@ -1,0 +1,112 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.comm_quant import dequantize, quantize
+from repro.kernels.safa_aggregate import safa_aggregate
+from repro.kernels.swa_attention import swa_attention
+
+
+class TestSafaAggregateKernel:
+    @pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize('m,n,tile', [(3, 100, 64), (16, 4096, 1024),
+                                          (5, 1, 128), (32, 777, 256)])
+    def test_sweep(self, m, n, tile, dtype):
+        key = jax.random.PRNGKey(m * n)
+        ks = jax.random.split(key, 7)
+        cache = jax.random.normal(ks[0], (m, n)).astype(dtype)
+        trained = jax.random.normal(ks[1], (m, n)).astype(dtype)
+        g = jax.random.normal(ks[2], (n,)).astype(dtype)
+        picked = jax.random.bernoulli(ks[3], 0.4, (m,))
+        undrafted = jax.random.bernoulli(ks[4], 0.4, (m,)) & ~picked
+        dep = jax.random.bernoulli(ks[5], 0.3, (m,))
+        w = jax.nn.softmax(jax.random.normal(ks[6], (m,)))
+        ng, nc = safa_aggregate(cache, trained, g, picked, undrafted, dep, w,
+                                tile=tile)
+        rg, rc = ref.safa_aggregate_ref(cache, trained, g, picked, undrafted,
+                                        dep, w)
+        atol = 1e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(ng, np.float32),
+                                   np.asarray(rg, np.float32), atol=atol)
+        np.testing.assert_array_equal(np.asarray(nc), np.asarray(rc))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 24), st.integers(1, 3000), st.integers(0, 99))
+    def test_property_random(self, m, n, seed):
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 7)
+        cache = jax.random.normal(ks[0], (m, n))
+        trained = jax.random.normal(ks[1], (m, n))
+        g = jax.random.normal(ks[2], (n,))
+        picked = jax.random.bernoulli(ks[3], 0.5, (m,))
+        undrafted = jax.random.bernoulli(ks[4], 0.5, (m,)) & ~picked
+        dep = jax.random.bernoulli(ks[5], 0.5, (m,))
+        w = jax.nn.softmax(jax.random.normal(ks[6], (m,)))
+        ng, nc = safa_aggregate(cache, trained, g, picked, undrafted, dep, w,
+                                tile=256)
+        rg, rc = ref.safa_aggregate_ref(cache, trained, g, picked, undrafted,
+                                        dep, w)
+        np.testing.assert_allclose(np.asarray(ng), np.asarray(rg), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(nc), np.asarray(rc))
+
+
+class TestCommQuantKernel:
+    @pytest.mark.parametrize('n', [1, 127, 128, 1000, 4096, 10_001])
+    def test_roundtrip_error_bound(self, n):
+        x = jax.random.normal(jax.random.PRNGKey(n), (n,)) * 3.0
+        q, s = quantize(x, tile=512)
+        rq, rs = ref.quantize_ref(x)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(rq))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=1e-6)
+        xd = dequantize(q, s, n=n, tile=512)
+        rd = ref.dequantize_ref(rq, rs, n)
+        np.testing.assert_allclose(np.asarray(xd), np.asarray(rd), atol=1e-6)
+        # int8 symmetric quantisation error <= scale/2 per block
+        err = np.abs(np.asarray(xd - x))
+        per_block_bound = np.repeat(np.asarray(rs) / 2 + 1e-7,
+                                    128)[:n]
+        assert np.all(err <= per_block_bound + 1e-6)
+
+    def test_bf16_input(self):
+        x = (jax.random.normal(jax.random.PRNGKey(5), (513,)) * 2).astype(jnp.bfloat16)
+        q, s = quantize(x.astype(jnp.float32), tile=512)
+        xd = dequantize(q, s, n=513, tile=512)
+        assert np.all(np.isfinite(np.asarray(xd)))
+
+
+class TestSWAKernel:
+    @pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize('B,S,H,KH,D,win,bq,bk', [
+        (1, 64, 2, 2, 16, None, 16, 16),
+        (2, 100, 4, 2, 32, 17, 16, 16),
+        (1, 33, 4, 1, 16, 8, 16, 16),
+        (1, 128, 2, 2, 64, 32, 32, 32),
+    ])
+    def test_sweep(self, B, S, H, KH, D, win, bq, bk, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(S + (win or 0)), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+        k = jax.random.normal(ks[1], (B, S, KH, D)).astype(dtype)
+        v = jax.random.normal(ks[2], (B, S, KH, D)).astype(dtype)
+        out = swa_attention(q, k, v, window=win, block_q=bq, block_k=bk)
+        refo = ref.swa_attention_ref(q.astype(jnp.float32),
+                                     k.astype(jnp.float32),
+                                     v.astype(jnp.float32), window=win)
+        atol = 2e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(refo, np.float32), atol=atol)
+
+    def test_matches_model_flash_path(self):
+        """Kernel == the pure-jnp flash implementation used by the models."""
+        from repro.models.attention import flash_attention
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (2, 48, 4, 16))
+        k = jax.random.normal(ks[1], (2, 48, 2, 16))
+        v = jax.random.normal(ks[2], (2, 48, 2, 16))
+        a = swa_attention(q, k, v, window=9, block_q=16, block_k=16)
+        b = flash_attention(q, k, v, causal=True, window=9, q_block=16,
+                            kv_block=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)

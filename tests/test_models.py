@@ -1,0 +1,190 @@
+"""Model substrate correctness: attention paths, decode==forward, MoE, etc."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn_mod
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+
+
+def tiny(family='dense', **kw):
+    base = dict(arch_id=f'tiny-{family}', family=family, n_layers=2,
+                d_model=64, n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=128,
+                dtype=jnp.float32, remat=False, q_block=8, kv_block=8,
+                vocab_pad_multiple=64)
+    if family == 'ssm':
+        base.update(n_heads=0, n_kv_heads=0, d_ff=0, ssm_state=16,
+                    ssm_headdim=32, ssm_chunk=8)
+    if family == 'hybrid':
+        base.update(ssm_state=16, ssm_headdim=32, ssm_chunk=8, attn_every=1,
+                    n_kv_heads=4)
+    if family == 'vlm':
+        base.update(n_patches=4)
+    if family == 'audio':
+        base.update(enc_layers=2, enc_seq=8, mlp_kind='gelu')
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def make_batch(cfg, key, B=2, S=12):
+    kt, kl = jax.random.split(key)
+    batch = {'tokens': jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+             'labels': jax.random.randint(kl, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == 'vlm':
+        batch['patch_embeds'] = 0.1 * jax.random.normal(
+            kt, (B, cfg.n_patches, cfg.d_model))
+    if cfg.family == 'audio':
+        batch['frame_embeds'] = 0.1 * jax.random.normal(
+            kt, (B, cfg.enc_seq, cfg.d_model))
+    return batch
+
+
+class TestAttention:
+    @pytest.mark.parametrize('window', [None, 5])
+    @pytest.mark.parametrize('gqa', [1, 2, 4])
+    def test_flash_matches_naive(self, window, gqa):
+        key = jax.random.PRNGKey(0)
+        B, S, H, D = 2, 37, 4, 16
+        KH = H // gqa
+        q = jax.random.normal(key, (B, S, H, D))
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KH, D))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KH, D))
+        out = attn_mod.flash_attention(q, k, v, causal=True, window=window,
+                                       q_block=8, kv_block=8)
+        ref = attn_mod.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+    def test_noncausal(self):
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (1, 20, 2, 8))
+        k = jax.random.normal(key, (1, 14, 2, 8))
+        v = jax.random.normal(jax.random.PRNGKey(4), (1, 14, 2, 8))
+        out = attn_mod.flash_attention(
+            q, k, v, causal=False, q_block=8, kv_block=8,
+            q_positions=jnp.arange(20), k_positions=jnp.arange(14))
+        ref = attn_mod.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize('family', ['dense', 'moe', 'ssm', 'hybrid', 'vlm',
+                                    'audio'])
+class TestDecodeMatchesForward:
+    def test_prefill_equals_forward(self, family):
+        """Token-by-token decode must reproduce the parallel forward logits
+        (teacher forcing) — validates caches, positions and RoPE offsets."""
+        cfg = tiny(family, n_experts=4 if family == 'moe' else 0,
+                   capacity_factor=8.0 if family == 'moe' else 1.25)
+        model = build_model(cfg)
+        key = jax.random.PRNGKey(7)
+        params = model.init(key)
+        B, S = 2, 10
+        batch = make_batch(cfg, key, B, S)
+
+        full_logits, _ = model.logits(params, batch)
+
+        cache = model.init_cache(B, S)
+        if family == 'audio':
+            # encoder K/V must be precomputed into the cache
+            from repro.models import transformer as tfm
+            from repro.models import common as cm
+            frames = batch['frame_embeds'].astype(cfg.dtype) + params['enc_pos'][None]
+            enc, _ = tfm.run_dense_stack(params['enc_layers'], frames, cfg,
+                                         causal=False)
+            enc = cm.rms_norm(enc, params['enc_ln_f'])
+            xks, xvs = [], []
+            layers = params['dec_layers']
+            for i in range(cfg.n_layers):
+                layer = jax.tree.map(lambda a: a[i], layers)
+                kk, vv = tfm.project_enc_kv(layer['xattn'], enc, cfg)
+                xks.append(kk)
+                xvs.append(vv)
+            cache['xk'] = jnp.stack(xks)
+            cache['xv'] = jnp.stack(xvs)
+        if family == 'vlm':
+            pytest.skip('vlm decode serves text-only continuation; '
+                        'patch context covered by smoke test')
+
+        cache, step_logits = model.prefill(params, cache, batch['tokens'])
+        if family == 'moe':
+            # top-1 routing makes the comparison discontinuous: fp-rounding
+            # differences between the blocked and step-by-step paths can
+            # flip near-tie argmax routing for individual tokens, which then
+            # cascades through attention.  Require the bulk of positions to
+            # match instead of every element.
+            a, b = np.asarray(step_logits), np.asarray(full_logits)
+            close = np.isclose(a, b, atol=3e-3, rtol=1e-2).mean()
+            assert close > 0.95, f'only {close:.2%} of logits match'
+        else:
+            np.testing.assert_allclose(np.asarray(step_logits),
+                                       np.asarray(full_logits),
+                                       atol=3e-4, rtol=2e-3)
+
+
+class TestSlidingWindowDecode:
+    def test_ring_buffer_matches_full_recompute(self):
+        """Decode with a ring-buffer window cache == full forward with the
+        same window mask, for a prompt longer than the window."""
+        cfg = tiny('dense', window=4)
+        model = build_model(cfg)
+        key = jax.random.PRNGKey(9)
+        params = model.init(key)
+        B, S = 1, 11  # prompt ~3x window
+        batch = make_batch(cfg, key, B, S)
+        full_logits, _ = model.logits(params, batch)
+        cache = model.init_cache(B, S)  # ring buffer: window slots only
+        assert cache['k'].shape[3 - 1] == cfg.window  # S dim == window
+        cache, step_logits = model.prefill(params, cache, batch['tokens'])
+        np.testing.assert_allclose(np.asarray(step_logits),
+                                   np.asarray(full_logits),
+                                   atol=3e-4, rtol=2e-3)
+
+
+class TestMoE:
+    def test_mass_conservation_and_shapes(self):
+        key = jax.random.PRNGKey(11)
+        p = cm.unbox(moe_mod.init_moe(key, 32, 64, 4, jnp.float32, shared_expert=False))[0]
+        x = jax.random.normal(key, (2, 16, 32))
+        y, aux = moe_mod.apply_moe(p, x, capacity_factor=2.0)
+        assert y.shape == x.shape
+        assert float(aux['dropped_frac']) <= 0.5
+        assert float(aux['load_balance_loss']) >= 0.99  # >= 1 at balance
+
+    def test_high_capacity_keeps_all_tokens(self):
+        key = jax.random.PRNGKey(12)
+        p = cm.unbox(moe_mod.init_moe(key, 16, 32, 2, jnp.float32, shared_expert=False))[0]
+        x = jax.random.normal(key, (1, 8, 16))
+        _, aux = moe_mod.apply_moe(p, x, capacity_factor=8.0)
+        assert float(aux['dropped_frac']) == pytest.approx(0.0, abs=1e-6)
+
+    def test_grad_flows(self):
+        key = jax.random.PRNGKey(13)
+        p = cm.unbox(moe_mod.init_moe(key, 16, 32, 2, jnp.float32))[0]
+        x = jax.random.normal(key, (1, 8, 16))
+        g = jax.grad(lambda pp: jnp.sum(moe_mod.apply_moe(pp, x)[0] ** 2))(p)
+        norms = [float(jnp.abs(l).sum()) for l in jax.tree.leaves(g)]
+        assert all(np.isfinite(norms))
+        assert sum(norms) > 0
+
+
+class TestQKNormAndVariants:
+    @pytest.mark.parametrize('kw', [dict(qk_norm=True),
+                                    dict(mlp_kind='relu2'),
+                                    dict(window=6),
+                                    dict(rope_theta=1e6)])
+    def test_variants_train_step(self, kw):
+        cfg = tiny('dense', **kw)
+        model = build_model(cfg)
+        key = jax.random.PRNGKey(15)
+        params = model.init(key)
+        batch = make_batch(cfg, key)
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        assert np.isfinite(float(loss))
+        gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+        assert np.isfinite(gnorm) and gnorm > 0

@@ -1,0 +1,179 @@
+"""SAFA protocol algebra: Eq. 3 / 6 / 7 / 8 semantics and CFCFM properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics, protocol, selection
+
+
+def _tree(key, m, shapes=((4, 3), (5,))):
+    ks = jax.random.split(key, len(shapes))
+    return {f'p{i}': jax.random.normal(k, (m,) + s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def _global(key, shapes=((4, 3), (5,))):
+    ks = jax.random.split(key, len(shapes))
+    return {f'p{i}': jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+class TestDistribution:
+    def test_sync_takes_global(self):
+        m = 6
+        g = _global(jax.random.PRNGKey(0))
+        local = _tree(jax.random.PRNGKey(1), m)
+        sync = jnp.array([True, False, True, False, False, True])
+        out = protocol.distribute(g, local, sync)
+        for k in g:
+            for i in range(m):
+                expect = g[k] if bool(sync[i]) else local[k][i]
+                np.testing.assert_array_equal(out[k][i], expect)
+
+    def test_classify_versions(self):
+        v = jnp.array([5, 3, 1, 0, 5])
+        committed = jnp.array([True, False, False, False, False])
+        up, dep, tol = protocol.classify_versions(v, 5, 3, committed)
+        np.testing.assert_array_equal(np.asarray(up), [1, 0, 0, 0, 0])
+        # staleness: 0,2,4,5,0 ; deprecated iff >= 3 and not committed
+        np.testing.assert_array_equal(np.asarray(dep), [0, 0, 1, 1, 0])
+        np.testing.assert_array_equal(np.asarray(tol), [0, 1, 0, 0, 1])
+
+
+class TestDiscriminativeAggregation:
+    def test_eq678_by_hand(self):
+        """Replay Eq. 6-8 entry by entry against the vectorized impl."""
+        m = 5
+        key = jax.random.PRNGKey(2)
+        cache = _tree(key, m)
+        trained = _tree(jax.random.PRNGKey(3), m)
+        g = _global(jax.random.PRNGKey(4))
+        picked = jnp.array([1, 0, 0, 1, 0], bool)
+        undrafted = jnp.array([0, 1, 0, 0, 0], bool)
+        deprecated = jnp.array([0, 0, 1, 1, 0], bool)
+        w = jnp.asarray(np.random.default_rng(0).dirichlet(np.ones(m)),
+                        jnp.float32)
+
+        res = protocol.discriminative_aggregation(
+            cache, trained, g, picked=picked, undrafted=undrafted,
+            deprecated=deprecated, weights=w)
+
+        for k in cache:
+            # Eq. 6
+            c1 = []
+            for i in range(m):
+                if bool(picked[i]):
+                    c1.append(trained[k][i])
+                elif bool(deprecated[i]):
+                    c1.append(g[k])
+                else:
+                    c1.append(cache[k][i])
+            c1 = jnp.stack(c1)
+            # Eq. 7
+            expect_global = jnp.tensordot(w, c1, axes=1)
+            np.testing.assert_allclose(np.asarray(res.new_global[k]),
+                                       np.asarray(expect_global), rtol=1e-5)
+            # Eq. 8
+            for i in range(m):
+                expect = trained[k][i] if bool(undrafted[i]) else c1[i]
+                np.testing.assert_allclose(np.asarray(res.new_cache[k][i]),
+                                           np.asarray(expect), rtol=1e-6)
+
+    def test_weights_sum_preserved(self):
+        """Aggregating identical cache entries returns that entry."""
+        m = 4
+        g = _global(jax.random.PRNGKey(5))
+        cache = protocol.broadcast_global(g, m)
+        w = jnp.full((m,), 1.0 / m)
+        out = protocol.aggregate(cache, w)
+        for k in g:
+            np.testing.assert_allclose(np.asarray(out[k]), np.asarray(g[k]),
+                                       rtol=1e-6)
+
+    def test_kernel_path_matches_jnp_path(self):
+        m = 6
+        cache = _tree(jax.random.PRNGKey(6), m, shapes=((64,), (8, 33)))
+        trained = _tree(jax.random.PRNGKey(7), m, shapes=((64,), (8, 33)))
+        g = _global(jax.random.PRNGKey(8), shapes=((64,), (8, 33)))
+        picked = jnp.array([1, 0, 1, 0, 0, 0], bool)
+        undrafted = jnp.array([0, 1, 0, 0, 1, 0], bool)
+        deprecated = jnp.array([0, 0, 0, 1, 0, 0], bool)
+        w = jnp.full((m,), 1.0 / m)
+        a = protocol.discriminative_aggregation(
+            cache, trained, g, picked=picked, undrafted=undrafted,
+            deprecated=deprecated, weights=w, use_kernel=False)
+        b = protocol.discriminative_aggregation(
+            cache, trained, g, picked=picked, undrafted=undrafted,
+            deprecated=deprecated, weights=w, use_kernel=True)
+        for k in cache:
+            np.testing.assert_allclose(np.asarray(a.new_global[k]),
+                                       np.asarray(b.new_global[k]), atol=1e-5)
+            np.testing.assert_allclose(np.asarray(a.new_cache[k]),
+                                       np.asarray(b.new_cache[k]), atol=1e-6)
+
+
+class TestCFCFM:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(2, 40), st.floats(0.05, 1.0), st.integers(0, 10_000))
+    def test_invariants(self, m, frac, seed):
+        rng = np.random.default_rng(seed)
+        arrival = rng.exponential(100, m)
+        completed = rng.random(m) < 0.8
+        arrival = np.where(completed, arrival, np.inf)
+        picked_prev = rng.random(m) < 0.4
+        deadline = 500.0
+        sel = selection.cfcfm(arrival, completed, picked_prev, frac, deadline)
+        quota = max(1, int(round(frac * m)))
+        committed = completed & (arrival <= deadline)
+        # picked are committed, disjoint from undrafted, and bounded by quota
+        assert not np.any(sel.picked & ~committed)
+        assert not np.any(sel.picked & sel.undrafted)
+        assert sel.picked.sum() <= quota
+        assert np.array_equal(sel.picked | sel.undrafted, committed)
+        # if enough priority clients committed, quota is met entirely by them
+        prio = committed & ~picked_prev
+        if prio.sum() >= quota:
+            assert sel.picked.sum() == quota
+            assert not np.any(sel.picked & picked_prev)
+
+    def test_compensatory_priority(self):
+        """A slower not-picked-last-round client beats a faster picked one."""
+        arrival = np.array([10.0, 20.0])
+        completed = np.array([True, True])
+        picked_prev = np.array([True, False])  # client 0 was picked last round
+        sel = selection.cfcfm(arrival, completed, picked_prev, 0.5, 100.0)
+        assert sel.picked.tolist() == [False, True]
+
+    def test_fcfs_order_within_priority(self):
+        arrival = np.array([30.0, 10.0, 20.0, 5.0])
+        completed = np.ones(4, bool)
+        picked_prev = np.zeros(4, bool)
+        sel = selection.cfcfm(arrival, completed, picked_prev, 0.5, 100.0)
+        # first two arrivals: client 3 (t=5) and client 1 (t=10)
+        assert sel.picked.tolist() == [False, True, False, True]
+
+
+class TestEURTheory:
+    @settings(max_examples=40, deadline=None)
+    @given(st.floats(0.05, 1.0), st.floats(0.0, 0.9))
+    def test_eq5_regimes(self, C, R):
+        eur = metrics.eur_theory_safa(C, R)
+        assert eur == pytest.approx(min(C, 1 - R))
+        assert metrics.eur_theory_fedavg(C, R) <= eur + 1e-9
+
+    def test_eq5_matches_simulation(self):
+        """Monte-Carlo CFCFM EUR converges to Eq. 5."""
+        m, C, crash = 200, 0.3, 0.5
+        rng = np.random.default_rng(0)
+        prev = np.zeros(m, bool)
+        eurs = []
+        for _ in range(60):
+            completed = rng.random(m) > crash
+            arrival = np.where(completed, rng.exponential(10, m), np.inf)
+            sel = selection.cfcfm(arrival, completed, prev, C, 1e9)
+            eurs.append(metrics.eur_measured(sel.picked, ~completed))
+            prev = sel.picked
+        assert np.mean(eurs) == pytest.approx(
+            metrics.eur_theory_safa(C, crash), abs=0.03)

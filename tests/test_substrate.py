@@ -1,0 +1,144 @@
+"""Substrate tests: sharding rules, checkpointing, data pipeline, optim."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import checkpoint, optim
+from repro import sharding as shd
+from repro.data import (make_images, make_lm_tokens, make_regression,
+                        make_svm, partition)
+from repro.launch import mesh as mesh_lib
+
+
+class TestShardingRules:
+    def _mesh(self):
+        # axis sizes 1x1 on CPU; divisibility logic tested via fake sizes
+        return mesh_lib.make_local_mesh()
+
+    def test_spec_drops_nondivisible(self):
+        mesh = jax.make_mesh((1, 1), ('data', 'model'))
+        # vocab divisible by 1 -> sharded on 'model'
+        s = shd.spec_for(('vocab', 'embed'), (256, 64), mesh)
+        assert s == P('model')
+        s2 = shd.spec_for((None, 'mlp'), (4, 63), mesh)  # 63 % 1 == 0
+        assert s2 == P(None, 'model')
+
+    def test_missing_axis_dropped(self):
+        mesh = jax.make_mesh((1, 1), ('data', 'model'))
+        s = shd.spec_for(('clients', None), (8, 3), mesh)  # no 'pod' axis
+        assert s == P('data')
+
+    def test_no_axis_reuse(self):
+        mesh = jax.make_mesh((1, 1), ('data', 'model'))
+        s = shd.spec_for(('mlp', 'vocab'), (16, 256), mesh)
+        # 'model' used by mlp; vocab falls back to replicated
+        assert s == P('model')
+
+    def test_constrain_noop_without_mesh(self):
+        x = jnp.ones((4, 4))
+        assert shd.constrain(x, None, 'batch', None) is x
+
+
+class TestCheckpoint:
+    def test_roundtrip_with_protocol_state(self):
+        tree = {
+            'model': {'w': jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                      'b': jnp.ones(())},
+            'cache': jnp.zeros((3, 2, 3)),
+            'versions': jnp.array([1, 2, 3]),
+        }
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, 'ckpt.npz')
+            checkpoint.save(path, tree, {'round': 7, 'protocol': 'safa'})
+            like = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+            restored, meta = checkpoint.restore(path, like)
+            assert meta == {'round': 7, 'protocol': 'safa'}
+            for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestData:
+    def test_partition_shapes_and_weights(self):
+        x, y = make_regression(n=300, d=5)
+        sizes = np.array([50, 100, 150])
+        fd = partition(x, y, sizes, batch_size=10, seed=0)
+        assert fd.x.shape[0] == 3 and fd.x.shape[2] == 10
+        assert fd.x.shape[-1] == 5
+        # partition sizes roughly proportional
+        assert fd.partition_sizes[2] > fd.partition_sizes[0]
+
+    def test_dirichlet_label_skew(self):
+        x, y = make_images(n=600)
+        fd = partition(x, y, np.full(6, 100), batch_size=10,
+                       dirichlet_alpha=0.1, seed=0)
+        # with alpha=0.1 most clients should be dominated by few classes
+        fracs = []
+        for c in range(6):
+            labels = fd.y[c].reshape(-1)
+            _, counts = np.unique(labels, return_counts=True)
+            fracs.append(counts.max() / counts.sum())
+        assert np.mean(fracs) > 0.4
+
+    def test_svm_labels(self):
+        x, y = make_svm(n=500)
+        assert set(np.unique(y)) == {-1.0, 1.0}
+
+    def test_lm_tokens_range(self):
+        t = make_lm_tokens(n_docs=8, seq_len=16, vocab=32)
+        assert t.shape == (8, 17)
+        assert t.min() >= 0 and t.max() < 32
+
+
+class TestOptim:
+    def _quad_losses(self, opt, steps=200):
+        params = {'w': jnp.array([3.0, -2.0])}
+        state = opt.init(params)
+        loss = lambda p: jnp.sum(jnp.square(p['w']))
+        for _ in range(steps):
+            g = jax.grad(loss)(params)
+            params, state = opt.update(g, state, params)
+        return float(loss(params))
+
+    def test_sgd_converges(self):
+        assert self._quad_losses(optim.sgd(0.1)) < 1e-6
+
+    def test_sgd_momentum_converges(self):
+        assert self._quad_losses(optim.sgd(0.05, momentum=0.9)) < 1e-6
+
+    def test_adamw_converges(self):
+        assert self._quad_losses(optim.adamw(0.1), steps=400) < 1e-4
+
+    def test_clip_by_global_norm(self):
+        g = {'a': jnp.full((3,), 10.0)}
+        clipped, norm = optim.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(np.sqrt(300), rel=1e-5)
+        cn = np.sqrt(np.sum(np.square(np.asarray(clipped['a']))))
+        assert cn == pytest.approx(1.0, rel=1e-4)
+
+
+class TestHLOParse:
+    def test_while_trip_count_multiplies(self):
+        from repro.launch import hlo_parse
+        hlo = '''HloModule test
+%cond (x: (s32[])) -> pred[] {
+  %c = s32[] constant(10)
+}
+%body (x: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar = f32[64]{0} all-reduce(%p), replica_groups={}
+}
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %ag = f32[128]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[64]) while(%t), condition=%cond, body=%body
+}
+'''
+        res = hlo_parse.analyze_collectives(hlo)
+        assert res['counts']['all-gather'] == 1
+        assert res['counts']['all-reduce'] == 10        # x trip count
+        assert res['bytes']['all-reduce'] == 10 * 64 * 4
+        assert res['bytes']['all-gather'] == 128 * 4
