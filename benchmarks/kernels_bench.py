@@ -53,7 +53,8 @@ def run():
     us_q = _time(quantize, x)
     q, s = quantize(x)
     us_d = _time(dequantize, q, s, n=x.shape[0])
-    raw, wire = 4 * x.size, x.size + 4 * (x.size // QBLOCK)
+    # ceiling form, matching ops.comm_bytes: one f32 scale per started block
+    raw, wire = 4 * x.size, x.size + 4 * (-(-x.size // QBLOCK))
     emit('kernel/comm_quant/4M', f'{us_q:.0f}',
          f'dequant_us={us_d:.0f};wire_bytes={wire};raw_bytes={raw};'
          f'compression={raw / wire:.2f}x')

@@ -13,11 +13,12 @@ import sys
 import time
 
 from benchmarks import (accuracy, bias_curves, eur, kernels_bench,
-                        lag_tolerance, roofline_table, round_length,
-                        selection_ablation, sr_futility)
+                        lag_tolerance, roofline_table, round_engine,
+                        round_length, selection_ablation, sr_futility)
 
 SECTIONS = {
     'round_length': lambda full: (round_length.run(), round_length.summarize()),
+    'round_engine': lambda full: round_engine.run(),
     'sr_futility': lambda full: sr_futility.run(),
     'accuracy': lambda full: accuracy.run(full=full),
     'lag_tolerance': lambda full: lag_tolerance.run(),

@@ -8,6 +8,19 @@ math via the jit-able mask algebra in ``repro.core.protocol``.
 Timing-only mode (``numeric=False``) reproduces the paper's round-length /
 T_dist / SR / futility tables at full scale without touching model weights —
 those metrics depend only on the event process, exactly as in the paper.
+
+Because the event process never looks at model weights, every per-round mask
+is known before the first gradient step: ``precompute_safa_schedule`` /
+``precompute_sync_schedule`` run the whole state machine in one cheap host
+pass and emit [rounds, m] mask schedules.  The numeric run then picks an
+*engine*:
+
+* ``engine='scan'`` (default) — the entire span between eval points runs as
+  a single ``jax.lax.scan`` dispatch with the (global, local, cache) carry
+  donated (``protocol.safa_run_scan`` / ``protocol.fedavg_run_scan``);
+* ``engine='loop'`` — the seed's per-round Python loop, kept as the
+  reference mode (one dispatch per op per round, masks shuttled
+  host->device every round); bit-identical to the scanned engine.
 """
 from __future__ import annotations
 
@@ -55,12 +68,17 @@ class History:
 class Task:
     """A federated learning task: model init/train/eval, model-agnostic for
     the protocol layer.  ``local_train(stacked_params, round_idx)`` must
-    train every client replica for E epochs (vmapped inside)."""
+    train every client replica for E epochs (vmapped inside).
+
+    ``round_idx`` is a Python int under ``engine='loop'`` but a traced
+    int32 scalar under the default scanned engine — implementations must
+    not branch on it in Python (use ``jnp.where``/``lax.cond`` if the
+    round number matters)."""
 
     def init_global(self, key):
         raise NotImplementedError
 
-    def local_train(self, stacked_params, round_idx: int):
+    def local_train(self, stacked_params, round_idx):
         raise NotImplementedError
 
     def evaluate(self, global_params) -> dict:
@@ -79,12 +97,42 @@ class _NumericState:
         self.cache = protocol.broadcast_global(self.global_w, m)
 
 
-def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
-             lag_tolerance: int, rounds: int, eval_every: int = 10,
-             numeric: bool = True, use_kernel: bool = False,
-             quantize_uploads: bool = False, seed: int = 0) -> History:
+@dataclasses.dataclass
+class SafaSchedule:
+    """Precomputed SAFA event process: [rounds, m] bool mask schedules plus
+    the timing records they imply.  Independent of model weights."""
+    sync: np.ndarray
+    committed: np.ndarray
+    picked: np.ndarray
+    undrafted: np.ndarray
+    deprecated: np.ndarray
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.sync.shape[0]
+
+    def to_device(self) -> protocol.RoundSchedule:
+        """One host->device hop for the whole run."""
+        return protocol.RoundSchedule(
+            sync=jnp.asarray(self.sync), completed=jnp.asarray(self.committed),
+            picked=jnp.asarray(self.picked),
+            undrafted=jnp.asarray(self.undrafted),
+            deprecated=jnp.asarray(self.deprecated),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+def precompute_safa_schedule(env: FLEnv, *, fraction: float,
+                             lag_tolerance: int, rounds: int) -> SafaSchedule:
+    """Run the SAFA timing/event state machine (Eq. 3 version bookkeeping,
+    crash draws, CFCFM selection) for all rounds in one numpy host pass.
+
+    The event process never reads model weights, so the full [rounds, m]
+    mask schedule — and every timing metric — is known up front.  Consumes
+    ``env``'s rng exactly as the seed's round-by-round loop did.
+    """
     m = env.m
-    hist = History('safa')
     v = np.zeros(m, dtype=int)             # base-model versions
     committed_prev = np.ones(m, bool)      # round 1: everyone holds w(0)
     picked_prev = np.zeros(m, bool)
@@ -93,20 +141,23 @@ def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
     work = env.n_batches * env.epochs      # per-round work units
     wasted = 0.0
     performed = 0.0
-    ns = _NumericState(task, m, seed) if numeric else None
+    crashed_all, cfrac_all = env.draw_rounds(rounds)
+    masks = {k: np.zeros((rounds, m), bool)
+             for k in ('sync', 'committed', 'picked', 'undrafted',
+                       'deprecated')}
+    records = []
 
     for t in range(1, rounds + 1):
         gv = t - 1
-        up, dep, tol = protocol.classify_versions(
-            jnp.asarray(v), gv, lag_tolerance, _to_j(committed_prev))
-        up, dep = np.asarray(up), np.asarray(dep)
+        up, dep, _ = protocol.classify_versions(v, gv, lag_tolerance,
+                                                committed_prev)
         sync = up | dep
         # forced sync discards any pending straggler progress (futility)
         wasted += float(np.sum(pending[sync] * work[sync]))
         pending[sync] = 0.0
         v[sync] = gv
 
-        crashed, cfrac = env.draw_round()
+        crashed, cfrac = crashed_all[t - 1], cfrac_all[t - 1]
         remaining = 1.0 - pending
         t_train = remaining * full_tt
         t_dist = env.t_dist(int(sync.sum()))
@@ -123,27 +174,15 @@ def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
         pending[sel.committed] = 0.0
         v[sel.committed] = t
 
-        if numeric:
-            train_fn = task.local_train
-            if quantize_uploads:
-                # int8-compressed uplink (beyond-paper; comm_quant kernel):
-                # the server sees the dequantised client update, exactly as
-                # a real compressed transfer would deliver it
-                def train_fn(stacked, *args, _f=task.local_train):
-                    from repro.kernels import ops as kops
-                    trained = _f(stacked, *args)
-                    return kops.dequantize_tree(kops.quantize_tree(trained),
-                                                trained)
-            ns.global_w, ns.local_w, ns.cache = protocol.safa_round(
-                ns.global_w, ns.local_w, ns.cache,
-                sync_mask=_to_j(sync), completed=_to_j(sel.committed),
-                picked=_to_j(sel.picked), undrafted=_to_j(sel.undrafted),
-                deprecated=_to_j(dep), weights=jnp.asarray(env.weights),
-                local_train_fn=train_fn, train_args=(t,),
-                use_kernel=use_kernel)
+        i = t - 1
+        masks['sync'][i] = sync
+        masks['committed'][i] = sel.committed
+        masks['picked'][i] = sel.picked
+        masks['undrafted'][i] = sel.undrafted
+        masks['deprecated'][i] = dep
 
         trained_v = base_versions[sel.committed]
-        rec = RoundRecord(
+        records.append(RoundRecord(
             round=t,
             round_len=min(env.t_lim, sel.quota_met_time),
             t_dist=t_dist,
@@ -153,19 +192,110 @@ def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
             n_picked=int(sel.picked.sum()),
             n_committed=int(sel.committed.sum()),
             n_crashed=int(crashed.sum()),
-        )
-        if numeric and (t % eval_every == 0 or t == rounds):
-            rec.eval = task.evaluate(ns.global_w)
-            if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
-                hist.best_eval = rec.eval
-        hist.records.append(rec)
+        ))
         committed_prev = sel.committed.copy()
         picked_prev = sel.picked.copy()
 
-    hist.futility = wasted / max(performed, 1e-9)
-    if numeric:
-        hist.final_global = ns.global_w
+    return SafaSchedule(records=records,
+                        futility=wasted / max(performed, 1e-9), **masks)
+
+
+def _quantized_train_fn(base_fn):
+    """int8-compressed uplink (beyond-paper; comm_quant kernel): the server
+    sees the dequantised client update, exactly as a real compressed
+    transfer would deliver it.  The wrapper is memoised on the owning Task
+    so it stays a stable static argument to ``safa_run_scan`` (a fresh
+    closure per run would retrace the whole scanned program) without
+    pinning Tasks beyond their own lifetime."""
+    def train_fn(stacked, *args):
+        from repro.kernels import ops as kops
+        trained = base_fn(stacked, *args)
+        return kops.dequantize_tree(kops.quantize_tree(trained), trained)
+
+    owner = getattr(base_fn, '__self__', None)
+    if owner is None:
+        return train_fn
+    cached = getattr(owner, '_quantized_train_fn', None)
+    if cached is None:
+        owner._quantized_train_fn = cached = train_fn
+    return cached
+
+
+def _eval_rounds(rounds: int, eval_every: int):
+    """Rounds at which the orchestrators evaluate the global model.
+
+    These are also the scan-engine segment boundaries: at most two distinct
+    segment lengths exist per run (eval_every and a ragged final remainder),
+    so the scanned program traces at most twice."""
+    stops = sorted(set(range(eval_every, rounds + 1, eval_every)) | {rounds})
+    return [t for t in stops if t >= 1]
+
+
+def _record_eval(hist: History, rec: RoundRecord, task: Task, global_w):
+    rec.eval = task.evaluate(global_w)
+    if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
+        hist.best_eval = rec.eval
+
+
+def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
+             lag_tolerance: int, rounds: int, eval_every: int = 10,
+             numeric: bool = True, use_kernel=False,
+             quantize_uploads: bool = False, seed: int = 0,
+             engine: str = 'scan') -> History:
+    m = env.m
+    sched = precompute_safa_schedule(env, fraction=fraction,
+                                     lag_tolerance=lag_tolerance,
+                                     rounds=rounds)
+    hist = History('safa', records=sched.records, futility=sched.futility)
+    if not numeric:
+        return hist
+
+    ns = _NumericState(task, m, seed)
+    weights = jnp.asarray(env.weights)
+    train_fn = _quantized_train_fn(task.local_train) if quantize_uploads \
+        else task.local_train
+
+    evals = _eval_rounds(rounds, eval_every)
+    if engine == 'scan':
+        dev = sched.to_device()
+        start = 0
+        for stop in evals:
+            seg = jax.tree.map(lambda a: a[start:stop], dev)
+            ns.global_w, ns.local_w, ns.cache = protocol.safa_run_scan(
+                ns.global_w, ns.local_w, ns.cache, seg, weights,
+                local_train_fn=train_fn, use_kernel=use_kernel)
+            _record_eval(hist, sched.records[stop - 1], task, ns.global_w)
+            start = stop
+    elif engine == 'loop':
+        for t in range(1, rounds + 1):
+            i = t - 1
+            ns.global_w, ns.local_w, ns.cache = protocol.safa_round(
+                ns.global_w, ns.local_w, ns.cache,
+                sync_mask=_to_j(sched.sync[i]),
+                completed=_to_j(sched.committed[i]),
+                picked=_to_j(sched.picked[i]),
+                undrafted=_to_j(sched.undrafted[i]),
+                deprecated=_to_j(sched.deprecated[i]), weights=weights,
+                local_train_fn=train_fn, train_args=(t,),
+                use_kernel=use_kernel)
+            if t in evals:
+                _record_eval(hist, sched.records[i], task, ns.global_w)
+    else:
+        raise ValueError(f'unknown engine {engine!r} (want "scan" or "loop")')
+
+    hist.final_global = ns.global_w
     return hist
+
+
+def _capped_round_len(arrival: np.ndarray, mask: np.ndarray,
+                      t_lim: float) -> float:
+    """Deadline-capped max arrival over ``mask``, ignoring non-finite
+    entries; returns ``t_lim`` when nothing finite remains (e.g. every
+    client crashed, arrival all inf) so inf never leaks into a
+    RoundRecord."""
+    live = arrival[mask]
+    live = live[np.isfinite(live)]
+    return min(t_lim, float(live.max())) if live.size else t_lim
 
 
 def _sync_round_common(env: FLEnv, selected: np.ndarray, crashed: np.ndarray,
@@ -184,17 +314,40 @@ def _sync_round_common(env: FLEnv, selected: np.ndarray, crashed: np.ndarray,
     return min(env.t_lim, round_len), t_dist
 
 
-def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
-               rounds: int, eval_every: int = 10, numeric: bool = True,
-               seed: int = 0, fedcs: bool = False) -> History:
+@dataclasses.dataclass
+class SyncSchedule:
+    """Precomputed FedAvg/FedCS event process ([rounds, m] masks + records).
+    ``completed`` is the per-round survivor mask (``~crashed``); the numeric
+    round intersects it with ``selected`` itself."""
+    selected: np.ndarray
+    completed: np.ndarray
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.selected.shape[0]
+
+    def to_device(self) -> protocol.SyncSchedule:
+        return protocol.SyncSchedule(
+            selected=jnp.asarray(self.selected),
+            completed=jnp.asarray(self.completed),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
+                             seed: int, fedcs: bool) -> SyncSchedule:
+    """Host pass for the synchronous baselines (selection + crash draws)."""
     m = env.m
-    hist = History('fedcs' if fedcs else 'fedavg')
     rng = np.random.default_rng(seed + 1)
     full_tt = env.full_train_time()
     work = env.n_batches * env.epochs
     wasted = 0.0
     performed = 0.0
-    ns = _NumericState(task, m, seed) if numeric else None
+    crashed_all, cfrac_all = env.draw_rounds(rounds)
+    selected_s = np.zeros((rounds, m), bool)
+    completed_s = np.zeros((rounds, m), bool)
+    records = []
 
     for t in range(1, rounds + 1):
         if fedcs:
@@ -202,7 +355,7 @@ def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
             sel = selection.fedcs_select(est, fraction, env.t_lim)
         else:
             sel = selection.fedavg_select(rng, m, fraction)
-        crashed, cfrac = env.draw_round()
+        crashed, cfrac = crashed_all[t - 1], cfrac_all[t - 1]
         round_len, t_dist = _sync_round_common(env, sel, crashed, cfrac, full_tt)
         # clients that cannot make the deadline are reckoned crashed (§III-B)
         too_slow = (t_dist + 2 * env.t_updown + full_tt) > env.t_lim
@@ -211,27 +364,57 @@ def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
         performed += float(np.sum(np.where(sel, np.where(crashed, cfrac, 1.0), 0.0) * work))
         wasted += float(np.sum((sel & crashed) * cfrac * work))
 
-        if numeric:
-            ns.global_w, ns.local_w = protocol.fedavg_round(
-                ns.global_w, ns.local_w, selected=_to_j(sel),
-                completed=_to_j(~crashed), weights=jnp.asarray(env.weights),
-                local_train_fn=task.local_train, train_args=(t,))
-
-        rec = RoundRecord(
+        selected_s[t - 1] = sel
+        completed_s[t - 1] = ~crashed
+        records.append(RoundRecord(
             round=t, round_len=round_len, t_dist=t_dist,
             eur=float(completed.sum()) / m,
             sr=float(sel.sum()) / m, vv=0.0,
             n_picked=int(completed.sum()), n_committed=int(completed.sum()),
-            n_crashed=int(crashed.sum()))
-        if numeric and (t % eval_every == 0 or t == rounds):
-            rec.eval = task.evaluate(ns.global_w)
-            if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
-                hist.best_eval = rec.eval
-        hist.records.append(rec)
+            n_crashed=int(crashed.sum())))
 
-    hist.futility = wasted / max(performed, 1e-9)
-    if numeric:
-        hist.final_global = ns.global_w
+    return SyncSchedule(selected=selected_s, completed=completed_s,
+                        records=records,
+                        futility=wasted / max(performed, 1e-9))
+
+
+def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
+               rounds: int, eval_every: int = 10, numeric: bool = True,
+               seed: int = 0, fedcs: bool = False,
+               engine: str = 'scan') -> History:
+    sched = precompute_sync_schedule(env, fraction=fraction, rounds=rounds,
+                                     seed=seed, fedcs=fedcs)
+    hist = History('fedcs' if fedcs else 'fedavg', records=sched.records,
+                   futility=sched.futility)
+    if not numeric:
+        return hist
+
+    ns = _NumericState(task, env.m, seed)
+    weights = jnp.asarray(env.weights)
+    evals = _eval_rounds(rounds, eval_every)
+    if engine == 'scan':
+        dev = sched.to_device()
+        start = 0
+        for stop in evals:
+            seg = jax.tree.map(lambda a: a[start:stop], dev)
+            ns.global_w, ns.local_w = protocol.fedavg_run_scan(
+                ns.global_w, ns.local_w, seg, weights,
+                local_train_fn=task.local_train)
+            _record_eval(hist, sched.records[stop - 1], task, ns.global_w)
+            start = stop
+    elif engine == 'loop':
+        for t in range(1, rounds + 1):
+            i = t - 1
+            ns.global_w, ns.local_w = protocol.fedavg_round(
+                ns.global_w, ns.local_w, selected=_to_j(sched.selected[i]),
+                completed=_to_j(sched.completed[i]), weights=weights,
+                local_train_fn=task.local_train, train_args=(t,))
+            if t in evals:
+                _record_eval(hist, sched.records[i], task, ns.global_w)
+    else:
+        raise ValueError(f'unknown engine {engine!r} (want "scan" or "loop")')
+
+    hist.final_global = ns.global_w
     return hist
 
 
@@ -264,9 +447,7 @@ def run_local(task: Optional[Task], env: FLEnv, *, fraction: float,
                           n_crashed=int(crashed.sum()))
         if numeric and (t % eval_every == 0 or t == rounds):
             gw = protocol.aggregate(ns.local_w, jnp.asarray(env.weights))
-            rec.eval = task.evaluate(gw)
-            if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
-                hist.best_eval = rec.eval
+            _record_eval(hist, rec, task, gw)
         hist.records.append(rec)
 
     if numeric:
@@ -323,8 +504,7 @@ def run_fedasync(task: Optional[Task], env: FLEnv, *, fraction: float = 1.0,
         versions[committed] = global_version
         rec = RoundRecord(
             round=t,
-            round_len=min(env.t_lim, float(np.max(arrival[committed]))
-                          if committed.any() else env.t_lim),
+            round_len=_capped_round_len(arrival, committed, env.t_lim),
             t_dist=env.t_dist(int(committed.sum())),
             eur=float(committed.sum()) / m,
             sr=1.0,  # every client syncs every round: max downlink pressure
@@ -333,9 +513,7 @@ def run_fedasync(task: Optional[Task], env: FLEnv, *, fraction: float = 1.0,
             n_committed=int(committed.sum()),
             n_crashed=int(crashed.sum()))
         if numeric and (t % eval_every == 0 or t == rounds):
-            rec.eval = task.evaluate(ns.global_w)
-            if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
-                hist.best_eval = rec.eval
+            _record_eval(hist, rec, task, ns.global_w)
         hist.records.append(rec)
 
     if numeric:

@@ -100,11 +100,23 @@ def post_agg_cache_update(cache, trained, undrafted):
 
 def discriminative_aggregation(cache, trained, global_prev, *, picked,
                                undrafted, deprecated, weights,
-                               use_kernel: bool = False) -> AggregationResult:
-    """The full three-step aggregation.  ``use_kernel`` routes the fused
-    Pallas path (kernels/safa_aggregate)."""
+                               use_kernel=False) -> AggregationResult:
+    """The full three-step aggregation.
+
+    ``use_kernel`` routes the fused Pallas path (kernels/safa_aggregate):
+    ``True`` launches the fused kernel once per pytree leaf; ``'packed'``
+    flattens the model into one buffer and launches exactly once per call.
+    """
+    if use_kernel not in (False, True, 'packed'):
+        raise ValueError(
+            f'unknown use_kernel {use_kernel!r} (want False, True, or '
+            f'"packed")')
     if use_kernel:
         from repro.kernels import ops as kops
+        if use_kernel == 'packed':
+            return kops.safa_aggregate_tree_packed(
+                cache, trained, global_prev, picked=picked,
+                undrafted=undrafted, deprecated=deprecated, weights=weights)
         return kops.safa_aggregate_tree(
             cache, trained, global_prev, picked=picked, undrafted=undrafted,
             deprecated=deprecated, weights=weights)
@@ -138,6 +150,79 @@ def safa_round(global_w, local_w, cache, *, sync_mask, completed, picked,
     # committed clients now hold their own trained model locally
     new_local = masked_select(completed, trained, base)
     return res.new_global, new_local, res.new_cache
+
+
+# ---------------------------------------------------------------------------
+# Compiled multi-round engines: jax.lax.scan over precomputed schedules
+# ---------------------------------------------------------------------------
+#
+# The SAFA timing/event state machine (FLEnv draws, CFCFM selection, version
+# bookkeeping) is pure numpy and independent of model weights, so every
+# per-round mask can be precomputed into [k, m] schedules in one cheap host
+# pass (federation.precompute_safa_schedule).  The whole numeric run then
+# becomes ONE dispatch of a scanned round body with the (global, local,
+# cache) carry donated — no per-round dispatch, no per-round host->device
+# mask shuttling, no second full cache allocation.
+
+class RoundSchedule(NamedTuple):
+    """SAFA per-round masks, stacked [k, m] (plus round indices [k]) so k
+    rounds cross host->device in a single transfer."""
+    sync: Any
+    completed: Any
+    picked: Any
+    undrafted: Any
+    deprecated: Any
+    round_idx: Any
+
+
+class SyncSchedule(NamedTuple):
+    """FedAvg/FedCS per-round masks, stacked [k, m]."""
+    selected: Any
+    completed: Any
+    round_idx: Any
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=('local_train_fn', 'use_kernel'))
+def safa_run_scan(global_w, local_w, cache, schedule: RoundSchedule, weights,
+                  *, local_train_fn, use_kernel=False):
+    """Run ``k = len(schedule.round_idx)`` SAFA rounds as one compiled scan.
+
+    Bit-identical to ``k`` per-round ``safa_round`` dispatches: the scan
+    body is the same trace, compiled once.  The carry is donated, so the
+    caller's buffers are reused in place across the whole run.
+    Returns (new_global, new_local, new_cache).
+    """
+    def step(carry, sched):
+        g, l, c = carry
+        out = safa_round(
+            g, l, c, sync_mask=sched.sync, completed=sched.completed,
+            picked=sched.picked, undrafted=sched.undrafted,
+            deprecated=sched.deprecated, weights=weights,
+            local_train_fn=local_train_fn, train_args=(sched.round_idx,),
+            use_kernel=use_kernel)
+        return out, None
+
+    carry, _ = jax.lax.scan(step, (global_w, local_w, cache), schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=('local_train_fn',))
+def fedavg_run_scan(global_w, local_w, schedule: SyncSchedule, weights, *,
+                    local_train_fn):
+    """FedAvg counterpart of ``safa_run_scan``: k synchronous rounds in one
+    dispatch with the (global, local) carry donated."""
+    def step(carry, sched):
+        g, l = carry
+        ng, nl = fedavg_round(
+            g, l, selected=sched.selected, completed=sched.completed,
+            weights=weights, local_train_fn=local_train_fn,
+            train_args=(sched.round_idx,))
+        return (ng, nl), None
+
+    carry, _ = jax.lax.scan(step, (global_w, local_w), schedule)
+    return carry
 
 
 # ---------------------------------------------------------------------------

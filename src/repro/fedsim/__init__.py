@@ -69,3 +69,14 @@ class FLEnv:
         crashed = self._rng.random(self.m) < self.crash_prob
         crash_frac = self._rng.random(self.m)
         return crashed, crash_frac
+
+    def draw_rounds(self, rounds: int):
+        """Vectorised multi-round draw: (crashed [rounds, m] bool,
+        crash_frac [rounds, m]).
+
+        Consumes the generator stream in exactly the order ``rounds``
+        sequential ``draw_round`` calls would (crash draw then frac draw per
+        round), so schedule precompute reproduces the loop-driven event
+        process bit for bit."""
+        u = self._rng.random((rounds, 2, self.m))
+        return u[:, 0, :] < self.crash_prob, u[:, 1, :]

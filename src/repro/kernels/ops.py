@@ -1,20 +1,53 @@
 """Jit'd public wrappers for the Pallas kernels, including pytree plumbing
 so the protocol layer can call the fused aggregation on whole model trees.
+
+Two tree-level aggregation paths are exposed:
+
+* ``safa_aggregate_tree``        — one kernel dispatch per pytree leaf;
+* ``safa_aggregate_tree_packed`` — the model is flattened once into a single
+  [m, N_total] buffer (ragged leaves laid out at per-leaf offsets, padded
+  once at the end to a tile multiple), so Eq. 6-8 runs as exactly one
+  ``pallas_call`` per round regardless of model depth.
 """
 from __future__ import annotations
 
 import functools
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.protocol import AggregationResult
 from repro.kernels.comm_quant import dequantize, quantize
-from repro.kernels.safa_aggregate import safa_aggregate
+from repro.kernels.safa_aggregate import (DEFAULT_TILE, safa_aggregate,
+                                          safa_aggregate_packed)
 from repro.kernels.swa_attention import swa_attention
 
-__all__ = ['safa_aggregate', 'safa_aggregate_tree', 'quantize', 'dequantize',
-           'swa_attention', 'quantize_tree', 'dequantize_tree']
+__all__ = ['safa_aggregate', 'safa_aggregate_packed', 'safa_aggregate_tree',
+           'safa_aggregate_tree_packed', 'quantize', 'dequantize',
+           'swa_attention', 'quantize_tree', 'dequantize_tree',
+           'PackSpec', 'pack_spec', 'pack_stacked', 'pack_global',
+           'unpack_stacked', 'unpack_global', 'comm_bytes',
+           'count_pallas_calls']
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Recursively count pallas_call eqns in a jaxpr — the number of kernel
+    dispatches one execution of the traced function will issue (used by the
+    dispatch-count benchmark and its regression test).  Descends into
+    nested jaxprs held directly, as ClosedJaxprs, or in tuple params
+    (e.g. lax.cond ``branches``)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == 'pallas_call':
+            n += 1
+        for p in eqn.params.values():
+            for v in (p if isinstance(p, (tuple, list)) else (p,)):
+                if hasattr(v, 'eqns'):                       # Jaxpr
+                    n += count_pallas_calls(v)
+                elif hasattr(getattr(v, 'jaxpr', None), 'eqns'):  # ClosedJaxpr
+                    n += count_pallas_calls(v.jaxpr)
+    return n
 
 
 def safa_aggregate_tree(cache, trained, global_prev, *, picked, undrafted,
@@ -39,14 +72,121 @@ def safa_aggregate_tree(cache, trained, global_prev, *, picked, undrafted,
     return AggregationResult(new_global, new_cache)
 
 
+# ---------------------------------------------------------------------------
+# Packed layout: whole model as one [*, N_total] buffer
+# ---------------------------------------------------------------------------
+
+class PackSpec(NamedTuple):
+    """Static layout of a model pytree inside a flat pack buffer.
+
+    ``offsets[i]:offsets[i] + sizes[i]`` holds leaf i (global shapes, i.e.
+    without the clients dim); ``n_padded`` is ``sum(sizes)`` rounded up to a
+    tile multiple so kernels never re-pad per call."""
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    sizes: tuple
+    offsets: tuple
+    n_total: int
+    n_padded: int
+
+
+def pack_spec(global_tree, *, pad_to: int = DEFAULT_TILE) -> PackSpec:
+    """Build the layout from a *global* (unstacked) model pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(global_tree)
+    shapes = tuple(l.shape for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = tuple(int(l.size) for l in leaves)
+    offsets, off = [], 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    n_padded = off + ((-off) % pad_to)
+    return PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    sizes=sizes, offsets=tuple(offsets), n_total=off,
+                    n_padded=n_padded)
+
+
+def _pack(leaves, lead_shape, spec: PackSpec, compute_dtype):
+    flat = [l.astype(compute_dtype).reshape(lead_shape + (-1,))
+            for l in leaves]
+    pad = spec.n_padded - spec.n_total
+    if pad:
+        flat.append(jnp.zeros(lead_shape + (pad,), compute_dtype))
+    return jnp.concatenate(flat, axis=-1)
+
+
+def pack_stacked(tree, spec: PackSpec, *, dtype=jnp.float32):
+    """Stacked pytree ([m, ...] leaves) -> [m, n_padded] buffer."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    return _pack(leaves, (m,), spec, dtype)
+
+
+def pack_global(tree, spec: PackSpec, *, dtype=jnp.float32):
+    """Global pytree -> [n_padded] buffer."""
+    return _pack(jax.tree_util.tree_leaves(tree), (), spec, dtype)
+
+
+def _unpack(buf, spec: PackSpec, lead_shape):
+    outs = []
+    for shape, dt, size, off in zip(spec.shapes, spec.dtypes, spec.sizes,
+                                    spec.offsets):
+        leaf = buf[..., off:off + size].reshape(lead_shape + shape)
+        outs.append(leaf.astype(dt))
+    return jax.tree_util.tree_unflatten(spec.treedef, outs)
+
+
+def unpack_stacked(buf, spec: PackSpec):
+    """[m, n_padded] buffer -> stacked pytree."""
+    return _unpack(buf, spec, (buf.shape[0],))
+
+
+def unpack_global(buf, spec: PackSpec):
+    """[n_padded] buffer -> global pytree."""
+    return _unpack(buf, spec, ())
+
+
+def safa_aggregate_tree_packed(cache, trained, global_prev, *, picked,
+                               undrafted, deprecated, weights,
+                               spec: PackSpec = None) -> AggregationResult:
+    """Single-dispatch Eq. 6-8 over a whole model pytree.
+
+    Flattens the three operand trees into pack buffers (a fusion-friendly
+    concat, no kernel launches), runs ``safa_aggregate_packed`` exactly
+    once, and unpacks the results.  ``spec`` may be precomputed by callers
+    that aggregate every round (the layout only depends on the model).
+
+    The pack buffer computes in float32, so only float32 models are
+    accepted — other dtypes would silently diverge from the leaf-wise
+    path (which computes in each leaf's own dtype); use
+    ``safa_aggregate_tree`` for those."""
+    if spec is None:
+        spec = pack_spec(global_prev)
+    bad = [str(d) for d in spec.dtypes if d != jnp.float32]
+    if bad:
+        raise TypeError(
+            f'packed aggregation requires float32 leaves, got {bad}; use '
+            'the leaf-wise safa_aggregate_tree for mixed/low-precision '
+            'models')
+    pc = pack_stacked(cache, spec)
+    pt = pack_stacked(trained, spec)
+    pg = pack_global(global_prev, spec)
+    ng, nc = safa_aggregate_packed(pc, pt, pg, picked, undrafted, deprecated,
+                                   weights)
+    return AggregationResult(unpack_global(ng, spec), unpack_stacked(nc, spec))
+
+
 def quantize_tree(tree):
     """Quantise every leaf (for communication-compressed uploads)."""
     return jax.tree.map(lambda x: quantize(x.reshape(-1)), tree)
 
 
 def dequantize_tree(qtree, like):
-    flat_q, _ = jax.tree_util.tree_flatten(qtree, is_leaf=lambda x: isinstance(x, tuple))
     flat_l, treedef = jax.tree_util.tree_flatten(like)
+    # flatten qtree only down to ``like``'s structure so each (q, scales)
+    # pair stays intact — robust even when ``like`` itself contains tuples
+    flat_q = treedef.flatten_up_to(qtree)
     outs = [dequantize(q, s, n=l.size).reshape(l.shape).astype(l.dtype)
             for (q, s), l in zip(flat_q, flat_l)]
     return jax.tree_util.tree_unflatten(treedef, outs)

@@ -8,11 +8,21 @@ The fused kernel performs all three steps in one pass over parameter tiles
 held in VMEM: per tile it reads cache/trained once, applies the Eq. 6 masks,
 accumulates the Eq. 7 weighted sum, applies the Eq. 8 bypass write, and
 emits the new global tile + new cache tile.  HBM traffic drops from
-~5 model-sized reads + 3 writes to 2 reads + 2 writes (see EXPERIMENTS.md).
+~5 model-sized reads + 3 writes to 2 reads + 2 writes (measured by
+``benchmarks/kernels_bench.py``).
 
 Layout: parameters are flattened to [m, N] (m = clients).  Grid is over N
 tiles; each program instance sees the full clients column for its tile —
 VMEM footprint = 2 * m * TILE * 4B (+ masks), e.g. m=32, TILE=2048 -> 512 KiB.
+
+Two entry points share the kernel body:
+
+* ``safa_aggregate`` — one [m, N] matrix (the leaf-wise path pads and
+  launches this once per pytree leaf);
+* ``safa_aggregate_packed`` — a pre-padded [m, N] buffer holding the whole
+  model (see ``ops.pack_stacked``), launched exactly once per round with
+  ``input_output_aliases`` donating the cache buffer to the new-cache
+  output, so the server never holds two full cache copies.
 """
 from __future__ import annotations
 
@@ -47,22 +57,13 @@ def _kernel(cache_ref, trained_ref, global_ref, picked_ref, undrafted_ref,
     new_cache_ref[...] = jnp.where(undrafted, trained, c1)
 
 
-@functools.partial(jax.jit, static_argnames=('tile',))
-def safa_aggregate(cache, trained, global_prev, picked, undrafted, deprecated,
-                   weights, *, tile: int = DEFAULT_TILE):
-    """cache/trained: [m, N]; global_prev: [N]; masks: [m] bool;
-    weights: [m] f32.  Returns (new_global [N], new_cache [m, N])."""
-    m, n = cache.shape
-    pad = (-n) % tile
-    if pad:
-        cache = jnp.pad(cache, ((0, 0), (0, pad)))
-        trained = jnp.pad(trained, ((0, 0), (0, pad)))
-        global_prev = jnp.pad(global_prev, (0, pad))
-    np_ = cache.shape[1]
+def _launch(cache, trained, global_row, picked, undrafted, deprecated,
+            weights, *, tile: int, alias_cache: bool):
+    """Single fused dispatch over padded [m, N] operands (N % tile == 0)."""
+    m, np_ = cache.shape
     grid = (np_ // tile,)
-
     col = lambda arr: arr.reshape(m, 1)
-    out = pl.pallas_call(
+    return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
@@ -82,9 +83,44 @@ def safa_aggregate(cache, trained, global_prev, picked, undrafted, deprecated,
             jax.ShapeDtypeStruct((1, np_), cache.dtype),
             jax.ShapeDtypeStruct((m, np_), cache.dtype),
         ],
+        # the cache buffer is dead after the call: write new_cache in place
+        input_output_aliases={0: 1} if alias_cache else {},
         interpret=INTERPRET,
-    )(cache, trained, global_prev.reshape(1, -1), col(picked.astype(jnp.int32)),
+    )(cache, trained, global_row, col(picked.astype(jnp.int32)),
       col(undrafted.astype(jnp.int32)), col(deprecated.astype(jnp.int32)),
       col(weights.astype(jnp.float32)))
-    new_global, new_cache = out
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate(cache, trained, global_prev, picked, undrafted, deprecated,
+                   weights, *, tile: int = DEFAULT_TILE):
+    """cache/trained: [m, N]; global_prev: [N]; masks: [m] bool;
+    weights: [m] f32.  Returns (new_global [N], new_cache [m, N])."""
+    m, n = cache.shape
+    pad = (-n) % tile
+    if pad:
+        cache = jnp.pad(cache, ((0, 0), (0, pad)))
+        trained = jnp.pad(trained, ((0, 0), (0, pad)))
+        global_prev = jnp.pad(global_prev, (0, pad))
+    new_global, new_cache = _launch(
+        cache, trained, global_prev.reshape(1, -1), picked, undrafted,
+        deprecated, weights, tile=tile, alias_cache=False)
     return new_global[0, :n], new_cache[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed(cache, trained, global_prev, picked, undrafted,
+                          deprecated, weights, *, tile: int = DEFAULT_TILE):
+    """Whole-model variant: operands are pre-padded pack buffers
+    (cache/trained: [m, N], global_prev: [N], N % tile == 0; see
+    ``ops.pack_stacked``).  One kernel dispatch regardless of how many
+    pytree leaves the model has; the cache input is aliased to the
+    new-cache output.  Returns (new_global [N], new_cache [m, N])."""
+    if cache.shape[1] % tile:
+        raise ValueError(
+            f'packed buffer width {cache.shape[1]} not a multiple of '
+            f'tile={tile}; pack with pad_to=tile')
+    new_global, new_cache = _launch(
+        cache, trained, global_prev.reshape(1, -1), picked, undrafted,
+        deprecated, weights, tile=tile, alias_cache=True)
+    return new_global[0], new_cache
