@@ -1,0 +1,115 @@
+"""Fleet-engine benchmark: one vmapped-scan dispatch for a whole sweep vs
+looping the single-run scan engine.
+
+S = 16 quickstart-task configurations (crash rate x rng stream, with
+per-member fraction / lag tolerance) run three ways:
+
+* ``loop_scan``  — the pre-fleet path: one ``federation.run_safa``
+  (``engine='scan'``) call per cell, exactly what the sweep benchmarks did
+  before the fleet engine existed (per-cell schedule precompute + one scan
+  dispatch per cell);
+* ``sequential`` — ``run_sweep(engine='sequential')``: fleet-major schedule
+  precompute (one vectorised host pass), then S per-member scan dispatches;
+* ``fleet``      — ``run_sweep(engine='fleet')``: same precompute, all S
+  simulations in ONE ``jax.vmap``-over-``lax.scan`` dispatch with donated
+  fleet-major carries, the fleet axis sharded across host devices (this
+  module forces one XLA host device per CPU core — every op in the fleet
+  program is fleet-parallel, so the shards run with zero communication;
+  the per-cell loop has no batch axis to shard and cannot use the extra
+  cores).
+
+All three produce bit-identical per-member results (tests/test_fleet.py),
+so the rows differ only in wall clock: aggregate rounds/sec across the
+fleet.
+
+    PYTHONPATH=src python -m benchmarks.fleet_sweep
+"""
+from __future__ import annotations
+
+import itertools
+import os
+
+if 'xla_force_host_platform_device_count' not in os.environ.get('XLA_FLAGS', ''):
+    os.environ['XLA_FLAGS'] = (
+        os.environ.get('XLA_FLAGS', '')
+        + f' --xla_force_host_platform_device_count={os.cpu_count()}').strip()
+
+import jax
+
+from benchmarks.common import Timer, emit
+from repro.core import federation
+from repro.data import make_regression, partition
+from repro.data.tasks import regression_task
+from repro.fedsim import FLEnv, env_grid
+
+ROUNDS = 60
+BASE = dict(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
+            t_lim=830.0, seed=3)
+FRACTIONS = (0.5, 0.3, 1.0, 0.1)
+TAUS = (5, 2, 10, 1)
+
+
+def _quickstart_task():
+    env = FLEnv(**BASE)
+    x, y = make_regression()
+    data = partition(x, y, env.partition_sizes, batch_size=5, seed=1)
+    return regression_task(data, lr=1e-3, epochs=3)
+
+
+def _members():
+    """Fresh S=16 fleet (envs carry consumable rng state): crash rate x
+    draw stream, with fraction / lag tolerance cycling per member."""
+    envs = env_grid(BASE, crash_prob=(0.1, 0.3, 0.5, 0.7),
+                    draw_seed=(0, 1, 2, 3))
+    hyper = itertools.cycle(zip(FRACTIONS, TAUS))
+    return [federation.SweepMember(env=e, fraction=f, lag_tolerance=tau)
+            for e, (f, tau) in zip(envs, hyper)]
+
+
+def _time(fn, reps: int = 5) -> float:
+    """Steady-state seconds per whole-sweep run: best of ``reps`` timed
+    runs (schedule precompute included; jit caches warm after rep 0).
+    Min-of-reps rejects background-load noise on shared CPUs."""
+    fn()
+    times = []
+    for _ in range(reps):
+        with Timer() as t:
+            fn()
+        times.append(t.dt)
+    return min(times)
+
+
+def run():
+    task = _quickstart_task()
+    s_count = len(_members())
+    total_rounds = s_count * ROUNDS
+
+    def loop_scan():
+        h = None
+        for mem in _members():
+            h = federation.run_safa(task, mem.env, fraction=mem.fraction,
+                                    lag_tolerance=mem.lag_tolerance,
+                                    rounds=ROUNDS, eval_every=ROUNDS,
+                                    engine='scan')
+        jax.block_until_ready(h.final_global)
+
+    def sweep(engine):
+        hists = federation.run_sweep(task, _members(), rounds=ROUNDS,
+                                     eval_every=ROUNDS, engine=engine)
+        jax.block_until_ready(hists[-1].final_global)
+
+    secs = {
+        'loop_scan': _time(loop_scan),
+        'sequential': _time(lambda: sweep('sequential')),
+        'fleet': _time(lambda: sweep('fleet')),
+    }
+    base_rps = total_rounds / secs['loop_scan']
+    for name, s in secs.items():
+        rps = total_rounds / s
+        emit(f'fleet_sweep/{name}/rounds_per_sec', f'{rps:.1f}',
+             f'sec_per_sweep={s:.3f};S={s_count};rounds={ROUNDS};'
+             f'speedup={rps / base_rps:.2f}x')
+
+
+if __name__ == '__main__':
+    run()

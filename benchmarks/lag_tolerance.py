@@ -2,31 +2,47 @@
 
 Task 1 (regression) setup, tau in 1..10, C in {0.1, 0.5, 1.0},
 cr in {0.3, 0.7} — as in §III-D.
+
+The whole 36-cell grid runs as ONE fleet (``federation.run_sweep``): every
+cell shares the task and client population (same env seed => same
+partitions), differing only in crash rate / fraction / lag tolerance, so
+all 36 simulations execute in a single vmapped-scan dispatch per eval
+segment instead of paying a fresh dispatch per cell.
 """
 from __future__ import annotations
 
-import numpy as np
+import itertools
 
-from benchmarks.common import emit, make_env, run_protocol
+from benchmarks.common import emit, make_env
+from repro.core import federation
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
 
+CRS = (0.3, 0.7)
+CS = (0.1, 0.5, 1.0)
+TAUS = (1, 2, 3, 5, 7, 10)
+
 
 def run(rounds: int = 60, seed: int = 0):
+    grid = list(itertools.product(CRS, CS, TAUS))
+    members = [federation.SweepMember(
+        env=make_env('task1_regression', cr, seed=seed),
+        fraction=C, lag_tolerance=tau) for cr, C, tau in grid]
+
+    # every member shares the partition layout (same env seed), so one task
+    # serves the whole fleet
+    env0 = members[0].env
     x, y = make_regression(seed=seed)
-    for cr in (0.3, 0.7):
-        for C in (0.1, 0.5, 1.0):
-            for tau in (1, 2, 3, 5, 7, 10):
-                env = make_env('task1_regression', cr, seed=seed)
-                data = partition(x, y, env.partition_sizes, env.batch_size,
-                                 seed=seed)
-                task = regression_task(data, lr=1e-3, epochs=env.epochs)
-                h = run_protocol('safa', env, C, rounds, lag_tolerance=tau,
-                                 task=task, eval_every=rounds // 5)
-                emit(f'lag_tolerance/cr{cr}/C{C}/tau{tau}',
-                     f'{h.best_eval["loss"]:.4f}',
-                     f'sr={h.mean("sr"):.3f};eur={h.mean("eur"):.3f};'
-                     f'vv={h.mean("vv"):.3f}')
+    data = partition(x, y, env0.partition_sizes, env0.batch_size, seed=seed)
+    task = regression_task(data, lr=1e-3, epochs=env0.epochs)
+
+    hists = federation.run_sweep(task, members, rounds=rounds,
+                                 eval_every=rounds // 5)
+    for (cr, C, tau), h in zip(grid, hists):
+        emit(f'lag_tolerance/cr{cr}/C{C}/tau{tau}',
+             f'{h.best_eval["loss"]:.4f}',
+             f'sr={h.mean("sr"):.3f};eur={h.mean("eur"):.3f};'
+             f'vv={h.mean("vv"):.3f}')
 
 
 if __name__ == '__main__':

@@ -27,6 +27,12 @@ SECTIONS = {
     'selection_ablation': lambda full: selection_ablation.run(),
     'kernels': lambda full: kernels_bench.run(),
     'roofline': lambda full: roofline_table.run(),
+    # imported lazily: fleet_sweep forces one XLA host device per core at
+    # import, which must happen before jax initializes to take effect —
+    # run it standalone (python -m benchmarks.fleet_sweep) for the
+    # sharded-fleet numbers; here it runs unsharded on one device
+    'fleet_sweep': lambda full: __import__(
+        'benchmarks.fleet_sweep', fromlist=['run']).run(),
 }
 
 

@@ -1,0 +1,48 @@
+"""Docs smoke check: every import in the fenced ``python`` code blocks of
+README.md / docs/ARCHITECTURE.md must resolve against the installed tree.
+
+Catches the classic documentation failure — an example referencing a
+module or symbol that was renamed since the docs were written — without
+executing the examples themselves.
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOCS = ('README.md', 'docs/ARCHITECTURE.md')
+BLOCK = re.compile(r'```python\n(.*?)```', re.DOTALL)
+IMPORT = re.compile(r'^(?:from\s+[\w.]+\s+import\s+.+|import\s+[\w.]+.*)$')
+
+
+def import_lines(text: str):
+    for block in BLOCK.findall(text):
+        for line in block.splitlines():
+            line = line.strip()
+            if IMPORT.match(line):
+                yield line
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    failed = 0
+    for doc in DOCS:
+        lines = sorted(set(import_lines((root / doc).read_text())))
+        if not lines:
+            print(f'{doc}: WARNING — no python import lines found')
+            continue
+        for line in lines:
+            try:
+                exec(line, {})  # noqa: S102 — imports only, filtered above
+                print(f'{doc}: ok    {line}')
+            except Exception as e:
+                print(f'{doc}: FAIL  {line}  ({e})')
+                failed += 1
+    return 1 if failed else 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -21,6 +21,13 @@ pass and emit [rounds, m] mask schedules.  The numeric run then picks an
 * ``engine='loop'`` — the seed's per-round Python loop, kept as the
   reference mode (one dispatch per op per round, masks shuttled
   host->device every round); bit-identical to the scanned engine.
+
+Because every paper result is a *sweep* (seeds x crash rates x lag
+tolerances x fractions), schedules also stack fleet-major: ``FleetSchedule``
+holds S independent event processes as [S, rounds, m] mask tensors and
+``run_sweep`` executes all S simulations in one ``jax.vmap``-over-scan
+dispatch (``protocol.safa_run_fleet`` / ``fedavg_run_fleet``), bit-identical
+per member to S sequential ``engine='scan'`` runs.
 """
 from __future__ import annotations
 
@@ -123,6 +130,19 @@ class SafaSchedule:
             round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
 
 
+def _masked_var(values: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    """Population variance of ``values`` over ``mask`` along the last axis
+    (0.0 where the mask is empty).
+
+    Formulated as masked sums so the single-run and fleet-major schedule
+    precomputes reduce in the same order and agree bit for bit."""
+    n = mask.sum(axis=-1)
+    denom = np.maximum(n, 1)
+    mean = np.sum(np.where(mask, values, 0), axis=-1) / denom
+    dev = np.where(mask, (values - mean[..., None]) ** 2, 0.0)
+    return np.where(n > 0, np.sum(dev, axis=-1) / denom, 0.0)
+
+
 def precompute_safa_schedule(env: FLEnv, *, fraction: float,
                              lag_tolerance: int, rounds: int) -> SafaSchedule:
     """Run the SAFA timing/event state machine (Eq. 3 version bookkeeping,
@@ -152,8 +172,9 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
         up, dep, _ = protocol.classify_versions(v, gv, lag_tolerance,
                                                 committed_prev)
         sync = up | dep
-        # forced sync discards any pending straggler progress (futility)
-        wasted += float(np.sum(pending[sync] * work[sync]))
+        # forced sync discards any pending straggler progress (futility);
+        # masked-sum form so the fleet-major precompute reduces identically
+        wasted += float(np.sum(np.where(sync, pending * work, 0.0)))
         pending[sync] = 0.0
         v[sync] = gv
 
@@ -181,14 +202,13 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
         masks['undrafted'][i] = sel.undrafted
         masks['deprecated'][i] = dep
 
-        trained_v = base_versions[sel.committed]
         records.append(RoundRecord(
             round=t,
             round_len=min(env.t_lim, sel.quota_met_time),
             t_dist=t_dist,
             eur=float(sel.picked.sum()) / m,
             sr=float(sync.sum()) / m,
-            vv=float(np.var(trained_v)) if trained_v.size else 0.0,
+            vv=float(_masked_var(base_versions, sel.committed)),
             n_picked=int(sel.picked.sum()),
             n_committed=int(sel.committed.sum()),
             n_crashed=int(crashed.sum()),
@@ -237,6 +257,27 @@ def _record_eval(hist: History, rec: RoundRecord, task: Task, global_w):
         hist.best_eval = rec.eval
 
 
+def _scan_segments(task: Task, hist: History, ns: _NumericState, dev,
+                   weights, records, evals, *, safa: bool, local_train_fn,
+                   use_kernel=False):
+    """Drive one numeric run through the scan engine: one donated-carry
+    dispatch per eval segment.  Shared by ``run_safa``, ``run_fedavg`` and
+    ``run_sweep(engine='sequential')`` so the three stay step-identical."""
+    start = 0
+    for stop in evals:
+        seg = jax.tree.map(lambda a: a[start:stop], dev)
+        if safa:
+            ns.global_w, ns.local_w, ns.cache = protocol.safa_run_scan(
+                ns.global_w, ns.local_w, ns.cache, seg, weights,
+                local_train_fn=local_train_fn, use_kernel=use_kernel)
+        else:
+            ns.global_w, ns.local_w = protocol.fedavg_run_scan(
+                ns.global_w, ns.local_w, seg, weights,
+                local_train_fn=local_train_fn)
+        _record_eval(hist, records[stop - 1], task, ns.global_w)
+        start = stop
+
+
 def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
              lag_tolerance: int, rounds: int, eval_every: int = 10,
              numeric: bool = True, use_kernel=False,
@@ -257,15 +298,9 @@ def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
 
     evals = _eval_rounds(rounds, eval_every)
     if engine == 'scan':
-        dev = sched.to_device()
-        start = 0
-        for stop in evals:
-            seg = jax.tree.map(lambda a: a[start:stop], dev)
-            ns.global_w, ns.local_w, ns.cache = protocol.safa_run_scan(
-                ns.global_w, ns.local_w, ns.cache, seg, weights,
-                local_train_fn=train_fn, use_kernel=use_kernel)
-            _record_eval(hist, sched.records[stop - 1], task, ns.global_w)
-            start = stop
+        _scan_segments(task, hist, ns, sched.to_device(), weights,
+                       sched.records, evals, safa=True,
+                       local_train_fn=train_fn, use_kernel=use_kernel)
     elif engine == 'loop':
         for t in range(1, rounds + 1):
             i = t - 1
@@ -393,15 +428,9 @@ def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
     weights = jnp.asarray(env.weights)
     evals = _eval_rounds(rounds, eval_every)
     if engine == 'scan':
-        dev = sched.to_device()
-        start = 0
-        for stop in evals:
-            seg = jax.tree.map(lambda a: a[start:stop], dev)
-            ns.global_w, ns.local_w = protocol.fedavg_run_scan(
-                ns.global_w, ns.local_w, seg, weights,
-                local_train_fn=task.local_train)
-            _record_eval(hist, sched.records[stop - 1], task, ns.global_w)
-            start = stop
+        _scan_segments(task, hist, ns, sched.to_device(), weights,
+                       sched.records, evals, safa=False,
+                       local_train_fn=task.local_train)
     elif engine == 'loop':
         for t in range(1, rounds + 1):
             i = t - 1
@@ -420,6 +449,346 @@ def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
 
 def run_fedcs(task, env, **kw) -> History:
     return run_fedavg(task, env, fedcs=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Fleet engine: batched multi-seed / multi-config sweeps
+# ---------------------------------------------------------------------------
+#
+# A sweep is S independent simulations of the same protocol over one shared
+# Task.  Each member's event process is precomputed exactly as for a single
+# run, the resulting [rounds, m] schedules stack into [S, rounds, m]
+# tensors, and all S numeric runs execute as ONE vmapped-scan dispatch
+# (protocol.safa_run_fleet / fedavg_run_fleet) — bit-identical per member
+# to S sequential engine='scan' runs, but paying one dispatch, one compile
+# and one fleet-major set of buffers for the whole grid.
+
+@dataclasses.dataclass
+class SweepMember:
+    """One simulation in a fleet sweep: its own environment + protocol
+    hyper-parameters.  All members of a sweep share the Task (model shapes
+    and client data), so their envs must agree on ``m`` — build them from
+    one base config (``fedsim.env_grid``), varying ``crash_prob``,
+    ``draw_seed``, ``t_lim``, ... per member."""
+    env: FLEnv
+    fraction: float = 0.5
+    lag_tolerance: int = 5      # SAFA only
+    seed: int = 0               # numeric-init (and sync-selection) seed
+
+
+class _FleetStack:
+    """Shared fleet-major stacking machinery.  Subclasses set ``MASKS``
+    (the [S, rounds, m] field names, first one authoritative for shapes)
+    and ``_MEMBER_CLS`` (the single-run schedule type)."""
+    MASKS: tuple = ()
+    _MEMBER_CLS = None
+
+    @property
+    def size(self) -> int:
+        return getattr(self, self.MASKS[0]).shape[0]
+
+    @property
+    def rounds(self) -> int:
+        return getattr(self, self.MASKS[0]).shape[1]
+
+    @classmethod
+    def stack(cls, members: list):
+        """Stack S single-run schedules (all with the same rounds and m)."""
+        if len({getattr(s, cls.MASKS[0]).shape for s in members}) != 1:
+            raise ValueError('fleet members must share (rounds, m)')
+        return cls(**{k: np.stack([getattr(s, k) for s in members])
+                      for k in cls.MASKS},
+                   records=[s.records for s in members],
+                   futility=np.array([s.futility for s in members]))
+
+    def member(self, s: int):
+        """Member s's schedule, identical to its own precompute."""
+        return self._MEMBER_CLS(
+            **{k: getattr(self, k)[s] for k in self.MASKS},
+            records=self.records[s], futility=float(self.futility[s]))
+
+    def _round_idx(self):
+        """[S, rounds] per-member round indices for to_device()."""
+        return jnp.asarray(np.broadcast_to(
+            np.arange(1, self.rounds + 1, dtype=np.int32),
+            (self.size, self.rounds)))
+
+
+@dataclasses.dataclass
+class FleetSchedule(_FleetStack):
+    """S independent SAFA event processes stacked fleet-major.
+
+    Mask tensors are [S, rounds, m]; ``records[s]`` / ``futility[s]`` hold
+    member s's timing records and futility ratio, exactly as
+    ``precompute_safa_schedule`` produced them."""
+    sync: np.ndarray
+    committed: np.ndarray
+    picked: np.ndarray
+    undrafted: np.ndarray
+    deprecated: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    MASKS = ('sync', 'committed', 'picked', 'undrafted', 'deprecated')
+    _MEMBER_CLS = SafaSchedule
+
+    def to_device(self) -> protocol.RoundSchedule:
+        """One host->device hop for the whole fleet ([S, rounds, m] masks,
+        [S, rounds] round indices)."""
+        return protocol.RoundSchedule(
+            sync=jnp.asarray(self.sync), completed=jnp.asarray(self.committed),
+            picked=jnp.asarray(self.picked),
+            undrafted=jnp.asarray(self.undrafted),
+            deprecated=jnp.asarray(self.deprecated),
+            round_idx=self._round_idx())
+
+
+@dataclasses.dataclass
+class SyncFleetSchedule(_FleetStack):
+    """FedAvg/FedCS counterpart of ``FleetSchedule`` ([S, rounds, m])."""
+    selected: np.ndarray
+    completed: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    MASKS = ('selected', 'completed')
+    _MEMBER_CLS = SyncSchedule
+
+    def to_device(self) -> protocol.SyncSchedule:
+        return protocol.SyncSchedule(
+            selected=jnp.asarray(self.selected),
+            completed=jnp.asarray(self.completed),
+            round_idx=self._round_idx())
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *a: jnp.stack(a), *trees)
+
+
+def _tree_member(tree, s: int):
+    return jax.tree.map(lambda a: a[s], tree)
+
+
+def precompute_fleet_schedule(members, *, rounds: int) -> FleetSchedule:
+    """Run S SAFA event state machines in ONE fleet-major host pass.
+
+    Bit-identical to stacking S independent ``precompute_safa_schedule``
+    calls (regression-tested): each member's crash/straggler draws come
+    from its own env rng, consumed exactly as a standalone precompute
+    would, while the version bookkeeping and CFCFM selection run
+    vectorised on [S, m] arrays (``selection.cfcfm_batch``).  This is the
+    host-side counterpart of the vmapped numeric engine — without it the
+    per-member python state machine dominates sweep wall-clock."""
+    s_count = len(members)
+    envs = [mem.env for mem in members]
+    m = envs[0].m
+    if any(e.m != m for e in envs):
+        raise ValueError('fleet members must share the client count m')
+    fraction = np.array([mem.fraction for mem in members], float)
+    quota = np.maximum(1, np.rint(fraction * m).astype(int))
+    lag = np.array([mem.lag_tolerance for mem in members])[:, None]
+    t_lim = np.array([e.t_lim for e in envs])
+    t_updown = np.array([e.t_updown for e in envs])[:, None]
+    msize = np.array([e.model_size_mb for e in envs])
+    server_bw = np.array([e.server_bw_mbps for e in envs])
+    full_tt = np.stack([e.full_train_time() for e in envs])
+    work = np.stack([e.n_batches * e.epochs for e in envs])
+    draws = [e.draw_rounds(rounds) for e in envs]
+    crashed_all = np.stack([d[0] for d in draws])     # [S, rounds, m]
+    cfrac_all = np.stack([d[1] for d in draws])
+
+    v = np.zeros((s_count, m), dtype=int)
+    committed_prev = np.ones((s_count, m), bool)
+    picked_prev = np.zeros((s_count, m), bool)
+    pending = np.zeros((s_count, m))
+    wasted = np.zeros(s_count)
+    performed = np.zeros(s_count)
+    masks = {k: np.zeros((s_count, rounds, m), bool)
+             for k in FleetSchedule.MASKS}
+    # per-round [S] / [S, m] intermediates; record stats vectorise over
+    # rounds after the loop (the loop itself stays O(state-machine) only)
+    t_dist_l, quota_met_l, base_v_l = [], [], []
+
+    for t in range(1, rounds + 1):
+        gv = t - 1
+        staleness = gv - v
+        dep = ~committed_prev & (staleness >= lag)
+        sync = committed_prev | dep
+        wasted += np.sum(np.where(sync, pending * work, 0.0), axis=-1)
+        pending = np.where(sync, 0.0, pending)
+        v = np.where(sync, gv, v)
+
+        crashed, cfrac = crashed_all[:, t - 1], cfrac_all[:, t - 1]
+        remaining = 1.0 - pending
+        t_train = remaining * full_tt
+        t_dist = sync.sum(axis=-1) * msize * 8.0 / server_bw
+        arrival = t_dist[:, None] + t_updown * (1 + sync.astype(float)) \
+            + t_train
+        completed = ~crashed
+        arrival = np.where(completed, arrival, np.inf)
+        performed += np.sum(np.where(completed, remaining,
+                                     cfrac * remaining) * work, axis=-1)
+        base_versions = v.copy()
+
+        sel = selection.cfcfm_batch(arrival, completed, picked_prev,
+                                    fraction, t_lim, quota=quota)
+        pending = np.where(crashed,
+                           np.minimum(pending + cfrac * remaining, 0.999),
+                           pending)
+        pending = np.where(sel.committed, 0.0, pending)
+        v = np.where(sel.committed, t, v)
+
+        i = t - 1
+        masks['sync'][:, i] = sync
+        masks['committed'][:, i] = sel.committed
+        masks['picked'][:, i] = sel.picked
+        masks['undrafted'][:, i] = sel.undrafted
+        masks['deprecated'][:, i] = dep
+        t_dist_l.append(t_dist)
+        quota_met_l.append(sel.quota_met_time)
+        base_v_l.append(base_versions)
+        committed_prev = sel.committed
+        picked_prev = sel.picked
+
+    # bulk-convert stat tensors to python scalars once (.tolist()) rather
+    # than casting S*rounds*9 numpy scalars one by one
+    t_dist_a = np.stack(t_dist_l, axis=1).tolist()            # [S][rounds]
+    round_len = np.minimum(t_lim[:, None],
+                           np.stack(quota_met_l, axis=1)).tolist()
+    n_picked = masks['picked'].sum(axis=-1).tolist()
+    n_committed = masks['committed'].sum(axis=-1).tolist()
+    n_crashed = crashed_all.sum(axis=-1).tolist()
+    n_sync = masks['sync'].sum(axis=-1).tolist()
+    vv = _masked_var(np.stack(base_v_l, axis=1),
+                     masks['committed']).tolist()
+    records = [[RoundRecord(
+        round=i + 1,
+        round_len=round_len[s][i],
+        t_dist=t_dist_a[s][i],
+        eur=n_picked[s][i] / m,
+        sr=n_sync[s][i] / m,
+        vv=vv[s][i],
+        n_picked=n_picked[s][i],
+        n_committed=n_committed[s][i],
+        n_crashed=n_crashed[s][i],
+    ) for i in range(rounds)] for s in range(s_count)]
+    return FleetSchedule(records=records,
+                         futility=wasted / np.maximum(performed, 1e-9),
+                         **masks)
+
+
+def run_sweep(task: Optional[Task], members, *, rounds: int,
+              proto: str = 'safa', eval_every: int = 10,
+              numeric: bool = True, use_kernel=False,
+              engine: str = 'fleet', shard: bool = True) -> list:
+    """Run S = len(members) simulations of one protocol as a batched fleet.
+
+    Returns one ``History`` per member, in order.  ``engine='fleet'``
+    (default) executes all members in a single vmapped-scan dispatch per
+    eval segment; ``engine='sequential'`` drives the same precomputed
+    schedules through S per-member ``engine='scan'`` runs (the reference
+    path and the benchmark baseline) — both produce bit-identical
+    per-member results.
+
+    ``proto`` is 'safa', 'fedavg' or 'fedcs'; one sweep runs one protocol
+    (members of a fleet share a compiled program).
+
+    When multiple JAX devices are visible and S divides evenly, ``shard``
+    (default True) splits the fleet axis across them — every op in the
+    scanned program is fleet-parallel, so the shards run with zero
+    communication (on CPU, ``--xla_force_host_platform_device_count=N``
+    turns N cores into N such devices).
+
+    Per-member bit-identity with sequential runs holds when the Task's
+    math lowers batch-size independently — true for the shipped
+    regression/SVM tasks, whose predictions are elementwise-mul+reduce
+    (see ``data/tasks.py:_reg_pred``).  Tasks built on ``dot_general``
+    (e.g. the CNN's matmuls/convs) are only guaranteed numerically
+    equivalent, not bit-equal, under the fleet vmap.
+    """
+    if proto not in ('safa', 'fedavg', 'fedcs'):
+        raise ValueError(
+            f'unknown proto {proto!r} (want "safa", "fedavg" or "fedcs")')
+    if engine not in ('fleet', 'sequential'):
+        raise ValueError(
+            f'unknown engine {engine!r} (want "fleet" or "sequential")')
+    if not members:
+        raise ValueError('empty sweep')
+    m = members[0].env.m
+    if any(mem.env.m != m for mem in members):
+        raise ValueError('fleet members must share the client count m')
+
+    if proto == 'safa':
+        fleet = precompute_fleet_schedule(members, rounds=rounds)
+    else:
+        fleet = SyncFleetSchedule.stack([
+            precompute_sync_schedule(mem.env, fraction=mem.fraction,
+                                     rounds=rounds, seed=mem.seed,
+                                     fedcs=proto == 'fedcs')
+            for mem in members])
+    hists = [History(proto, records=fleet.records[s],
+                     futility=float(fleet.futility[s]))
+             for s in range(fleet.size)]
+    if not numeric:
+        return hists
+
+    weights = jnp.asarray(np.stack([mem.env.weights for mem in members]))
+    evals = _eval_rounds(rounds, eval_every)
+
+    if engine == 'fleet':
+        # one init per distinct seed (vmapping init_global is NOT bit-stable,
+        # so inits stay per-member calls), broadcast fleet-major in one op
+        init = {}
+        for mem in members:
+            if mem.seed not in init:
+                init[mem.seed] = task.init_global(jax.random.PRNGKey(mem.seed))
+        g = _stack_trees([init[mem.seed] for mem in members])
+
+        def bcast():
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[:, None],
+                                           (a.shape[0], m) + a.shape[1:]), g)
+
+        l = bcast()
+        c = bcast() if proto == 'safa' else None
+        dev = fleet.to_device()
+        ndev = len(jax.devices())
+        if shard and ndev > 1 and len(members) % ndev == 0:
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec
+            mesh = Mesh(np.asarray(jax.devices()), ('fleet',))
+            sharding = NamedSharding(mesh, PartitionSpec('fleet'))
+            g, l, c, dev, weights = jax.device_put((g, l, c, dev, weights),
+                                                   sharding)
+        start = 0
+        for stop in evals:
+            seg = jax.tree.map(lambda a: a[:, start:stop], dev)
+            if proto == 'safa':
+                g, l, c = protocol.safa_run_fleet(
+                    g, l, c, seg, weights, local_train_fn=task.local_train,
+                    use_kernel=use_kernel)
+            else:
+                g, l = protocol.fedavg_run_fleet(
+                    g, l, seg, weights, local_train_fn=task.local_train)
+            # one host gather per leaf: slicing members out of a (possibly
+            # device-sharded) fleet array S times is far slower than one
+            # fetch + S host slices
+            g_host = jax.tree.map(np.asarray, g)
+            for s, hist in enumerate(hists):
+                _record_eval(hist, fleet.records[s][stop - 1], task,
+                             _tree_member(g_host, s))
+            start = stop
+        for s, hist in enumerate(hists):
+            hist.final_global = _tree_member(g_host, s)
+    else:
+        for s, (mem, hist) in enumerate(zip(members, hists)):
+            ns = _NumericState(task, m, mem.seed)
+            _scan_segments(task, hist, ns, fleet.member(s).to_device(),
+                           jnp.asarray(mem.env.weights), fleet.records[s],
+                           evals, safa=proto == 'safa',
+                           local_train_fn=task.local_train,
+                           use_kernel=use_kernel)
+            hist.final_global = ns.global_w
+    return hists
 
 
 def run_local(task: Optional[Task], env: FLEnv, *, fraction: float,

@@ -182,17 +182,9 @@ class SyncSchedule(NamedTuple):
     round_idx: Any
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
-                   static_argnames=('local_train_fn', 'use_kernel'))
-def safa_run_scan(global_w, local_w, cache, schedule: RoundSchedule, weights,
-                  *, local_train_fn, use_kernel=False):
-    """Run ``k = len(schedule.round_idx)`` SAFA rounds as one compiled scan.
-
-    Bit-identical to ``k`` per-round ``safa_round`` dispatches: the scan
-    body is the same trace, compiled once.  The carry is donated, so the
-    caller's buffers are reused in place across the whole run.
-    Returns (new_global, new_local, new_cache).
-    """
+def _safa_scan(global_w, local_w, cache, schedule, weights, local_train_fn,
+               use_kernel):
+    """Unjitted scan body shared by the single-run and fleet engines."""
     def step(carry, sched):
         g, l, c = carry
         out = safa_round(
@@ -207,12 +199,48 @@ def safa_run_scan(global_w, local_w, cache, schedule: RoundSchedule, weights,
     return carry
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1),
-                   static_argnames=('local_train_fn',))
-def fedavg_run_scan(global_w, local_w, schedule: SyncSchedule, weights, *,
-                    local_train_fn):
-    """FedAvg counterpart of ``safa_run_scan``: k synchronous rounds in one
-    dispatch with the (global, local) carry donated."""
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=('local_train_fn', 'use_kernel'))
+def safa_run_scan(global_w, local_w, cache, schedule: RoundSchedule, weights,
+                  *, local_train_fn, use_kernel=False):
+    """Run ``k = len(schedule.round_idx)`` SAFA rounds as one compiled scan.
+
+    Bit-identical to ``k`` per-round ``safa_round`` dispatches: the scan
+    body is the same trace, compiled once.  The carry is donated, so the
+    caller's buffers are reused in place across the whole run.
+    Returns (new_global, new_local, new_cache).
+    """
+    return _safa_scan(global_w, local_w, cache, schedule, weights,
+                      local_train_fn, use_kernel)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=('local_train_fn', 'use_kernel'))
+def safa_run_fleet(global_w, local_w, cache, schedule: RoundSchedule, weights,
+                   *, local_train_fn, use_kernel=False):
+    """Run S independent SAFA simulations as ONE vmapped-scan dispatch.
+
+    Every operand gains a leading fleet axis: global_w [S, ...] leaves,
+    local_w/cache [S, m, ...], schedule fields [S, k, m] (round_idx [S, k]),
+    weights [S, m].  Fleet members may differ in crash draws, selection
+    masks, lag tolerance, fraction and aggregation weights — anything the
+    precomputed schedule captures — but share the Task (model shapes and
+    client data) and round count.
+
+    Per member this computes exactly the ``safa_run_scan`` program; the
+    regression tests assert per-run bit-identity against S sequential scan
+    runs.  The whole [S, ...] carry is donated, so sweeping S configs costs
+    one dispatch and no extra state copies.  Under ``use_kernel='packed'``
+    the per-round pallas_call is vmapped into a batched-grid launch (still
+    a single kernel dispatch per round for the whole fleet).
+    Returns (new_global, new_local, new_cache), each fleet-stacked.
+    """
+    run = lambda g, l, c, s, w: _safa_scan(g, l, c, s, w, local_train_fn,
+                                           use_kernel)
+    return jax.vmap(run)(global_w, local_w, cache, schedule, weights)
+
+
+def _fedavg_scan(global_w, local_w, schedule, weights, local_train_fn):
     def step(carry, sched):
         g, l = carry
         ng, nl = fedavg_round(
@@ -223,6 +251,26 @@ def fedavg_run_scan(global_w, local_w, schedule: SyncSchedule, weights, *,
 
     carry, _ = jax.lax.scan(step, (global_w, local_w), schedule)
     return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=('local_train_fn',))
+def fedavg_run_scan(global_w, local_w, schedule: SyncSchedule, weights, *,
+                    local_train_fn):
+    """FedAvg counterpart of ``safa_run_scan``: k synchronous rounds in one
+    dispatch with the (global, local) carry donated."""
+    return _fedavg_scan(global_w, local_w, schedule, weights, local_train_fn)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=('local_train_fn',))
+def fedavg_run_fleet(global_w, local_w, schedule: SyncSchedule, weights, *,
+                     local_train_fn):
+    """FedAvg/FedCS counterpart of ``safa_run_fleet``: S synchronous
+    simulations (schedule fields [S, k, m], weights [S, m]) in one vmapped
+    scan with the fleet-stacked (global, local) carry donated."""
+    run = lambda g, l, s, w: _fedavg_scan(g, l, s, w, local_train_fn)
+    return jax.vmap(run)(global_w, local_w, schedule, weights)
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,63 @@ def cfcfm(arrival: np.ndarray, completed: np.ndarray, picked_prev: np.ndarray,
     return SelectionResult(picked, undrafted, committed, min(quota_met, deadline))
 
 
+@dataclasses.dataclass
+class BatchSelectionResult:
+    """Fleet-batched ``SelectionResult``: [S, m] masks, [S] times."""
+    picked: np.ndarray
+    undrafted: np.ndarray
+    committed: np.ndarray
+    quota_met_time: np.ndarray
+
+
+def cfcfm_batch(arrival: np.ndarray, completed: np.ndarray,
+                picked_prev: np.ndarray, fraction: np.ndarray,
+                deadline: np.ndarray, *,
+                quota: Optional[np.ndarray] = None) -> BatchSelectionResult:
+    """CFCFM for a whole fleet in one vectorised pass.
+
+    arrival/completed/picked_prev: [S, m]; fraction/deadline: [S] (or
+    scalars).  Row s is bit-identical to ``cfcfm(arrival[s], ...)`` — the
+    fleet schedule precompute relies on this (regression-tested).  The
+    per-member "take arrivals in order up to quota" scan becomes a rank
+    comparison: a client is picked in phase 1 iff it is eligible and its
+    stable arrival rank among eligible clients beats the quota.
+
+    ``quota`` (the [S] int result of ``max(1, round(fraction * m))``) may
+    be precomputed by per-round callers; it only depends on the fractions.
+    """
+    s, m = arrival.shape
+    deadline = np.broadcast_to(np.asarray(deadline, float), (s,))
+    if quota is None:
+        fraction = np.broadcast_to(np.asarray(fraction, float), (s,))
+        # np.rint rounds half-to-even exactly like the scalar path's round()
+        quota = np.maximum(1, np.rint(fraction * m).astype(int))
+    committed = completed & (arrival <= deadline[:, None])
+
+    def rank(eligible):
+        """Stable arrival rank (ineligible clients rank last)."""
+        order = np.argsort(np.where(eligible, arrival, np.inf), axis=-1,
+                           kind='stable')
+        return np.argsort(order, axis=-1, kind='stable')  # inverse perm
+
+    # Phase 1: priority clients (not picked last round), in arrival order.
+    prio = committed & ~picked_prev
+    picked = prio & (rank(prio) < quota[:, None])
+    # Phase 2: fill remaining quota from the rest (picked last round).
+    short = quota - picked.sum(axis=-1)
+    rest = committed & ~picked
+    picked = picked | (rest & (rank(rest) < short[:, None]))
+
+    undrafted = committed & ~picked
+    picked_max = np.max(np.where(picked, arrival, -np.inf), axis=-1)
+    committed_max = np.max(np.where(committed, arrival, -np.inf), axis=-1)
+    quota_met = np.where(
+        (short <= 0) & picked.any(axis=-1), picked_max,
+        np.where(committed.any(axis=-1), committed_max, deadline))
+    return BatchSelectionResult(picked, undrafted, committed,
+                                np.minimum(quota_met, deadline))
+
+
 def fedavg_select(rng: np.random.Generator, m: int, fraction: float) -> np.ndarray:
     """Random pre-training selection (FedAvg)."""
     quota = max(1, int(round(fraction * m)))

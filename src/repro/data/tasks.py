@@ -34,6 +34,10 @@ class SupervisedTask(Task):
         self._x = jnp.asarray(data.x)   # [m, nb, B, ...]
         self._y = jnp.asarray(data.y)
         self._train_jit = jax.jit(self._train_all)
+        self._test_x = jnp.asarray(data.test_x)
+        self._test_y = jnp.asarray(data.test_y)
+        self._eval_jit = jax.jit(
+            lambda p, ex, ey: (self.loss_fn(p, ex, ey), self.acc_fn(p, ex, ey)))
 
     def init_global(self, key):
         return self.init_fn(key)
@@ -59,12 +63,8 @@ class SupervisedTask(Task):
         return self._train_jit(stacked_params)
 
     def evaluate(self, global_params) -> dict:
-        x = jnp.asarray(self.data.test_x)
-        y = jnp.asarray(self.data.test_y)
-        return {
-            'loss': float(self.loss_fn(global_params, x, y)),
-            'acc': float(self.acc_fn(global_params, x, y)),
-        }
+        loss, acc = self._eval_jit(global_params, self._test_x, self._test_y)
+        return {'loss': float(loss), 'acc': float(acc)}
 
 
 # ---------------------------------------------------------------------------
@@ -77,7 +77,12 @@ def _reg_init(key, d=13):
 
 
 def _reg_pred(p, x):
-    return x @ p['w'] + p['b']
+    # elementwise-mul + reduce rather than x @ w: dot_general's CPU lowering
+    # re-tiles the contraction as batch dims fold in, so a fleet-vmapped run
+    # would drift from single-run bits; this form lowers to a reduction
+    # whose accumulation order is batch-size independent (test_fleet asserts
+    # per-member bit-identity of safa_run_fleet vs sequential scan runs).
+    return jnp.sum(x * p['w'], axis=-1) + p['b']
 
 
 def _reg_loss(p, x, y):
@@ -162,7 +167,8 @@ def _svm_init(key, d=35):
 
 
 def _svm_margin(p, x):
-    return x @ p['w'] + p['b']
+    # elementwise-mul + reduce for fleet-vmap bit-stability (see _reg_pred)
+    return jnp.sum(x * p['w'], axis=-1) + p['b']
 
 
 def _svm_loss(p, x, y, l2=1e-4):

@@ -14,7 +14,8 @@ synchronous protocols discard partial progress on re-selection.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import itertools
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -32,6 +33,12 @@ class FLEnv:
     server_bw_mbps: float = 198.0   # ~0.404 s per model copy (paper tables)
     lambda_perf: float = 1.0
     seed: int = 0
+    # Separate stream for the per-round crash draws.  ``None`` keeps the
+    # seed's single-stream behaviour (round draws continue the partition/
+    # perf stream); an int re-seeds only the round draws, so a multi-seed
+    # fleet shares one population (same partitions, same task data) while
+    # each member sees an independent crash/straggler history.
+    draw_seed: Optional[int] = None
 
     def __post_init__(self):
         rng = np.random.default_rng(self.seed)
@@ -41,7 +48,8 @@ class FLEnv:
         self.n_batches = np.maximum(1, -(-self.partition_sizes // self.batch_size))
         # performance: batches per second, Exp(lambda); floor to avoid /0
         self.perf = np.maximum(rng.exponential(1.0 / self.lambda_perf, self.m), 1e-3)
-        self._rng = rng
+        self._rng = rng if self.draw_seed is None \
+            else np.random.default_rng(self.draw_seed)
 
     # -- per-client constants ------------------------------------------------
     @property
@@ -80,3 +88,28 @@ class FLEnv:
         process bit for bit."""
         u = self._rng.random((rounds, 2, self.m))
         return u[:, 0, :] < self.crash_prob, u[:, 1, :]
+
+
+def env_grid(base: dict, **axes: Sequence) -> list:
+    """Cartesian grid of environments for fleet sweeps.
+
+    ``base`` holds the shared ``FLEnv`` kwargs; each keyword argument names a
+    constructor field and a sequence of values, e.g.::
+
+        env_grid(dict(m=5, dataset_size=506, batch_size=5, epochs=3,
+                      t_lim=830.0, seed=3),
+                 crash_prob=(0.3, 0.7), draw_seed=range(4))
+
+    yields 8 environments sweeping crash rate x rng stream.  Axes vary in
+    row-major order (last axis fastest), so the member index of a config is
+    predictable.  Keep ``seed``/``m``/``dataset_size`` in ``base`` when the
+    fleet must share one client population (``federation.run_sweep``
+    requires a shared Task, hence shared partitions).
+    """
+    keys = list(axes)
+    envs = []
+    for combo in itertools.product(*(axes[k] for k in keys)):
+        kw = dict(base)
+        kw.update(zip(keys, combo))
+        envs.append(FLEnv(**kw))
+    return envs

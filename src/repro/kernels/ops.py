@@ -8,6 +8,16 @@ Two tree-level aggregation paths are exposed:
   [m, N_total] buffer (ragged leaves laid out at per-leaf offsets, padded
   once at the end to a tile multiple), so Eq. 6-8 runs as exactly one
   ``pallas_call`` per round regardless of model depth.
+
+For fleet-major callers the pack gains a leading fleet axis:
+``safa_aggregate_tree_packed_fleet`` flattens [S, m, ...] stacked trees into
+one [S, m, N_total] buffer and aggregates all S independent servers in a
+single explicit fleet-grid dispatch (``safa_aggregate_packed_fleet``).
+Note the vmapped fleet *engine* does not call this entry point: inside
+``protocol.safa_run_fleet`` the per-round ``safa_aggregate_packed`` call is
+batched by JAX's vmap rule into an equivalent batched-grid launch.  Both
+kernels share one Eq. 6-8 body (``safa_aggregate._agg_math``) and are
+regression-tested against each other.
 """
 from __future__ import annotations
 
@@ -20,13 +30,17 @@ import jax.numpy as jnp
 from repro.core.protocol import AggregationResult
 from repro.kernels.comm_quant import dequantize, quantize
 from repro.kernels.safa_aggregate import (DEFAULT_TILE, safa_aggregate,
-                                          safa_aggregate_packed)
+                                          safa_aggregate_packed,
+                                          safa_aggregate_packed_fleet)
 from repro.kernels.swa_attention import swa_attention
 
-__all__ = ['safa_aggregate', 'safa_aggregate_packed', 'safa_aggregate_tree',
-           'safa_aggregate_tree_packed', 'quantize', 'dequantize',
+__all__ = ['safa_aggregate', 'safa_aggregate_packed',
+           'safa_aggregate_packed_fleet', 'safa_aggregate_tree',
+           'safa_aggregate_tree_packed', 'safa_aggregate_tree_packed_fleet',
+           'quantize', 'dequantize',
            'swa_attention', 'quantize_tree', 'dequantize_tree',
            'PackSpec', 'pack_spec', 'pack_stacked', 'pack_global',
+           'pack_fleet', 'unpack_fleet',
            'unpack_stacked', 'unpack_global', 'comm_bytes',
            'count_pallas_calls']
 
@@ -147,6 +161,20 @@ def unpack_global(buf, spec: PackSpec):
     return _unpack(buf, spec, ())
 
 
+def pack_fleet(tree, spec: PackSpec, *, dtype=jnp.float32):
+    """Fleet-stacked pytree ([S, m, ...] leaves) -> [S, m, n_padded] buffer.
+
+    Fleet-stacked *global* trees ([S, ...] leaves) pack with
+    ``pack_stacked`` — the leading axis is just S instead of m."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return _pack(leaves, leaves[0].shape[:2], spec, dtype)
+
+
+def unpack_fleet(buf, spec: PackSpec):
+    """[S, m, n_padded] buffer -> fleet-stacked pytree."""
+    return _unpack(buf, spec, buf.shape[:2])
+
+
 def safa_aggregate_tree_packed(cache, trained, global_prev, *, picked,
                                undrafted, deprecated, weights,
                                spec: PackSpec = None) -> AggregationResult:
@@ -163,18 +191,45 @@ def safa_aggregate_tree_packed(cache, trained, global_prev, *, picked,
     ``safa_aggregate_tree`` for those."""
     if spec is None:
         spec = pack_spec(global_prev)
-    bad = [str(d) for d in spec.dtypes if d != jnp.float32]
-    if bad:
-        raise TypeError(
-            f'packed aggregation requires float32 leaves, got {bad}; use '
-            'the leaf-wise safa_aggregate_tree for mixed/low-precision '
-            'models')
+    _require_f32(spec)
     pc = pack_stacked(cache, spec)
     pt = pack_stacked(trained, spec)
     pg = pack_global(global_prev, spec)
     ng, nc = safa_aggregate_packed(pc, pt, pg, picked, undrafted, deprecated,
                                    weights)
     return AggregationResult(unpack_global(ng, spec), unpack_stacked(nc, spec))
+
+
+def _require_f32(spec: PackSpec):
+    bad = [str(d) for d in spec.dtypes if d != jnp.float32]
+    if bad:
+        raise TypeError(
+            f'packed aggregation requires float32 leaves, got {bad}; use '
+            'the leaf-wise safa_aggregate_tree for mixed/low-precision '
+            'models')
+
+
+def safa_aggregate_tree_packed_fleet(cache, trained, global_prev, *, picked,
+                                     undrafted, deprecated, weights,
+                                     spec: PackSpec = None
+                                     ) -> AggregationResult:
+    """Fleet-batched single-dispatch Eq. 6-8 over fleet-stacked pytrees.
+
+    cache/trained: pytrees with [S, m, ...] leaves; global_prev: [S, ...]
+    leaves; picked/undrafted/deprecated/weights: [S, m].  All S independent
+    server aggregations run in ONE ``pallas_call`` over a (S, tiles) grid.
+    ``spec`` is the per-member layout (built from one member's global
+    tree); float32-only, like the single-run packed path.
+    """
+    if spec is None:
+        spec = pack_spec(jax.tree.map(lambda g: g[0], global_prev))
+    _require_f32(spec)
+    pc = pack_fleet(cache, spec)
+    pt = pack_fleet(trained, spec)
+    pg = pack_stacked(global_prev, spec)        # [S, n_padded]
+    ng, nc = safa_aggregate_packed_fleet(pc, pt, pg, picked, undrafted,
+                                         deprecated, weights)
+    return AggregationResult(unpack_stacked(ng, spec), unpack_fleet(nc, spec))
 
 
 def quantize_tree(tree):

@@ -37,24 +37,46 @@ DEFAULT_TILE = 2048
 INTERPRET = jax.default_backend() != 'tpu'
 
 
-def _kernel(cache_ref, trained_ref, global_ref, picked_ref, undrafted_ref,
-            deprecated_ref, weights_ref, new_global_ref, new_cache_ref):
-    cache = cache_ref[...]          # [m, T]
-    trained = trained_ref[...]      # [m, T]
-    g = global_ref[...]             # [1, T]
-    picked = picked_ref[...] != 0           # [m, 1]
-    undrafted = undrafted_ref[...] != 0
-    deprecated = deprecated_ref[...] != 0
-    w = weights_ref[...]            # [m, 1] float32
-
+def _agg_math(cache, trained, g, picked, undrafted, deprecated, w):
+    """Eq. 6-8 on one [m, T] tile; returns (new_global [1, T], new_cache)."""
     # Eq. 6: pre-aggregation cache update
     c1 = jnp.where(deprecated & ~picked, g, cache)
     c1 = jnp.where(picked, trained, c1)
     # Eq. 7: weighted aggregation
-    new_global_ref[...] = jnp.sum(c1.astype(jnp.float32) * w, axis=0,
-                                  keepdims=True).astype(cache.dtype)
+    new_global = jnp.sum(c1.astype(jnp.float32) * w, axis=0,
+                         keepdims=True).astype(cache.dtype)
     # Eq. 8: post-aggregation (bypass) cache update
-    new_cache_ref[...] = jnp.where(undrafted, trained, c1)
+    return new_global, jnp.where(undrafted, trained, c1)
+
+
+def _kernel(cache_ref, trained_ref, global_ref, picked_ref, undrafted_ref,
+            deprecated_ref, weights_ref, new_global_ref, new_cache_ref):
+    new_global_ref[...], new_cache_ref[...] = _agg_math(
+        cache_ref[...],                 # [m, T]
+        trained_ref[...],               # [m, T]
+        global_ref[...],                # [1, T]
+        picked_ref[...] != 0,           # [m, 1]
+        undrafted_ref[...] != 0,
+        deprecated_ref[...] != 0,
+        weights_ref[...])               # [m, 1] float32
+
+
+def _fleet_kernel(cache_ref, trained_ref, global_ref, picked_ref,
+                  undrafted_ref, deprecated_ref, weights_ref, new_global_ref,
+                  new_cache_ref):
+    """Fleet-batched body: each grid point (s, i) sees fleet member s's
+    [1, m, T] tile; the leading fleet-block dim is squeezed so the math is
+    exactly the single-run kernel's."""
+    ng, nc = _agg_math(
+        cache_ref[...][0],              # [m, T]
+        trained_ref[...][0],
+        global_ref[...][0],             # [1, T]
+        picked_ref[...][0] != 0,        # [m, 1]
+        undrafted_ref[...][0] != 0,
+        deprecated_ref[...][0] != 0,
+        weights_ref[...][0])
+    new_global_ref[...] = ng[None]
+    new_cache_ref[...] = nc[None]
 
 
 def _launch(cache, trained, global_row, picked, undrafted, deprecated,
@@ -124,3 +146,52 @@ def safa_aggregate_packed(cache, trained, global_prev, picked, undrafted,
         cache, trained, global_prev.reshape(1, -1), picked, undrafted,
         deprecated, weights, tile=tile, alias_cache=True)
     return new_global[0], new_cache
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed_fleet(cache, trained, global_prev, picked,
+                                undrafted, deprecated, weights, *,
+                                tile: int = DEFAULT_TILE):
+    """Fleet variant of ``safa_aggregate_packed``: the pack gains a leading
+    fleet axis and the grid gains a fleet dimension.
+
+    cache/trained: [S, m, N] pre-padded pack buffers (N % tile == 0);
+    global_prev: [S, N]; masks/weights: [S, m].  One kernel dispatch runs
+    Eq. 6-8 for all S independent servers over a (S, N // tile) grid, with
+    the [S, m, N] cache buffer aliased to the new-cache output.  Returns
+    (new_global [S, N], new_cache [S, m, N]).
+    """
+    s, m, np_ = cache.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    grid = (s, np_ // tile)
+    col = lambda arr: arr.reshape(s, m, 1)
+    new_global, new_cache = pl.pallas_call(
+        _fleet_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i)),  # cache
+            pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i)),  # trained
+            pl.BlockSpec((1, 1, tile), lambda s, i: (s, 0, i)),  # global
+            pl.BlockSpec((1, m, 1), lambda s, i: (s, 0, 0)),     # picked
+            pl.BlockSpec((1, m, 1), lambda s, i: (s, 0, 0)),     # undrafted
+            pl.BlockSpec((1, m, 1), lambda s, i: (s, 0, 0)),     # deprecated
+            pl.BlockSpec((1, m, 1), lambda s, i: (s, 0, 0)),     # weights
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tile), lambda s, i: (s, 0, i)),
+            pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, 1, np_), cache.dtype),
+            jax.ShapeDtypeStruct((s, m, np_), cache.dtype),
+        ],
+        input_output_aliases={0: 1},
+        interpret=INTERPRET,
+    )(cache, trained, global_prev.reshape(s, 1, np_),
+      col(picked.astype(jnp.int32)), col(undrafted.astype(jnp.int32)),
+      col(deprecated.astype(jnp.int32)),
+      col(weights.astype(jnp.float32)))
+    return new_global[:, 0], new_cache
