@@ -4,21 +4,19 @@ Numeric federated training on synthetic stand-in datasets (offline
 container; DESIGN.md §6).  Task 1 runs at full paper scale; tasks 2/3 run
 scaled-down by default (--full for paper scale — hours on 1 CPU core).
 
-The safa/fedavg/fedcs C-grids run through the batched fleet engine
+Every protocol's C-grid runs through the batched fleet engine
 (``federation.run_sweep``, one vmapped-scan dispatch per protocol per
-eval segment); local/fedasync keep their bespoke per-round loops.
+eval segment) — including local and fedasync, whose runners share the
+scan/fleet engines since the every-protocol unification.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import emit, make_env, run_protocol
+from benchmarks.common import emit, make_env, sweep_members
 from repro.core import federation
 from repro.data import make_images, make_regression, make_svm, partition
 from repro.data import tasks as task_mod
 
 PROTOS = ('local', 'fedavg', 'fedcs', 'fedasync', 'safa')
-SWEEP_PROTOS = ('fedavg', 'fedcs', 'safa')
 
 
 def _bench(task_name, build, rounds, crs, cs, seed=0, scale=1.0):
@@ -26,22 +24,17 @@ def _bench(task_name, build, rounds, crs, cs, seed=0, scale=1.0):
         env = make_env(task_name, cr, seed=seed, scale=scale)
         task = build(env)
         eval_every = max(2, rounds // 5)
-        # batched protocols: the C grid is one fleet per protocol (fresh
-        # envs per member — the event draws consume the env rng)
+        # the C grid is one fleet per protocol
         results = {}
-        for proto in SWEEP_PROTOS:
-            members = [federation.SweepMember(
-                env=make_env(task_name, cr, seed=seed, scale=scale),
-                fraction=C, lag_tolerance=5, seed=0) for C in cs]
+        for proto in PROTOS:
+            members = sweep_members(task_name, [(cr, C) for C in cs],
+                                    seed=seed, scale=scale)
             hists = federation.run_sweep(task, members, rounds=rounds,
                                          proto=proto, eval_every=eval_every)
             results.update({(proto, C): h for C, h in zip(cs, hists)})
         for C in cs:
             for proto in PROTOS:
-                h = results.get((proto, C))
-                if h is None:
-                    h = run_protocol(proto, env, C, rounds, task=task,
-                                     eval_every=eval_every)
+                h = results[(proto, C)]
                 acc = h.best_eval['acc'] if h.best_eval else float('nan')
                 emit(f'accuracy/{task_name}/{proto}/cr{cr}/C{C}',
                      f'{acc:.4f}',

@@ -1,10 +1,7 @@
 """Shared benchmark plumbing: paper environment grids + CSV output."""
 from __future__ import annotations
 
-import sys
 import time
-
-import numpy as np
 
 from repro.configs import PAPER_TASKS
 from repro.core import federation
@@ -26,11 +23,21 @@ def make_env(task_name: str, cr: float, seed: int = 0, scale: float = 1.0) -> FL
 
 def run_protocol(name: str, env: FLEnv, C: float, rounds: int,
                  lag_tolerance: int = 5, task=None, **kw):
-    fn = federation.PROTOCOLS[name]
+    fn = federation.RUNNERS[name]
     kwargs = dict(fraction=C, rounds=rounds, numeric=task is not None, **kw)
     if name == 'safa':
         kwargs['lag_tolerance'] = lag_tolerance
     return fn(task, env, **kwargs)
+
+
+def sweep_members(task_name: str, grid, seed: int = 0, scale: float = 1.0,
+                  lag_tolerance: int = 5):
+    """One ``SweepMember`` per (cr, C) cell — fresh envs per member (the
+    event draws consume the env rng), same ``seed`` so the fleet shares one
+    client population."""
+    return [federation.SweepMember(
+        env=make_env(task_name, cr, seed=seed, scale=scale), fraction=C,
+        lag_tolerance=lag_tolerance) for cr, C in grid]
 
 
 def emit(name: str, value, derived: str = ''):

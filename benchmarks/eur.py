@@ -1,23 +1,28 @@
 """Paper Eq. 5 / Fig. 2 — Effective Update Ratio: theory vs simulation for
-SAFA's post-training selection and FedAvg's pre-training selection."""
+SAFA's post-training selection and FedAvg's pre-training selection.
+
+The cr x C comparison grid runs as ONE fleet per protocol
+(``run_sweep(numeric=False)``): a single fleet-major schedule precompute
+covers all 16 cells instead of 32 per-cell python runs.
+"""
 from __future__ import annotations
 
-import numpy as np
+import itertools
 
-from benchmarks.common import emit, make_env, run_protocol
-from repro.core import metrics
+from benchmarks.common import emit, sweep_members
+from repro.core import federation, metrics
 
 
 def run(rounds: int = 40, seed: int = 0):
-    for cr in (0.1, 0.3, 0.5, 0.7):
-        for C in (0.1, 0.3, 0.5, 0.9):
-            env = make_env('task2_cnn', cr, seed=seed)
-            hs = run_protocol('safa', env, C, rounds)
-            hf = run_protocol('fedavg', env, C, rounds)
-            emit(f'eur/cr{cr}/C{C}', f'{hs.mean("eur"):.4f}',
-                 f'theory_safa={metrics.eur_theory_safa(C, cr):.4f};'
-                 f'fedavg={hf.mean("eur"):.4f};'
-                 f'theory_fedavg={metrics.eur_theory_fedavg(C, cr):.4f}')
+    grid = list(itertools.product((0.1, 0.3, 0.5, 0.7), (0.1, 0.3, 0.5, 0.9)))
+    hists = {proto: federation.run_sweep(
+        None, sweep_members('task2_cnn', grid, seed=seed), rounds=rounds,
+        proto=proto, numeric=False) for proto in ('safa', 'fedavg')}
+    for i, (cr, C) in enumerate(grid):
+        emit(f'eur/cr{cr}/C{C}', f'{hists["safa"][i].mean("eur"):.4f}',
+             f'theory_safa={metrics.eur_theory_safa(C, cr):.4f};'
+             f'fedavg={hists["fedavg"][i].mean("eur"):.4f};'
+             f'theory_fedavg={metrics.eur_theory_fedavg(C, cr):.4f}')
 
 
 if __name__ == '__main__':

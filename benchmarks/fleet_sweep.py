@@ -56,11 +56,12 @@ def _quickstart_task():
     return regression_task(data, lr=1e-3, epochs=3)
 
 
-def _members():
-    """Fresh S=16 fleet (envs carry consumable rng state): crash rate x
-    draw stream, with fraction / lag tolerance cycling per member."""
+def _members(s: int = 16):
+    """Fresh fleet of ``s`` members (envs carry consumable rng state):
+    crash rate x draw stream, with fraction / lag tolerance cycling per
+    member."""
     envs = env_grid(BASE, crash_prob=(0.1, 0.3, 0.5, 0.7),
-                    draw_seed=(0, 1, 2, 3))
+                    draw_seed=(0, 1, 2, 3))[:s]
     hyper = itertools.cycle(zip(FRACTIONS, TAUS))
     return [federation.SweepMember(env=e, fraction=f, lag_tolerance=tau)
             for e, (f, tau) in zip(envs, hyper)]
@@ -79,35 +80,35 @@ def _time(fn, reps: int = 5) -> float:
     return min(times)
 
 
-def run():
+def run(rounds: int = ROUNDS, s: int = 16, reps: int = 5):
     task = _quickstart_task()
-    s_count = len(_members())
-    total_rounds = s_count * ROUNDS
+    s_count = len(_members(s))
+    total_rounds = s_count * rounds
 
     def loop_scan():
         h = None
-        for mem in _members():
+        for mem in _members(s):
             h = federation.run_safa(task, mem.env, fraction=mem.fraction,
                                     lag_tolerance=mem.lag_tolerance,
-                                    rounds=ROUNDS, eval_every=ROUNDS,
+                                    rounds=rounds, eval_every=rounds,
                                     engine='scan')
         jax.block_until_ready(h.final_global)
 
     def sweep(engine):
-        hists = federation.run_sweep(task, _members(), rounds=ROUNDS,
-                                     eval_every=ROUNDS, engine=engine)
+        hists = federation.run_sweep(task, _members(s), rounds=rounds,
+                                     eval_every=rounds, engine=engine)
         jax.block_until_ready(hists[-1].final_global)
 
     secs = {
-        'loop_scan': _time(loop_scan),
-        'sequential': _time(lambda: sweep('sequential')),
-        'fleet': _time(lambda: sweep('fleet')),
+        'loop_scan': _time(loop_scan, reps),
+        'sequential': _time(lambda: sweep('sequential'), reps),
+        'fleet': _time(lambda: sweep('fleet'), reps),
     }
     base_rps = total_rounds / secs['loop_scan']
-    for name, s in secs.items():
-        rps = total_rounds / s
+    for name, sec in secs.items():
+        rps = total_rounds / sec
         emit(f'fleet_sweep/{name}/rounds_per_sec', f'{rps:.1f}',
-             f'sec_per_sweep={s:.3f};S={s_count};rounds={ROUNDS};'
+             f'sec_per_sweep={sec:.3f};S={s_count};rounds={rounds};'
              f'speedup={rps / base_rps:.2f}x')
 
 

@@ -3,8 +3,6 @@ CPU — structural validation; real perf is a TPU measurement) vs their jnp
 oracles, plus communication-compression byte accounting."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 

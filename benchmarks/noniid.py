@@ -9,8 +9,6 @@ and compare FedAvg vs SAFA best accuracy.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit, make_env, run_protocol
 from repro.data import make_images, partition
 from repro.data.tasks import cnn_task

@@ -14,8 +14,6 @@ Two claims are measured:
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
@@ -39,14 +37,15 @@ def _quickstart_setup():
     return env, task
 
 
-def _time_engine(task, engine: str, reps: int = 3) -> float:
+def _time_engine(task, engine: str, reps: int = 3,
+                 rounds: int = ROUNDS) -> float:
     """Steady-state seconds per numeric SAFA run (fresh env each rep so the
     schedule precompute is included; jit caches are warm after rep 0)."""
     def once():
         env = FLEnv(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
                     epochs=3, t_lim=830.0, seed=3)
         h = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
-                                rounds=ROUNDS, eval_every=ROUNDS,
+                                rounds=rounds, eval_every=rounds,
                                 engine=engine)
         jax.block_until_ready(h.final_global)
     once()                                  # warm up compile caches
@@ -77,18 +76,18 @@ def _dispatches_per_round(use_kernel) -> tuple[int, int]:
     return count_pallas_calls(jaxpr.jaxpr), len(leaves)
 
 
-def run():
+def run(rounds: int = ROUNDS, reps: int = 3):
     env, task = _quickstart_setup()
     del env
 
-    s_loop = _time_engine(task, 'loop')
-    s_scan = _time_engine(task, 'scan')
-    rps_loop = ROUNDS / s_loop
-    rps_scan = ROUNDS / s_scan
+    s_loop = _time_engine(task, 'loop', reps, rounds)
+    s_scan = _time_engine(task, 'scan', reps, rounds)
+    rps_loop = rounds / s_loop
+    rps_scan = rounds / s_scan
     emit('round_engine/loop/rounds_per_sec', f'{rps_loop:.1f}',
-         f'sec_per_run={s_loop:.3f};rounds={ROUNDS}')
+         f'sec_per_run={s_loop:.3f};rounds={rounds}')
     emit('round_engine/scan/rounds_per_sec', f'{rps_scan:.1f}',
-         f'sec_per_run={s_scan:.3f};rounds={ROUNDS};'
+         f'sec_per_run={s_scan:.3f};rounds={rounds};'
          f'speedup={rps_scan / rps_loop:.2f}x')
 
     d_leaf, n_leaves = _dispatches_per_round(True)

@@ -3,40 +3,51 @@ Tables V / VII / IX — average model distribution overhead T_dist (s).
 
 Timing metrics depend only on the event process (as in the paper), so these
 run at the full paper scale (m up to 500) with numeric training disabled.
+
+Each (task, protocol) grid — crash rate x selection fraction — is ONE
+``run_sweep`` fleet: a single fleet-major schedule precompute per protocol
+instead of a python loop of per-cell runs.
 """
 from __future__ import annotations
 
-import numpy as np
+import itertools
 
-from benchmarks.common import (C_GRID, CR_GRID, PROTOCOLS, emit, make_env,
-                               run_protocol)
+from benchmarks.common import C_GRID, CR_GRID, PROTOCOLS, emit, sweep_members
+from repro.core import federation
 
 TASKS = ('task1_regression', 'task2_cnn', 'task3_svm')
 
 
 def run(rounds: int = 30, seed: int = 0):
+    grid = list(itertools.product(CR_GRID, C_GRID))
     for task_name in TASKS:
         for proto in PROTOCOLS:
-            for cr in CR_GRID:
-                for C in C_GRID:
-                    env = make_env(task_name, cr, seed=seed)
-                    h = run_protocol(proto, env, C, rounds)
-                    emit(f'round_length/{task_name}/{proto}/cr{cr}/C{C}',
-                         f'{h.mean("round_len"):.2f}',
-                         f'tdist={h.mean("t_dist"):.2f};eur={h.mean("eur"):.3f}')
+            members = sweep_members(task_name, grid, seed=seed)
+            hists = federation.run_sweep(None, members, rounds=rounds,
+                                         proto=proto, numeric=False)
+            for (cr, C), h in zip(grid, hists):
+                emit(f'round_length/{task_name}/{proto}/cr{cr}/C{C}',
+                     f'{h.mean("round_len"):.2f}',
+                     f'tdist={h.mean("t_dist"):.2f};eur={h.mean("eur"):.3f}')
 
 
 def summarize(rounds: int = 30, seed: int = 0):
     """Headline claim check: SAFA speedup over FedAvg/FedCS at small C."""
+    crs = (0.3, 0.7)
     for task_name in TASKS:
-        for cr in (0.3, 0.7):
-            env = {p: make_env(task_name, cr, seed=seed) for p in PROTOCOLS}
-            lens = {p: run_protocol(p, env[p], 0.1, rounds).mean('round_len')
-                    for p in PROTOCOLS}
+        lens = {}
+        for proto in PROTOCOLS:
+            members = sweep_members(task_name, [(cr, 0.1) for cr in crs],
+                                    seed=seed)
+            hists = federation.run_sweep(None, members, rounds=rounds,
+                                         proto=proto, numeric=False)
+            lens[proto] = {cr: h.mean('round_len')
+                           for cr, h in zip(crs, hists)}
+        for cr in crs:
             emit(f'speedup/{task_name}/cr{cr}/C0.1',
-                 f'{lens["fedavg"] / lens["safa"]:.2f}',
-                 f'safa={lens["safa"]:.0f}s;fedavg={lens["fedavg"]:.0f}s;'
-                 f'fedcs={lens["fedcs"]:.0f}s')
+                 f'{lens["fedavg"][cr] / lens["safa"][cr]:.2f}',
+                 f'safa={lens["safa"][cr]:.0f}s;fedavg={lens["fedavg"][cr]:.0f}s;'
+                 f'fedcs={lens["fedcs"][cr]:.0f}s')
 
 
 if __name__ == '__main__':

@@ -1,15 +1,18 @@
 """Benchmark entrypoint: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only SECTION]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only SECTION]
 
 Prints ``name,us_per_call,derived`` CSV rows (values are seconds for the
 protocol-timing tables, accuracy for the accuracy tables, us/call for the
 kernel microbenches — the ``derived`` column says which).
+
+``--smoke`` runs the engine/protocol-comparison sections with tiny
+round/fleet counts — a CI guard that the benchmark scripts themselves
+keep importing and running, not a measurement.
 """
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 from benchmarks import (accuracy, bias_curves, eur, kernels_bench,
@@ -35,19 +38,43 @@ SECTIONS = {
         'benchmarks.fleet_sweep', fromlist=['run']).run(),
 }
 
+# tiny-parameter variants for --smoke: every engine/protocol-comparison
+# script executes end to end in seconds, so CI catches bitrot in the
+# benchmark layer without paying for a measurement
+SMOKE_SECTIONS = {
+    'round_length': lambda: (round_length.run(rounds=3),
+                             round_length.summarize(rounds=3)),
+    'round_engine': lambda: round_engine.run(rounds=6, reps=1),
+    'eur': lambda: eur.run(rounds=3),
+    'fleet_sweep': lambda: __import__(
+        'benchmarks.fleet_sweep', fromlist=['run']).run(rounds=6, s=4,
+                                                        reps=1),
+}
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true',
                     help='paper-scale numeric runs (slow on 1 CPU core)')
+    ap.add_argument('--smoke', action='store_true',
+                    help='tiny-parameter CI pass over the engine sections')
     ap.add_argument('--only', choices=list(SECTIONS), default=None)
     args = ap.parse_args(argv)
+    if args.full and args.smoke:
+        ap.error('--full and --smoke are mutually exclusive')
+    sections = SMOKE_SECTIONS if args.smoke else SECTIONS
     print('name,us_per_call,derived')
-    todo = [args.only] if args.only else list(SECTIONS)
+    if args.only:
+        if args.smoke and args.only not in sections:
+            ap.error(f'--smoke has no section {args.only!r} '
+                     f'(choose from {sorted(sections)})')
+        todo = [args.only]
+    else:
+        todo = list(sections)
     for name in todo:
         t0 = time.time()
         print(f'# --- {name} ---', flush=True)
-        SECTIONS[name](args.full)
+        sections[name]() if args.smoke else sections[name](args.full)
         print(f'# {name} done in {time.time() - t0:.0f}s', flush=True)
 
 

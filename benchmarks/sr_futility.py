@@ -2,8 +2,7 @@
 Percentage per protocol x C x cr."""
 from __future__ import annotations
 
-from benchmarks.common import (C_GRID, CR_GRID, PROTOCOLS, emit, make_env,
-                               run_protocol)
+from benchmarks.common import CR_GRID, PROTOCOLS, emit, make_env, run_protocol
 
 TASKS = ('task1_regression', 'task2_cnn', 'task3_svm')
 

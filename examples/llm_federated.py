@@ -14,7 +14,6 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.launch.train import run
-from repro.models.config import ModelConfig
 from repro.models.model import build_model
 
 ap = argparse.ArgumentParser()

@@ -1,29 +1,39 @@
 """Reproduce the paper's headline comparison: SAFA vs FedAvg vs FedCS vs
-fully-local, on round efficiency and model quality, across crash rates.
+FedAsync vs fully-local, on round efficiency and model quality, across
+crash rates.  Each protocol's crash-rate grid runs as one batched fleet
+(``run_sweep``) — every runner shares the scan/fleet engines.
 
     PYTHONPATH=src python examples/protocol_comparison.py
 """
-import numpy as np
 
 from repro.core import federation
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
-from repro.fedsim import FLEnv
+from repro.fedsim import FLEnv, env_grid
 
 C, ROUNDS = 0.3, 80
+CRASH_RATES = (0.1, 0.3, 0.5, 0.7)
+BASE = dict(m=5, dataset_size=506, batch_size=5, epochs=3, t_lim=830.0,
+            seed=3)
+
+env0 = FLEnv(crash_prob=0.3, **BASE)
+x, y = make_regression()
+data = partition(x, y, env0.partition_sizes, 5, seed=1)
+task = regression_task(data, lr=1e-3, epochs=3)
+
+rows = {}
+for name in federation.RUNNERS:
+    members = [federation.SweepMember(env=e, fraction=C, lag_tolerance=5)
+               for e in env_grid(BASE, crash_prob=CRASH_RATES)]
+    hists = federation.run_sweep(task, members, rounds=ROUNDS, proto=name,
+                                 eval_every=20)
+    rows.update({(cr, name): h for cr, h in zip(CRASH_RATES, hists)})
+
 print(f'{"cr":>4} {"protocol":>8} {"best_acc":>9} {"round_len":>10} '
       f'{"EUR":>6} {"SR":>6} {"futility":>8}')
-for cr in (0.1, 0.3, 0.5, 0.7):
-    for name in ('local', 'fedavg', 'fedcs', 'safa'):
-        env = FLEnv(m=5, crash_prob=cr, dataset_size=506, batch_size=5,
-                    epochs=3, t_lim=830.0, seed=3)
-        x, y = make_regression()
-        data = partition(x, y, env.partition_sizes, 5, seed=1)
-        task = regression_task(data, lr=1e-3, epochs=3)
-        kw = dict(fraction=C, rounds=ROUNDS, eval_every=20)
-        if name == 'safa':
-            kw['lag_tolerance'] = 5
-        h = federation.PROTOCOLS[name](task, env, **kw)
+for cr in CRASH_RATES:
+    for name in ('local', 'fedavg', 'fedcs', 'fedasync', 'safa'):
+        h = rows[(cr, name)]
         print(f'{cr:>4} {name:>8} {h.best_eval["acc"]:>9.4f} '
               f'{h.mean("round_len"):>10.1f} {h.mean("eur"):>6.3f} '
               f'{h.mean("sr"):>6.3f} {h.futility:>8.3f}')

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional
 
 from repro.models.config import ModelConfig
 

@@ -1,4 +1,4 @@
-"""Federation orchestrators: SAFA / FedAvg / FedCS / fully-local.
+"""Federation orchestrators: SAFA / FedAvg / FedCS / FedAsync / fully-local.
 
 The orchestrator owns the *protocol* state machine (versions, commit flags,
 pending straggler progress) in numpy, drives the event simulator for
@@ -22,22 +22,28 @@ pass and emit [rounds, m] mask schedules.  The numeric run then picks an
   reference mode (one dispatch per op per round, masks shuttled
   host->device every round); bit-identical to the scanned engine.
 
+Every runner in ``RUNNERS`` — SAFA, FedAvg, FedCS, fully-local and
+FedAsync — has a schedule precompute and compiles to one scan dispatch per
+eval segment; the per-round reference loops are kept as the bit-identical
+``engine='loop'`` ground truth.
+
 Because every paper result is a *sweep* (seeds x crash rates x lag
 tolerances x fractions), schedules also stack fleet-major: ``FleetSchedule``
-holds S independent event processes as [S, rounds, m] mask tensors and
-``run_sweep`` executes all S simulations in one ``jax.vmap``-over-scan
-dispatch (``protocol.safa_run_fleet`` / ``fedavg_run_fleet``), bit-identical
-per member to S sequential ``engine='scan'`` runs.
+(and its sync/local/async counterparts) hold S independent event processes
+as [S, rounds, m] mask tensors and ``run_sweep`` executes all S simulations
+of any protocol in one ``jax.vmap``-over-scan dispatch
+(``protocol.safa_run_fleet`` / ``fedavg_run_fleet`` / ``local_run_fleet`` /
+``fedasync_run_fleet``), bit-identical per member to S sequential
+``engine='scan'`` runs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
-
-import numpy as np
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import protocol, selection
 from repro.fedsim import FLEnv
@@ -258,21 +264,34 @@ def _record_eval(hist: History, rec: RoundRecord, task: Task, global_w):
 
 
 def _scan_segments(task: Task, hist: History, ns: _NumericState, dev,
-                   weights, records, evals, *, safa: bool, local_train_fn,
+                   weights, records, evals, *, proto: str, local_train_fn,
                    use_kernel=False):
     """Drive one numeric run through the scan engine: one donated-carry
-    dispatch per eval segment.  Shared by ``run_safa``, ``run_fedavg`` and
-    ``run_sweep(engine='sequential')`` so the three stay step-identical."""
+    dispatch per eval segment.  Shared by every single-run orchestrator
+    and ``run_sweep(engine='sequential')`` so they stay step-identical.
+
+    ``proto`` picks the scanned round body; for ``'local'`` there is no
+    global model in the carry, so the eval-point aggregation happens here
+    (and lands in ``ns.global_w`` so the caller's final_global handling is
+    uniform)."""
     start = 0
     for stop in evals:
         seg = jax.tree.map(lambda a: a[start:stop], dev)
-        if safa:
+        if proto == 'safa':
             ns.global_w, ns.local_w, ns.cache = protocol.safa_run_scan(
                 ns.global_w, ns.local_w, ns.cache, seg, weights,
                 local_train_fn=local_train_fn, use_kernel=use_kernel)
-        else:
+        elif proto in ('fedavg', 'fedcs'):
             ns.global_w, ns.local_w = protocol.fedavg_run_scan(
                 ns.global_w, ns.local_w, seg, weights,
+                local_train_fn=local_train_fn)
+        elif proto == 'local':
+            ns.local_w = protocol.local_run_scan(
+                ns.local_w, seg, local_train_fn=local_train_fn)
+            ns.global_w = protocol.aggregate(ns.local_w, weights)
+        else:  # fedasync
+            ns.global_w, ns.local_w = protocol.fedasync_run_scan(
+                ns.global_w, ns.local_w, seg,
                 local_train_fn=local_train_fn)
         _record_eval(hist, records[stop - 1], task, ns.global_w)
         start = stop
@@ -299,7 +318,7 @@ def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
     evals = _eval_rounds(rounds, eval_every)
     if engine == 'scan':
         _scan_segments(task, hist, ns, sched.to_device(), weights,
-                       sched.records, evals, safa=True,
+                       sched.records, evals, proto='safa',
                        local_train_fn=train_fn, use_kernel=use_kernel)
     elif engine == 'loop':
         for t in range(1, rounds + 1):
@@ -347,6 +366,26 @@ def _sync_round_common(env: FLEnv, selected: np.ndarray, crashed: np.ndarray,
     else:
         round_len = t_dist
     return min(env.t_lim, round_len), t_dist
+
+
+def _sync_rounds_common(selected, crashed, cfrac, full_tt, *, t_lim,
+                        t_updown, msize, server_bw):
+    """``_sync_round_common`` vectorised over stacked leading axes.
+
+    selected/crashed/cfrac: [..., m] (e.g. [rounds, m] or [S, rounds, m]);
+    the env constants must already broadcast against those shapes (for a
+    fleet: full_tt [S, 1, m], t_updown [S, 1, 1], msize/server_bw/t_lim
+    [S, 1]).  Bit-identical per round to the scalar helper: the masked max
+    equals the compressed max, and every arithmetic expression keeps the
+    scalar path's evaluation order.  Returns (round_len [...], t_dist
+    [...])."""
+    t_dist = selected.sum(axis=-1) * msize * 8.0 / server_bw
+    finish = t_dist[..., None] + 2 * t_updown + full_tt
+    drop = t_dist[..., None] + t_updown + cfrac * full_tt
+    per_client = np.where(crashed, drop, finish)
+    live_max = np.max(np.where(selected, per_client, -np.inf), axis=-1)
+    round_len = np.where(selected.any(axis=-1), live_max, t_dist)
+    return np.minimum(t_lim, round_len), t_dist
 
 
 @dataclasses.dataclass
@@ -429,7 +468,8 @@ def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
     evals = _eval_rounds(rounds, eval_every)
     if engine == 'scan':
         _scan_segments(task, hist, ns, sched.to_device(), weights,
-                       sched.records, evals, safa=False,
+                       sched.records, evals,
+                       proto='fedcs' if fedcs else 'fedavg',
                        local_train_fn=task.local_train)
     elif engine == 'loop':
         for t in range(1, rounds + 1):
@@ -449,6 +489,126 @@ def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
 
 def run_fedcs(task, env, **kw) -> History:
     return run_fedavg(task, env, fedcs=True, **kw)
+
+
+@dataclasses.dataclass
+class LocalSchedule:
+    """Precomputed fully-local event process ([rounds, m] survivor mask +
+    records).  ``completed`` is selected & survived — the only mask the
+    numeric round needs (there is no aggregation until eval points)."""
+    completed: np.ndarray
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.completed.shape[0]
+
+    def to_device(self) -> protocol.LocalSchedule:
+        return protocol.LocalSchedule(
+            completed=jnp.asarray(self.completed),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+def precompute_local_schedule(env: FLEnv, *, fraction: float, rounds: int,
+                              seed: int) -> LocalSchedule:
+    """Host pass for the fully-local baseline (selection + crash draws).
+
+    Consumes the selection rng (``seed + 2``) and the env's crash stream
+    exactly as the per-round reference loop does: the two are independent
+    generators, so bulk-drawing each preserves both streams."""
+    m = env.m
+    rng = np.random.default_rng(seed + 2)
+    full_tt = env.full_train_time()
+    crashed_all, cfrac_all = env.draw_rounds(rounds)
+    selected = selection.fedavg_select_batch([rng], m, fraction, rounds)[0]
+    completed = selected & ~crashed_all
+    round_len, _ = _sync_rounds_common(
+        selected, crashed_all, cfrac_all, full_tt, t_lim=env.t_lim,
+        t_updown=env.t_updown, msize=env.model_size_mb,
+        server_bw=env.server_bw_mbps)
+    round_len = round_len.tolist()
+    n_committed = completed.sum(axis=-1).tolist()
+    n_crashed = crashed_all.sum(axis=-1).tolist()
+    records = [RoundRecord(round=i + 1, round_len=round_len[i], t_dist=0.0,
+                           eur=0.0, sr=0.0, vv=0.0, n_picked=0,
+                           n_committed=n_committed[i],
+                           n_crashed=n_crashed[i])
+               for i in range(rounds)]
+    return LocalSchedule(completed=completed, records=records, futility=0.0)
+
+
+@dataclasses.dataclass
+class FedasyncSchedule:
+    """Precomputed FedAsync event process: [rounds, m] commit masks plus
+    the arrival-ordered merge permutations and staleness-scaled mixing
+    weights the sequential server applies each round.  Model weights never
+    enter — merge order is pure arrival timing and the alphas depend only
+    on staleness — so the whole sequential-merge schedule is known up
+    front."""
+    committed: np.ndarray       # [rounds, m] bool
+    order: np.ndarray           # [rounds, m] int — arrival merge order
+    alphas: np.ndarray          # [rounds, m] float — 0 for non-commits
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.committed.shape[0]
+
+    def to_device(self) -> protocol.AsyncSchedule:
+        return protocol.AsyncSchedule(
+            committed=jnp.asarray(self.committed),
+            order=jnp.asarray(self.order),
+            alphas=jnp.asarray(self.alphas, jnp.float32),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+def precompute_fedasync_schedule(env: FLEnv, *, rounds: int,
+                                 alpha: float = 0.6,
+                                 staleness_exp: float = 0.5
+                                 ) -> FedasyncSchedule:
+    """Run the FedAsync bookkeeping (global-version counter, per-client
+    staleness) for all rounds in one host pass, with the crash draws
+    vectorised via ``draw_rounds`` (same rng stream as round-by-round
+    ``draw_round`` calls)."""
+    m = env.m
+    full_tt = env.full_train_time()
+    crashed_all, _ = env.draw_rounds(rounds)
+    arrival_base = env.t_dist(m) + 2 * env.t_updown + full_tt
+    versions = np.zeros(m, dtype=float)   # global version at last pull
+    global_version = 0
+    committed_s = np.zeros((rounds, m), bool)
+    order_s = np.zeros((rounds, m), np.int64)
+    alphas_s = np.zeros((rounds, m))
+    records = []
+
+    for t in range(1, rounds + 1):
+        crashed = crashed_all[t - 1]
+        arrival = np.where(~crashed, arrival_base, np.inf)
+        too_slow = arrival > env.t_lim
+        committed = ~crashed & ~too_slow
+        staleness = np.maximum(0.0, global_version - versions)
+        i = t - 1
+        committed_s[i] = committed
+        order_s[i] = np.argsort(arrival, kind='stable')
+        alphas_s[i] = np.where(
+            committed, alpha * (1.0 + staleness) ** (-staleness_exp), 0.0)
+        global_version += int(committed.sum())
+        versions[committed] = global_version
+        records.append(RoundRecord(
+            round=t,
+            round_len=_capped_round_len(arrival, committed, env.t_lim),
+            t_dist=env.t_dist(int(committed.sum())),
+            eur=float(committed.sum()) / m,
+            sr=1.0,  # every client syncs every round: max downlink pressure
+            vv=float(np.var(staleness[committed])) if committed.any() else 0.0,
+            n_picked=int(committed.sum()),
+            n_committed=int(committed.sum()),
+            n_crashed=int(crashed.sum())))
+
+    return FedasyncSchedule(committed=committed_s, order=order_s,
+                            alphas=alphas_s, records=records, futility=0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -471,9 +631,11 @@ class SweepMember:
     one base config (``fedsim.env_grid``), varying ``crash_prob``,
     ``draw_seed``, ``t_lim``, ... per member."""
     env: FLEnv
-    fraction: float = 0.5
+    fraction: float = 0.5       # ignored by fedasync (fully asynchronous)
     lag_tolerance: int = 5      # SAFA only
-    seed: int = 0               # numeric-init (and sync-selection) seed
+    seed: int = 0               # numeric-init (and sync/local-selection) seed
+    alpha: float = 0.6          # FedAsync only: base mixing weight
+    staleness_exp: float = 0.5  # FedAsync only: staleness polynomial
 
 
 class _FleetStack:
@@ -558,6 +720,44 @@ class SyncFleetSchedule(_FleetStack):
         return protocol.SyncSchedule(
             selected=jnp.asarray(self.selected),
             completed=jnp.asarray(self.completed),
+            round_idx=self._round_idx())
+
+
+@dataclasses.dataclass
+class LocalFleetSchedule(_FleetStack):
+    """Fully-local counterpart of ``FleetSchedule`` ([S, rounds, m])."""
+    completed: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    MASKS = ('completed',)
+    _MEMBER_CLS = LocalSchedule
+
+    def to_device(self) -> protocol.LocalSchedule:
+        return protocol.LocalSchedule(
+            completed=jnp.asarray(self.completed),
+            round_idx=self._round_idx())
+
+
+@dataclasses.dataclass
+class AsyncFleetSchedule(_FleetStack):
+    """FedAsync counterpart of ``FleetSchedule``: [S, rounds, m] commit
+    masks plus the merge-order/alpha tensors driving each member's
+    arrival-ordered sequential mixes."""
+    committed: np.ndarray
+    order: np.ndarray
+    alphas: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    MASKS = ('committed', 'order', 'alphas')
+    _MEMBER_CLS = FedasyncSchedule
+
+    def to_device(self) -> protocol.AsyncSchedule:
+        return protocol.AsyncSchedule(
+            committed=jnp.asarray(self.committed),
+            order=jnp.asarray(self.order),
+            alphas=jnp.asarray(self.alphas, jnp.float32),
             round_idx=self._round_idx())
 
 
@@ -677,6 +877,78 @@ def precompute_fleet_schedule(members, *, rounds: int) -> FleetSchedule:
                          **masks)
 
 
+def precompute_sync_fleet_schedule(members, *, rounds: int,
+                                   fedcs: bool) -> SyncFleetSchedule:
+    """FedAvg/FedCS host pass for a whole fleet in one [S, rounds, m] sweep.
+
+    Bit-identical to stacking S ``precompute_sync_schedule`` calls
+    (regression-tested) with the per-member Python state loop eliminated:
+    FedCS selection is one ``selection.fedcs_select_batch`` rank
+    comparison (the time estimates are round-invariant, so one [S, m]
+    selection broadcasts over rounds), FedAvg selections consume each
+    member's own rng stream (``selection.fedavg_select_batch``), and the
+    timing/crash algebra plus record stats vectorise over the full
+    [S, rounds, m] block.  Synchronous protocols carry no cross-round
+    state, so there is no per-round loop either — the futility
+    accumulators use ``np.cumsum`` to keep the scalar path's sequential
+    round-by-round addition order."""
+    s_count = len(members)
+    envs = [mem.env for mem in members]
+    m = envs[0].m
+    if any(e.m != m for e in envs):
+        raise ValueError('fleet members must share the client count m')
+    fraction = np.array([mem.fraction for mem in members], float)
+    t_lim = np.array([e.t_lim for e in envs])
+    t_updown = np.array([e.t_updown for e in envs])
+    msize = np.array([e.model_size_mb for e in envs])
+    server_bw = np.array([e.server_bw_mbps for e in envs])
+    full_tt = np.stack([e.full_train_time() for e in envs])     # [S, m]
+    work = np.stack([e.n_batches * e.epochs for e in envs])     # [S, m]
+    draws = [e.draw_rounds(rounds) for e in envs]
+    crashed_all = np.stack([d[0] for d in draws])               # [S, rounds, m]
+    cfrac_all = np.stack([d[1] for d in draws])
+
+    if fedcs:
+        est = 2 * t_updown[:, None] + full_tt                   # [S, m]
+        sel = selection.fedcs_select_batch(est, fraction, t_lim)
+        selected = np.broadcast_to(sel[:, None],
+                                   (s_count, rounds, m)).copy()
+    else:
+        rngs = [np.random.default_rng(mem.seed + 1) for mem in members]
+        selected = selection.fedavg_select_batch(rngs, m, fraction, rounds)
+
+    round_len, t_dist = _sync_rounds_common(
+        selected, crashed_all, cfrac_all, full_tt[:, None],
+        t_lim=t_lim[:, None], t_updown=t_updown[:, None, None],
+        msize=msize[:, None], server_bw=server_bw[:, None])
+    # clients that cannot make the deadline are reckoned crashed (§III-B)
+    too_slow = (t_dist[..., None] + 2 * t_updown[:, None, None]
+                + full_tt[:, None]) > t_lim[:, None, None]
+    crashed = crashed_all | too_slow
+    completed = selected & ~crashed
+    performed = np.sum(np.where(selected, np.where(crashed, cfrac_all, 1.0),
+                                0.0) * work[:, None], axis=-1)  # [S, rounds]
+    wasted = np.sum((selected & crashed) * cfrac_all * work[:, None], axis=-1)
+    performed_tot = np.cumsum(performed, axis=1)[:, -1]
+    wasted_tot = np.cumsum(wasted, axis=1)[:, -1]
+
+    round_len_l = round_len.tolist()
+    t_dist_l = t_dist.tolist()
+    n_completed = completed.sum(axis=-1).tolist()
+    n_sel = selected.sum(axis=-1).tolist()
+    n_crashed = crashed.sum(axis=-1).tolist()
+    records = [[RoundRecord(
+        round=i + 1, round_len=round_len_l[s][i], t_dist=t_dist_l[s][i],
+        eur=n_completed[s][i] / m,
+        sr=n_sel[s][i] / m, vv=0.0,
+        n_picked=n_completed[s][i], n_committed=n_completed[s][i],
+        n_crashed=n_crashed[s][i],
+    ) for i in range(rounds)] for s in range(s_count)]
+    return SyncFleetSchedule(
+        selected=selected, completed=~crashed, records=records,
+        futility=wasted_tot / np.maximum(performed_tot, 1e-9))
+
+
 def run_sweep(task: Optional[Task], members, *, rounds: int,
               proto: str = 'safa', eval_every: int = 10,
               numeric: bool = True, use_kernel=False,
@@ -690,8 +962,13 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
     path and the benchmark baseline) — both produce bit-identical
     per-member results.
 
-    ``proto`` is 'safa', 'fedavg' or 'fedcs'; one sweep runs one protocol
-    (members of a fleet share a compiled program).
+    ``proto`` is any ``RUNNERS`` key ('safa', 'fedavg', 'fedcs', 'local',
+    'fedasync'); one sweep runs one protocol (members of a fleet share a
+    compiled program).  For 'local' the fleet carry is the local stack
+    only, with one vmapped aggregation per eval point; for 'fedasync' the
+    schedule carries each member's merge-order/alpha tensors and
+    ``SweepMember.fraction`` is ignored (``alpha``/``staleness_exp`` apply
+    instead).
 
     When multiple JAX devices are visible and S divides evenly, ``shard``
     (default True) splits the fleet axis across them — every op in the
@@ -706,9 +983,9 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
     (e.g. the CNN's matmuls/convs) are only guaranteed numerically
     equivalent, not bit-equal, under the fleet vmap.
     """
-    if proto not in ('safa', 'fedavg', 'fedcs'):
+    if proto not in RUNNERS:
         raise ValueError(
-            f'unknown proto {proto!r} (want "safa", "fedavg" or "fedcs")')
+            f'unknown proto {proto!r} (want one of {sorted(RUNNERS)})')
     if engine not in ('fleet', 'sequential'):
         raise ValueError(
             f'unknown engine {engine!r} (want "fleet" or "sequential")')
@@ -720,11 +997,19 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
 
     if proto == 'safa':
         fleet = precompute_fleet_schedule(members, rounds=rounds)
-    else:
-        fleet = SyncFleetSchedule.stack([
-            precompute_sync_schedule(mem.env, fraction=mem.fraction,
-                                     rounds=rounds, seed=mem.seed,
-                                     fedcs=proto == 'fedcs')
+    elif proto in ('fedavg', 'fedcs'):
+        fleet = precompute_sync_fleet_schedule(members, rounds=rounds,
+                                               fedcs=proto == 'fedcs')
+    elif proto == 'local':
+        fleet = LocalFleetSchedule.stack([
+            precompute_local_schedule(mem.env, fraction=mem.fraction,
+                                      rounds=rounds, seed=mem.seed)
+            for mem in members])
+    else:  # fedasync
+        fleet = AsyncFleetSchedule.stack([
+            precompute_fedasync_schedule(mem.env, rounds=rounds,
+                                         alpha=mem.alpha,
+                                         staleness_exp=mem.staleness_exp)
             for mem in members])
     hists = [History(proto, records=fleet.records[s],
                      futility=float(fleet.futility[s]))
@@ -766,9 +1051,16 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
                 g, l, c = protocol.safa_run_fleet(
                     g, l, c, seg, weights, local_train_fn=task.local_train,
                     use_kernel=use_kernel)
-            else:
+            elif proto in ('fedavg', 'fedcs'):
                 g, l = protocol.fedavg_run_fleet(
                     g, l, seg, weights, local_train_fn=task.local_train)
+            elif proto == 'local':
+                l = protocol.local_run_fleet(
+                    l, seg, local_train_fn=task.local_train)
+                g = jax.vmap(protocol.aggregate)(l, weights)
+            else:  # fedasync
+                g, l = protocol.fedasync_run_fleet(
+                    g, l, seg, local_train_fn=task.local_train)
             # one host gather per leaf: slicing members out of a (possibly
             # device-sharded) fleet array S times is far slower than one
             # fetch + S host slices
@@ -784,7 +1076,7 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
             ns = _NumericState(task, m, mem.seed)
             _scan_segments(task, hist, ns, fleet.member(s).to_device(),
                            jnp.asarray(mem.env.weights), fleet.records[s],
-                           evals, safa=proto == 'safa',
+                           evals, proto=proto,
                            local_train_fn=task.local_train,
                            use_kernel=use_kernel)
             hist.final_global = ns.global_w
@@ -793,42 +1085,45 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
 
 def run_local(task: Optional[Task], env: FLEnv, *, fraction: float,
               rounds: int, eval_every: int = 10, numeric: bool = True,
-              seed: int = 0) -> History:
+              seed: int = 0, engine: str = 'scan') -> History:
     """Fully-local baseline: C-fraction of clients train each round with no
-    aggregation; a single weighted aggregation happens after the last round."""
-    m = env.m
-    hist = History('local')
-    rng = np.random.default_rng(seed + 2)
-    ns = _NumericState(task, m, seed) if numeric else None
-    full_tt = env.full_train_time()
+    aggregation; a weighted aggregation happens at eval points (and after
+    the last round) only."""
+    sched = precompute_local_schedule(env, fraction=fraction, rounds=rounds,
+                                      seed=seed)
+    hist = History('local', records=sched.records, futility=0.0)
+    if not numeric:
+        return hist
 
-    for t in range(1, rounds + 1):
-        sel = selection.fedavg_select(rng, m, fraction)
-        crashed, cfrac = env.draw_round()
-        completed = sel & ~crashed
-        round_len, t_dist = _sync_round_common(env, sel, crashed, cfrac, full_tt)
-        if numeric:
-            trained = task.local_train(ns.local_w, t)
-            ns.local_w = protocol.masked_select(_to_j(completed), trained, ns.local_w)
-        rec = RoundRecord(round=t, round_len=round_len, t_dist=0.0,
-                          eur=0.0, sr=0.0, vv=0.0,
-                          n_picked=0, n_committed=int(completed.sum()),
-                          n_crashed=int(crashed.sum()))
-        if numeric and (t % eval_every == 0 or t == rounds):
-            gw = protocol.aggregate(ns.local_w, jnp.asarray(env.weights))
-            _record_eval(hist, rec, task, gw)
-        hist.records.append(rec)
+    ns = _NumericState(task, env.m, seed)
+    weights = jnp.asarray(env.weights)
+    evals = _eval_rounds(rounds, eval_every)
+    if engine == 'scan':
+        _scan_segments(task, hist, ns, sched.to_device(), weights,
+                       sched.records, evals, proto='local',
+                       local_train_fn=task.local_train)
+    elif engine == 'loop':
+        for t in range(1, rounds + 1):
+            i = t - 1
+            ns.local_w = protocol.local_only_round(
+                ns.local_w, completed=_to_j(sched.completed[i]),
+                local_train_fn=task.local_train, train_args=(t,))
+            if t in evals:
+                ns.global_w = protocol.aggregate(ns.local_w, weights)
+                _record_eval(hist, sched.records[i], task, ns.global_w)
+    else:
+        raise ValueError(f'unknown engine {engine!r} (want "scan" or "loop")')
 
-    if numeric:
-        hist.final_global = protocol.aggregate(ns.local_w, jnp.asarray(env.weights))
-    hist.futility = 0.0
+    # evals always include the final round, so the last aggregation is it
+    hist.final_global = ns.global_w
     return hist
 
 
 def run_fedasync(task: Optional[Task], env: FLEnv, *, fraction: float = 1.0,
                  rounds: int = 100, eval_every: int = 10,
                  numeric: bool = True, alpha: float = 0.6,
-                 staleness_exp: float = 0.5, seed: int = 0) -> History:
+                 staleness_exp: float = 0.5, seed: int = 0,
+                 engine: str = 'scan') -> History:
     """FedAsync baseline (Xie et al. [9], paper §II): every willing client
     trains every round and the server merges each arriving update
     immediately with staleness-polynomial mixing
@@ -836,64 +1131,50 @@ def run_fedasync(task: Optional[Task], env: FLEnv, *, fraction: float = 1.0,
 
     ``fraction`` is ignored (fully asynchronous — the paper's critique is
     precisely that the server must absorb every update: SR == 1 and m
-    model merges per virtual round).
+    model merges per virtual round).  The merge order and mixing weights
+    are pure event-process quantities, so they precompute like every other
+    schedule; under ``engine='scan'`` the arrival-ordered sequential mixes
+    run as an inner ``lax.scan`` inside the one compiled dispatch per eval
+    segment, bit-identical to the ``engine='loop'`` reference.
     """
     del fraction
-    m = env.m
-    hist = History('fedasync')
-    full_tt = env.full_train_time()
-    versions = np.zeros(m, dtype=float)   # global version at last pull
-    global_version = 0
-    ns = _NumericState(task, m, seed) if numeric else None
+    sched = precompute_fedasync_schedule(env, rounds=rounds, alpha=alpha,
+                                         staleness_exp=staleness_exp)
+    hist = History('fedasync', records=sched.records)
+    if not numeric:
+        return hist
 
-    for t in range(1, rounds + 1):
-        crashed, cfrac = env.draw_round()
-        arrival = env.t_dist(m) + 2 * env.t_updown + full_tt
-        arrival = np.where(~crashed, arrival, np.inf)
-        too_slow = arrival > env.t_lim
-        committed = ~crashed & ~too_slow
-        order = np.argsort(arrival, kind='stable')
-        staleness = np.maximum(0.0, global_version - versions)
-        alphas = np.where(committed,
-                          alpha * (1.0 + staleness) ** (-staleness_exp), 0.0)
+    ns = _NumericState(task, env.m, seed)
+    evals = _eval_rounds(rounds, eval_every)
+    if engine == 'scan':
+        _scan_segments(task, hist, ns, sched.to_device(), None,
+                       sched.records, evals, proto='fedasync',
+                       local_train_fn=task.local_train)
+    elif engine == 'loop':
+        for t in range(1, rounds + 1):
+            i = t - 1
+            ns.global_w, ns.local_w = protocol.fedasync_round(
+                ns.global_w, ns.local_w,
+                committed=_to_j(sched.committed[i]),
+                order=jnp.asarray(sched.order[i]),
+                alphas=jnp.asarray(sched.alphas[i], jnp.float32),
+                local_train_fn=task.local_train, train_args=(t,))
+            if t in evals:
+                _record_eval(hist, sched.records[i], task, ns.global_w)
+    else:
+        raise ValueError(f'unknown engine {engine!r} (want "scan" or "loop")')
 
-        if numeric:
-            trained = task.local_train(ns.local_w, t)
-            trained = protocol.masked_select(_to_j(committed), trained,
-                                             ns.local_w)
-            ns.global_w = protocol.fedasync_merge(
-                ns.global_w, trained, order=jnp.asarray(order),
-                alphas=jnp.asarray(alphas, jnp.float32))
-            # committed clients pull the fresh global model
-            ns.local_w = protocol.masked_select(
-                _to_j(committed), protocol.broadcast_global(ns.global_w, m),
-                protocol.masked_select(_to_j(committed), trained, ns.local_w))
-
-        global_version += int(committed.sum())
-        versions[committed] = global_version
-        rec = RoundRecord(
-            round=t,
-            round_len=_capped_round_len(arrival, committed, env.t_lim),
-            t_dist=env.t_dist(int(committed.sum())),
-            eur=float(committed.sum()) / m,
-            sr=1.0,  # every client syncs every round: max downlink pressure
-            vv=float(np.var(staleness[committed])) if committed.any() else 0.0,
-            n_picked=int(committed.sum()),
-            n_committed=int(committed.sum()),
-            n_crashed=int(crashed.sum()))
-        if numeric and (t % eval_every == 0 or t == rounds):
-            _record_eval(hist, rec, task, ns.global_w)
-        hist.records.append(rec)
-
-    if numeric:
-        hist.final_global = ns.global_w
+    hist.final_global = ns.global_w
     return hist
 
 
-PROTOCOLS = {
+RUNNERS = {
     'safa': run_safa,
     'fedavg': run_fedavg,
     'fedcs': run_fedcs,
     'local': run_local,
     'fedasync': run_fedasync,
 }
+
+# Backwards-compatible alias (pre-unification name).
+PROTOCOLS = RUNNERS

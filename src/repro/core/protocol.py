@@ -13,7 +13,7 @@ equivalence).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -182,6 +182,24 @@ class SyncSchedule(NamedTuple):
     round_idx: Any
 
 
+class LocalSchedule(NamedTuple):
+    """Fully-local baseline per-round masks, stacked [k, m]: ``completed``
+    is selected & survived — the only mask the numeric round needs."""
+    completed: Any
+    round_idx: Any
+
+
+class AsyncSchedule(NamedTuple):
+    """FedAsync per-round merge schedule, stacked [k, m]: the commit mask,
+    the arrival-order merge permutation and the staleness-scaled mixing
+    weights (0 for non-commits) — everything the sequential server mixes
+    depend on, precomputed so the round body is schedule-driven."""
+    committed: Any
+    order: Any
+    alphas: Any
+    round_idx: Any
+
+
 def _safa_scan(global_w, local_w, cache, schedule, weights, local_train_fn,
                use_kernel):
     """Unjitted scan body shared by the single-run and fleet engines."""
@@ -273,6 +291,73 @@ def fedavg_run_fleet(global_w, local_w, schedule: SyncSchedule, weights, *,
     return jax.vmap(run)(global_w, local_w, schedule, weights)
 
 
+def _local_scan(local_w, schedule, local_train_fn):
+    def step(l, sched):
+        return local_only_round(l, completed=sched.completed,
+                                local_train_fn=local_train_fn,
+                                train_args=(sched.round_idx,)), None
+
+    carry, _ = jax.lax.scan(step, local_w, schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=('local_train_fn',))
+def local_run_scan(local_w, schedule: LocalSchedule, *, local_train_fn):
+    """Fully-local counterpart of ``safa_run_scan``: k rounds of train +
+    survivor masking in one dispatch with the local stack donated.  There
+    is no global model in the carry — the caller aggregates at eval
+    points."""
+    return _local_scan(local_w, schedule, local_train_fn)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=('local_train_fn',))
+def local_run_fleet(local_w, schedule: LocalSchedule, *, local_train_fn):
+    """S fully-local simulations (local_w [S, m, ...], schedule fields
+    [S, k, m]) in one vmapped scan with the fleet stack donated."""
+    run = lambda l, s: _local_scan(l, s, local_train_fn)
+    return jax.vmap(run)(local_w, schedule)
+
+
+def _fedasync_scan(global_w, local_w, schedule, local_train_fn):
+    def step(carry, sched):
+        g, l = carry
+        return fedasync_round(
+            g, l, committed=sched.committed, order=sched.order,
+            alphas=sched.alphas, local_train_fn=local_train_fn,
+            train_args=(sched.round_idx,)), None
+
+    carry, _ = jax.lax.scan(step, (global_w, local_w), schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=('local_train_fn',))
+def fedasync_run_scan(global_w, local_w, schedule: AsyncSchedule, weights=None,
+                      *, local_train_fn):
+    """FedAsync counterpart of ``safa_run_scan``: k rounds in one dispatch
+    with the (global, local) carry donated.  The per-round arrival-ordered
+    server mixes run as an inner ``lax.scan`` over the schedule's
+    precomputed [k, m] merge-order/alpha tensors (``fedasync_merge``), so
+    the whole run is still a single compiled program.  ``weights`` is
+    accepted for signature parity with the other engines and ignored
+    (FedAsync's mixing weights live in the schedule)."""
+    del weights
+    return _fedasync_scan(global_w, local_w, schedule, local_train_fn)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=('local_train_fn',))
+def fedasync_run_fleet(global_w, local_w, schedule: AsyncSchedule,
+                       weights=None, *, local_train_fn):
+    """S FedAsync simulations (schedule fields [S, k, m]) in one vmapped
+    scan with the fleet-stacked (global, local) carry donated."""
+    del weights
+    run = lambda g, l, s: _fedasync_scan(g, l, s, local_train_fn)
+    return jax.vmap(run)(global_w, local_w, schedule)
+
+
 # ---------------------------------------------------------------------------
 # Baseline numeric rounds
 # ---------------------------------------------------------------------------
@@ -282,7 +367,6 @@ def fedavg_round(global_w, local_w, *, selected, completed, weights,
     """FedAvg: selected clients sync + train; aggregate over the selected
     clients that actually committed (renormalised weights); everyone else
     idles.  Returns (new_global, new_local)."""
-    m = selected.shape[0]
     base = distribute(global_w, local_w, selected)
     trained = local_train_fn(base, *train_args)
     ok = selected & completed
@@ -325,3 +409,20 @@ def fedasync_merge(global_w, trained, *, order, alphas):
 
     new_global, _ = jax.lax.scan(merge, global_w, order)
     return new_global
+
+
+def fedasync_round(global_w, local_w, *, committed, order, alphas,
+                   local_train_fn, train_args=()):
+    """One full numeric FedAsync round: every client trains, crashed/late
+    clients are masked out, the server merges the arrivals one-by-one
+    (``fedasync_merge``), and committed clients pull the fresh global
+    model.  Shared by the per-round loop engine and the scan body so the
+    two stay step-identical.  Returns (new_global, new_local)."""
+    m = committed.shape[0]
+    trained = local_train_fn(local_w, *train_args)
+    trained = masked_select(committed, trained, local_w)
+    new_global = fedasync_merge(global_w, trained, order=order, alphas=alphas)
+    # committed clients pull the fresh global model
+    new_local = masked_select(committed, broadcast_global(new_global, m),
+                              masked_select(committed, trained, local_w))
+    return new_global, new_local

@@ -122,6 +122,30 @@ def fedavg_select(rng: np.random.Generator, m: int, fraction: float) -> np.ndarr
     return sel
 
 
+def fedavg_select_batch(rngs, m: int, fraction,
+                        rounds: int = 1) -> np.ndarray:
+    """FedAvg selections for a whole fleet: [S, rounds, m] bool.
+
+    ``rngs`` is one ``np.random.Generator`` per member; ``fraction`` is [S]
+    (or a scalar).  Row (s, t) is bit-identical to the t-th sequential
+    ``fedavg_select(rngs[s], m, fraction[s])`` call — the without-replacement
+    draw has no batched Generator form that consumes the stream the same
+    way, so the per-round ``choice()`` calls stay the generator's own; only
+    the quota computation and the mask scatter are batched.
+    """
+    s = len(rngs)
+    fraction = np.broadcast_to(np.asarray(fraction, float), (s,))
+    # np.rint rounds half-to-even exactly like the scalar path's round()
+    quota = np.maximum(1, np.rint(fraction * m).astype(int))
+    sel = np.zeros((s, rounds, m), bool)
+    rows = np.arange(rounds)
+    for i, rng in enumerate(rngs):
+        idx = np.stack([rng.choice(m, size=quota[i], replace=False)
+                        for _ in range(rounds)])
+        sel[i, rows[:, None], idx] = True
+    return sel
+
+
 def fedcs_select(est_round_time: np.ndarray, fraction: float,
                  deadline: float) -> np.ndarray:
     """FedCS (Nishio & Yonetani): the server estimates each client's round
@@ -140,4 +164,30 @@ def fedcs_select(est_round_time: np.ndarray, fraction: float,
             n += 1
     if n == 0:  # degenerate: admit the single fastest client
         sel[order[0]] = True
+    return sel
+
+
+def fedcs_select_batch(est_round_time: np.ndarray, fraction,
+                       deadline) -> np.ndarray:
+    """FedCS for a whole fleet in one vectorised pass: [S, m] bool.
+
+    est_round_time: [S, m]; fraction/deadline: [S] (or scalars).  Row s is
+    bit-identical to ``fedcs_select(est_round_time[s], ...)`` — the scalar
+    greedy "admit fastest fitting clients until quota" loop becomes a rank
+    comparison: a client is admitted iff it fits the deadline and its
+    stable speed rank among fitting clients beats the quota.
+    """
+    s, m = est_round_time.shape
+    fraction = np.broadcast_to(np.asarray(fraction, float), (s,))
+    deadline = np.broadcast_to(np.asarray(deadline, float), (s,))
+    quota = np.maximum(1, np.rint(fraction * m).astype(int))
+    fits = est_round_time <= deadline[:, None]
+    order = np.argsort(np.where(fits, est_round_time, np.inf), axis=-1,
+                       kind='stable')
+    rank = np.argsort(order, axis=-1, kind='stable')  # inverse perm
+    sel = fits & (rank < quota[:, None])
+    # degenerate: nothing fits the deadline -> admit the single fastest
+    none = ~fits.any(axis=-1)
+    fastest = np.argsort(est_round_time, axis=-1, kind='stable')[:, 0]
+    sel[none, fastest[none]] = True
     return sel

@@ -11,11 +11,9 @@ clients dim.
 from __future__ import annotations
 
 import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
 from repro.core.federation import Task

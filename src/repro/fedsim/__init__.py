@@ -62,8 +62,12 @@ class FLEnv:
         """Model upload or download time per client (Eq. 17 terms)."""
         return self.model_size_mb * 8.0 / self.client_bw_mbps
 
-    def t_dist(self, n_copies: int) -> float:
-        """Server-side distribution overhead (Eq. 19)."""
+    def t_dist(self, n_copies):
+        """Server-side distribution overhead (Eq. 19).
+
+        ``n_copies`` may be an int or an ndarray of per-round copy counts —
+        the schedule precomputes call this with whole [rounds] (or
+        [S, rounds]) count tensors at once."""
         return n_copies * self.model_size_mb * 8.0 / self.server_bw_mbps
 
     def full_train_time(self) -> np.ndarray:

@@ -21,7 +21,6 @@ regression-tested against each other.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -15,7 +15,6 @@ mapping query head h to KV head h // (H // KH) in the K/V index maps.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -17,8 +17,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-
 from repro.models.config import ModelConfig
 
 

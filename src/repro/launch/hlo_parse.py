@@ -11,7 +11,7 @@ multipliers (nested scans compose).
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 _DTYPE_BYTES = {
     'pred': 1, 's8': 1, 'u8': 1, 'f8e4m3fn': 1, 'f8e5m2': 1,

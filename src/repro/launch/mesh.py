@@ -8,7 +8,6 @@ import; tests and benches see the real (1-device) platform.
 from __future__ import annotations
 
 import jax
-import numpy as np
 from jax.sharding import Mesh
 
 

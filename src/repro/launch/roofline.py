@@ -15,7 +15,6 @@ ragged-all-to-all ops).  Hardware constants: TPU v5e.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Optional
 

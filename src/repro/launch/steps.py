@@ -12,20 +12,15 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro import sharding as shd
 from repro.core import protocol
-from repro.launch import mesh as mesh_lib
-from repro.models import common as cm
-from repro.models import decode as dec
 from repro.models.config import ModelConfig
-from repro.models.model import Model, build_model
+from repro.models.model import Model
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,6 @@ mesh.  On real hardware the identical code runs on the production mesh.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

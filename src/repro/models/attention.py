@@ -7,7 +7,6 @@ for the Pallas ``swa_attention`` kernel.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -10,9 +10,8 @@ No flax/haiku in this environment, so we use a minimal convention:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -10,9 +10,6 @@ what qualifies them for ``long_500k``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -88,7 +85,6 @@ def _attn_decode(layer_attn, h, kc, vc, positions, length, cfg: ModelConfig):
 
 def decode_step(params, cache, tokens, cfg: ModelConfig):
     """tokens: [B, 1] -> (new_cache, logits [B, V_padded])."""
-    B = tokens.shape[0]
     x = tfm.embed_tokens(params, tokens, cfg)
     length = cache['length']
     new_cache = dict(cache)

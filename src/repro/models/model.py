@@ -1,12 +1,7 @@
 """Public model facade: build once from a ModelConfig, use everywhere."""
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 
 from repro.models import common as cm
 from repro.models import decode as dec

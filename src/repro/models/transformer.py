@@ -7,7 +7,6 @@ essential for CPU-hosted multi-pod dry-runs.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ provided for the LLM-scale silo-mode examples.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

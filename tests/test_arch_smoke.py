@@ -5,7 +5,6 @@ decode step on CPU, asserting output shapes and no NaNs.
 The FULL configs are exercised only via the dry-run (ShapeDtypeStruct
 lowering, no allocation) — see repro.launch.dryrun and EXPERIMENTS.md.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core import bias, federation
-from repro.data import make_regression, make_svm, partition
-from repro.data.tasks import regression_task, svm_task
+from repro.data import make_regression, partition
+from repro.data.tasks import regression_task
 from repro.fedsim import FLEnv
 
 

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import federation, protocol, selection
+from repro.core import federation, selection
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
 from repro.fedsim import FLEnv, env_grid
@@ -81,6 +81,51 @@ class TestFleetEngine:
             _assert_tree_equal(a.final_global, b.final_global)
             assert a.evals() == b.evals()
 
+    @pytest.mark.parametrize('proto', ['fedcs', 'local', 'fedasync'])
+    def test_every_proto_fleet_bit_identical(self, reg_task, proto):
+        """Acceptance criterion: run_sweep(engine='fleet') takes members of
+        every protocol, bit-identical per member to sequential scans."""
+        kw = dict(rounds=8, eval_every=4, proto=proto)
+        hf = federation.run_sweep(reg_task, _members(4), engine='fleet', **kw)
+        hs = federation.run_sweep(reg_task, _members(4),
+                                  engine='sequential', **kw)
+        for a, b in zip(hf, hs):
+            _assert_tree_equal(a.final_global, b.final_global)
+            assert a.evals() == b.evals()
+
+    def test_local_fleet_matches_run_local(self, reg_task):
+        """The fleet member result equals the standalone single-run API
+        (including the vmapped eval-point aggregation)."""
+        hf = federation.run_sweep(reg_task, _members(4), rounds=8,
+                                  eval_every=4, proto='local')
+        mem = _members(4)[2]
+        h = federation.run_local(reg_task, mem.env, fraction=mem.fraction,
+                                 rounds=8, eval_every=4, engine='scan')
+        _assert_tree_equal(hf[2].final_global, h.final_global)
+        assert hf[2].evals() == h.evals()
+
+    def test_fedasync_fleet_matches_run_fedasync(self, reg_task):
+        hf = federation.run_sweep(reg_task, _members(4), rounds=8,
+                                  eval_every=4, proto='fedasync')
+        mem = _members(4)[1]
+        h = federation.run_fedasync(reg_task, mem.env, rounds=8,
+                                    eval_every=4, engine='scan')
+        _assert_tree_equal(hf[1].final_global, h.final_global)
+        assert hf[1].evals() == h.evals()
+
+    @pytest.mark.parametrize('proto', ['fedavg', 'fedcs', 'local',
+                                       'fedasync'])
+    def test_timing_only_sweep_matches_single_runs_every_proto(self, proto):
+        hists = federation.run_sweep(None, _members(4), rounds=12,
+                                     proto=proto, numeric=False)
+        fn = federation.RUNNERS[proto]
+        for mem, h in zip(_members(4), hists):
+            single = fn(None, mem.env, fraction=mem.fraction, rounds=12,
+                        numeric=False, seed=mem.seed)
+            assert [r.round_len for r in h.records] == \
+                [r.round_len for r in single.records]
+            assert h.futility == single.futility
+
     def test_fleet_packed_kernel_matches_reference(self, reg_task):
         """use_kernel='packed' under the fleet vmap (batched-grid pallas
         dispatch) stays numerically on the reference trajectory."""
@@ -131,7 +176,7 @@ class TestFleetEngine:
     def test_sweep_validation(self, reg_task):
         with pytest.raises(ValueError, match='proto'):
             federation.run_sweep(reg_task, _members(2), rounds=2,
-                                 proto='fedasync')
+                                 proto='gossip')
         with pytest.raises(ValueError, match='engine'):
             federation.run_sweep(reg_task, _members(2), rounds=2,
                                  engine='warp')
@@ -223,6 +268,54 @@ class TestFleetSchedule:
                                               getattr(single, k))
             assert got.records == single.records
             assert got.futility == single.futility
+
+    @pytest.mark.parametrize('fedcs', [False, True])
+    def test_sync_fleet_precompute_bit_identical_to_singles(self, fedcs):
+        """The [S, rounds, m] sync host pass (no per-member Python loop)
+        == S independent precompute_sync_schedule calls: masks, records
+        and futility — for both the FedCS rank-comparison selection and
+        the rng-stream FedAvg selection."""
+        members = _members(8)
+        for s, mem in enumerate(members):   # vary the selection seeds too
+            mem.seed = s % 3
+        fleet = federation.precompute_sync_fleet_schedule(members, rounds=20,
+                                                          fedcs=fedcs)
+        singles = []
+        rebuild = _members(8)
+        for s, mem in enumerate(rebuild):
+            mem.seed = s % 3
+            singles.append(federation.precompute_sync_schedule(
+                mem.env, fraction=mem.fraction, rounds=20, seed=mem.seed,
+                fedcs=fedcs))
+        stacked = federation.SyncFleetSchedule.stack(singles)
+        for k in federation.SyncFleetSchedule.MASKS:
+            np.testing.assert_array_equal(getattr(fleet, k),
+                                          getattr(stacked, k))
+        np.testing.assert_array_equal(fleet.futility, stacked.futility)
+        assert fleet.records == stacked.records
+
+    def test_sync_fleet_precompute_large_m(self):
+        """Same identity at paper scale (m=100) where the deadline culls
+        slow clients, covering the too-slow-reckoned-crashed branch."""
+        base = dict(m=100, crash_prob=0.5, dataset_size=70000, batch_size=40,
+                    epochs=5, t_lim=5600.0, seed=2)
+        def members():
+            return [federation.SweepMember(env=e, fraction=f, seed=sd)
+                    for e, f, sd in zip(env_grid(base, draw_seed=(0, 1, 2)),
+                                        (0.3, 0.7, 1.0), (0, 1, 2))]
+        for fedcs in (False, True):
+            fleet = federation.precompute_sync_fleet_schedule(
+                members(), rounds=12, fedcs=fedcs)
+            singles = [federation.precompute_sync_schedule(
+                mem.env, fraction=mem.fraction, rounds=12, seed=mem.seed,
+                fedcs=fedcs) for mem in members()]
+            for s, single in enumerate(singles):
+                got = fleet.member(s)
+                for k in federation.SyncFleetSchedule.MASKS:
+                    np.testing.assert_array_equal(getattr(got, k),
+                                                  getattr(single, k))
+                assert got.records == single.records
+                assert got.futility == single.futility
 
     def test_shapes_and_round_idx(self):
         fleet = federation.precompute_fleet_schedule(_members(4), rounds=7)

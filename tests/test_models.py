@@ -1,5 +1,4 @@
 """Model substrate correctness: attention paths, decode==forward, MoE, etc."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

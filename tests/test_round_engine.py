@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import federation, protocol
+from repro.core import federation, protocol, selection
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
 from repro.fedsim import FLEnv
@@ -69,10 +69,64 @@ class TestScanEngine:
                         jax.tree.leaves(hists['scan'].final_global)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
+    def test_fedcs_scan_bit_identical_to_loop(self, reg_task):
+        hists = {}
+        for engine in ('loop', 'scan'):
+            hists[engine] = federation.run_fedcs(
+                reg_task, _env(), fraction=0.5, rounds=10, eval_every=5,
+                engine=engine)
+        for a, b in zip(jax.tree.leaves(hists['loop'].final_global),
+                        jax.tree.leaves(hists['scan'].final_global)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_local_scan_bit_identical_to_loop(self, reg_task):
+        """run_local rides the same scan engine contract: one donated-carry
+        dispatch per eval segment, bit-identical to the per-round loop."""
+        hists = {}
+        for engine in ('loop', 'scan'):
+            hists[engine] = federation.run_local(
+                reg_task, _env(), fraction=0.5, rounds=12, eval_every=6,
+                engine=engine)
+        for a, b in zip(jax.tree.leaves(hists['loop'].final_global),
+                        jax.tree.leaves(hists['scan'].final_global)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert hists['loop'].evals() == hists['scan'].evals()
+
+    def test_fedasync_scan_bit_identical_to_loop(self, reg_task):
+        """The arrival-ordered sequential merges compile into an inner
+        lax.scan over the precomputed merge-order/alpha schedule without
+        changing a bit vs the per-round loop."""
+        hists = {}
+        for engine in ('loop', 'scan'):
+            hists[engine] = federation.run_fedasync(
+                reg_task, _env(), rounds=12, eval_every=6, engine=engine)
+        for a, b in zip(jax.tree.leaves(hists['loop'].final_global),
+                        jax.tree.leaves(hists['scan'].final_global)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert hists['loop'].evals() == hists['scan'].evals()
+
+    def test_every_runner_accepts_scan_engine(self, reg_task):
+        """Acceptance criterion: every RUNNERS entry takes engine='scan'
+        (and 'loop'), returning evals at the same rounds."""
+        assert set(federation.RUNNERS) == {'safa', 'fedavg', 'fedcs',
+                                           'local', 'fedasync'}
+        for name, fn in federation.RUNNERS.items():
+            kw = dict(fraction=0.5, rounds=4, eval_every=2, engine='scan')
+            if name == 'safa':
+                kw['lag_tolerance'] = 5
+            h = fn(reg_task, _env(), **kw)
+            assert [r for r, _ in h.evals()] == [2, 4], name
+
     def test_unknown_engine_rejected(self, reg_task):
         with pytest.raises(ValueError, match='engine'):
             federation.run_safa(reg_task, _env(), fraction=0.5,
                                 lag_tolerance=5, rounds=2, engine='warp')
+        with pytest.raises(ValueError, match='engine'):
+            federation.run_local(reg_task, _env(), fraction=0.5, rounds=2,
+                                 engine='warp')
+        with pytest.raises(ValueError, match='engine'):
+            federation.run_fedasync(reg_task, _env(), rounds=2,
+                                    engine='warp')
 
     def test_schedule_independent_of_numeric_mode(self):
         """Timing metrics come from the precomputed schedule alone."""
@@ -92,6 +146,53 @@ class TestScanEngine:
             c, f = e2.draw_round()
             np.testing.assert_array_equal(c_all[t], c)
             np.testing.assert_array_equal(f_all[t], f)
+
+
+class TestBatchSelectors:
+    def test_fedcs_select_batch_row_identity(self):
+        """The rank-comparison form == the scalar greedy loop, row for
+        row, over random estimate/fraction/deadline grids."""
+        rng = np.random.default_rng(0)
+        for m in (1, 2, 5, 33, 100):
+            est = rng.exponential(100.0, (16, m)) + 5.0
+            # inject duplicate estimates so stable tie-breaks are exercised
+            est[:, : m // 2] = np.round(est[:, : m // 2], -1)
+            fraction = rng.choice([0.1, 0.3, 0.5, 0.9, 1.0], 16)
+            deadline = rng.choice([50.0, 120.0, 400.0, 1e9], 16)
+            batch = selection.fedcs_select_batch(est, fraction, deadline)
+            for s in range(16):
+                ref = selection.fedcs_select(est[s], fraction[s], deadline[s])
+                np.testing.assert_array_equal(batch[s], ref, err_msg=f'{m}/{s}')
+
+    def test_fedcs_select_batch_degenerate_no_fit(self):
+        """No client fits the deadline -> the single fastest is admitted,
+        in every row (including rows where some clients do fit)."""
+        est = np.array([[90.0, 50.0, 70.0],     # nothing fits deadline=10
+                        [90.0, 5.0, 70.0],      # one fits
+                        [50.0, 50.0, 50.0]])    # tie: stable pick of idx 0
+        deadline = np.array([10.0, 10.0, 10.0])
+        batch = selection.fedcs_select_batch(est, 0.7, deadline)
+        for s in range(3):
+            ref = selection.fedcs_select(est[s], 0.7, deadline[s])
+            np.testing.assert_array_equal(batch[s], ref)
+        np.testing.assert_array_equal(batch[0], [False, True, False])
+        np.testing.assert_array_equal(batch[2], [True, False, False])
+
+    def test_fedavg_select_batch_row_identity(self):
+        """Batched selections == sequential scalar calls consuming
+        identically-seeded generators — the sync fleet precompute's rng
+        contract."""
+        m, rounds = 7, 5
+        fractions = np.array([0.1, 0.5, 1.0, 0.43])
+        batch = selection.fedavg_select_batch(
+            [np.random.default_rng(100 + s) for s in range(4)], m,
+            fractions, rounds)
+        assert batch.shape == (4, rounds, m)
+        for s in range(4):
+            rng = np.random.default_rng(100 + s)
+            for t in range(rounds):
+                ref = selection.fedavg_select(rng, m, fractions[s])
+                np.testing.assert_array_equal(batch[s, t], ref)
 
 
 class TestPackedAggregation:

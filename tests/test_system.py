@@ -5,10 +5,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import INPUT_SHAPES, get_config
-from repro.core import federation, protocol
+from repro.core import protocol
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
 from repro.fedsim import FLEnv
