@@ -8,7 +8,9 @@ import jax.numpy as jnp
 
 from benchmarks.common import Timer, emit
 from repro.kernels import ref
-from repro.kernels.comm_quant import QBLOCK, dequantize, quantize
+from repro.kernels.comm_quant import (QBLOCK, dequantize, dequantize_packed,
+                                      quantize, quantize_packed)
+from repro.kernels.ops import comm_bytes
 from repro.kernels.safa_aggregate import safa_aggregate
 from repro.kernels.swa_attention import swa_attention
 
@@ -53,9 +55,26 @@ def run():
     us_d = _time(dequantize, q, s, n=x.shape[0])
     # ceiling form, matching ops.comm_bytes: one f32 scale per started block
     raw, wire = 4 * x.size, x.size + 4 * (-(-x.size // QBLOCK))
+    # the packed wire format ships tile padding + full scale rows — report
+    # both layouts so accounting matches what each path actually sends
+    tree = {'x': x}
+    wire_packed = comm_bytes(tree, quantized=True, layout='packed')
+    raw_packed = comm_bytes(tree, quantized=False, layout='packed')
     emit('kernel/comm_quant/4M', f'{us_q:.0f}',
-         f'dequant_us={us_d:.0f};wire_bytes={wire};raw_bytes={raw};'
-         f'compression={raw / wire:.2f}x')
+         f'dequant_us={us_d:.0f};wire_bytes_tree={wire};raw_bytes_tree={raw};'
+         f'wire_bytes_packed={wire_packed};raw_bytes_packed={raw_packed};'
+         f'compression_tree={raw / wire:.2f}x;'
+         f'compression_packed={raw_packed / wire_packed:.2f}x')
+
+    # --- quantize_packed: whole [m, N] upload buffer in one dispatch ---------
+    m_q, n_q = 16, 1_048_576
+    xp = jax.random.normal(key, (m_q, n_q))
+    us_qp = _time(quantize_packed, xp)
+    qp, sp = quantize_packed(xp)
+    us_dp = _time(dequantize_packed, qp, sp)
+    emit('kernel/quantize_packed/16x1M', f'{us_qp:.0f}',
+         f'dequant_packed_us={us_dp:.0f};dispatches=1;'
+         f'per_leaf_equivalent_dispatches={m_q}')
 
     # --- swa_attention (interpret mode: correctness-scale shapes) ------------
     B, S, H, KH, D = 1, 512, 4, 2, 64

@@ -15,13 +15,14 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (accuracy, bias_curves, eur, kernels_bench,
+from benchmarks import (accuracy, bias_curves, comm_path, eur, kernels_bench,
                         lag_tolerance, roofline_table, round_engine,
                         round_length, selection_ablation, sr_futility)
 
 SECTIONS = {
     'round_length': lambda full: (round_length.run(), round_length.summarize()),
     'round_engine': lambda full: round_engine.run(),
+    'comm_path': lambda full: comm_path.run(),
     'sr_futility': lambda full: sr_futility.run(),
     'accuracy': lambda full: accuracy.run(full=full),
     'lag_tolerance': lambda full: lag_tolerance.run(),
@@ -45,6 +46,9 @@ SMOKE_SECTIONS = {
     'round_length': lambda: (round_length.run(rounds=3),
                              round_length.summarize(rounds=3)),
     'round_engine': lambda: round_engine.run(rounds=6, reps=1),
+    # comm_path asserts the 2-dispatch invariant of the compressed wire
+    # path on every run, so the smoke pass is also a regression guard
+    'comm_path': lambda: comm_path.run(rounds=4, reps=1),
     'eur': lambda: eur.run(rounds=3),
     'fleet_sweep': lambda: __import__(
         'benchmarks.fleet_sweep', fromlist=['run']).run(rounds=6, s=4,

@@ -227,24 +227,39 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
 
 
 def _quantized_train_fn(base_fn):
-    """int8-compressed uplink (beyond-paper; comm_quant kernel): the server
-    sees the dequantised client update, exactly as a real compressed
-    transfer would deliver it.  The wrapper is memoised on the owning Task
-    so it stays a stable static argument to ``safa_run_scan`` (a fresh
-    closure per run would retrace the whole scanned program) without
-    pinning Tasks beyond their own lifetime."""
+    """int8-compressed uplink, per-leaf REFERENCE path (comm_quant kernel):
+    each client quantises each leaf of its own update independently —
+    exactly what a real compressed transfer carries — costing 2 pallas
+    dispatches per leaf per client.  This is the bit-identity ground truth
+    for the packed fast path (``wire='int8'``), which ships the same
+    numbers in 2 dispatches total.
+
+    The wrapper is memoised on the owning Task, keyed by the wrapped
+    function, so it stays a stable static argument to ``safa_run_scan``
+    (a fresh closure per run would retrace the whole scanned program)
+    without pinning Tasks beyond their own lifetime — and without
+    handing back a stale closure when a *different* bound method of the
+    same Task gets wrapped later."""
     def train_fn(stacked, *args):
         from repro.kernels import ops as kops
         trained = base_fn(stacked, *args)
-        return kops.dequantize_tree(kops.quantize_tree(trained), trained)
+
+        def per_leaf(x):
+            flat = x.reshape(x.shape[0], -1)
+            rows = [kops.dequantize(*kops.quantize(flat[k]), n=flat.shape[1])
+                    for k in range(flat.shape[0])]
+            return jnp.stack(rows).reshape(x.shape)
+
+        return jax.tree.map(per_leaf, trained)
 
     owner = getattr(base_fn, '__self__', None)
     if owner is None:
         return train_fn
-    cached = getattr(owner, '_quantized_train_fn', None)
-    if cached is None:
-        owner._quantized_train_fn = cached = train_fn
-    return cached
+    key = getattr(base_fn, '__func__', base_fn)
+    cache = owner.__dict__.setdefault('_quantized_train_fns', {})
+    if key not in cache:
+        cache[key] = train_fn
+    return cache[key]
 
 
 def _eval_rounds(rounds: int, eval_every: int):
@@ -265,7 +280,7 @@ def _record_eval(hist: History, rec: RoundRecord, task: Task, global_w):
 
 def _scan_segments(task: Task, hist: History, ns: _NumericState, dev,
                    weights, records, evals, *, proto: str, local_train_fn,
-                   use_kernel=False):
+                   use_kernel=False, wire='f32'):
     """Drive one numeric run through the scan engine: one donated-carry
     dispatch per eval segment.  Shared by every single-run orchestrator
     and ``run_sweep(engine='sequential')`` so they stay step-identical.
@@ -280,11 +295,12 @@ def _scan_segments(task: Task, hist: History, ns: _NumericState, dev,
         if proto == 'safa':
             ns.global_w, ns.local_w, ns.cache = protocol.safa_run_scan(
                 ns.global_w, ns.local_w, ns.cache, seg, weights,
-                local_train_fn=local_train_fn, use_kernel=use_kernel)
+                local_train_fn=local_train_fn, use_kernel=use_kernel,
+                wire=wire)
         elif proto in ('fedavg', 'fedcs'):
             ns.global_w, ns.local_w = protocol.fedavg_run_scan(
                 ns.global_w, ns.local_w, seg, weights,
-                local_train_fn=local_train_fn)
+                local_train_fn=local_train_fn, wire=wire)
         elif proto == 'local':
             ns.local_w = protocol.local_run_scan(
                 ns.local_w, seg, local_train_fn=local_train_fn)
@@ -301,7 +317,17 @@ def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
              lag_tolerance: int, rounds: int, eval_every: int = 10,
              numeric: bool = True, use_kernel=False,
              quantize_uploads: bool = False, seed: int = 0,
-             engine: str = 'scan') -> History:
+             engine: str = 'scan', wire: str = 'f32') -> History:
+    """``wire='int8'`` runs every round on the compressed-wire fast path
+    (packed int8 uplink + fused dequant-aggregate kernel, 2 dispatches per
+    round); ``quantize_uploads=True`` is the per-leaf reference form of
+    the same wire (2 dispatches per leaf per client), kept as the
+    bit-identity ground truth — the two are mutually exclusive."""
+    protocol.check_wire(wire)
+    if quantize_uploads and wire != 'f32':
+        raise ValueError(
+            "quantize_uploads=True is the per-leaf reference for the packed "
+            "wire='int8' path; pass one or the other, not both")
     m = env.m
     sched = precompute_safa_schedule(env, fraction=fraction,
                                      lag_tolerance=lag_tolerance,
@@ -319,7 +345,8 @@ def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
     if engine == 'scan':
         _scan_segments(task, hist, ns, sched.to_device(), weights,
                        sched.records, evals, proto='safa',
-                       local_train_fn=train_fn, use_kernel=use_kernel)
+                       local_train_fn=train_fn, use_kernel=use_kernel,
+                       wire=wire)
     elif engine == 'loop':
         for t in range(1, rounds + 1):
             i = t - 1
@@ -331,7 +358,7 @@ def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
                 undrafted=_to_j(sched.undrafted[i]),
                 deprecated=_to_j(sched.deprecated[i]), weights=weights,
                 local_train_fn=train_fn, train_args=(t,),
-                use_kernel=use_kernel)
+                use_kernel=use_kernel, wire=wire)
             if t in evals:
                 _record_eval(hist, sched.records[i], task, ns.global_w)
     else:
@@ -455,7 +482,10 @@ def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
 def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
                rounds: int, eval_every: int = 10, numeric: bool = True,
                seed: int = 0, fedcs: bool = False,
-               engine: str = 'scan') -> History:
+               engine: str = 'scan', wire: str = 'f32') -> History:
+    """``wire='int8'`` ships the uploads through the packed int8 wire
+    (cross-protocol comparison against SAFA's compressed fast path)."""
+    protocol.check_wire(wire)
     sched = precompute_sync_schedule(env, fraction=fraction, rounds=rounds,
                                      seed=seed, fedcs=fedcs)
     hist = History('fedcs' if fedcs else 'fedavg', records=sched.records,
@@ -470,14 +500,14 @@ def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
         _scan_segments(task, hist, ns, sched.to_device(), weights,
                        sched.records, evals,
                        proto='fedcs' if fedcs else 'fedavg',
-                       local_train_fn=task.local_train)
+                       local_train_fn=task.local_train, wire=wire)
     elif engine == 'loop':
         for t in range(1, rounds + 1):
             i = t - 1
             ns.global_w, ns.local_w = protocol.fedavg_round(
                 ns.global_w, ns.local_w, selected=_to_j(sched.selected[i]),
                 completed=_to_j(sched.completed[i]), weights=weights,
-                local_train_fn=task.local_train, train_args=(t,))
+                local_train_fn=task.local_train, train_args=(t,), wire=wire)
             if t in evals:
                 _record_eval(hist, sched.records[i], task, ns.global_w)
     else:
@@ -952,7 +982,8 @@ def precompute_sync_fleet_schedule(members, *, rounds: int,
 def run_sweep(task: Optional[Task], members, *, rounds: int,
               proto: str = 'safa', eval_every: int = 10,
               numeric: bool = True, use_kernel=False,
-              engine: str = 'fleet', shard: bool = True) -> list:
+              engine: str = 'fleet', shard: bool = True,
+              wire: str = 'f32') -> list:
     """Run S = len(members) simulations of one protocol as a batched fleet.
 
     Returns one ``History`` per member, in order.  ``engine='fleet'``
@@ -976,6 +1007,11 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
     communication (on CPU, ``--xla_force_host_platform_device_count=N``
     turns N cores into N such devices).
 
+    ``wire='int8'`` runs every member on the compressed int8 wire
+    (SAFA: fused quantize + dequant-aggregate; FedAvg/FedCS: packed
+    quantize/dequantize round-trip); 'local' and 'fedasync' have no
+    per-round upload-aggregate wire and reject it.
+
     Per-member bit-identity with sequential runs holds when the Task's
     math lowers batch-size independently — true for the shipped
     regression/SVM tasks, whose predictions are elementwise-mul+reduce
@@ -989,6 +1025,11 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
     if engine not in ('fleet', 'sequential'):
         raise ValueError(
             f'unknown engine {engine!r} (want "fleet" or "sequential")')
+    protocol.check_wire(wire)
+    if wire != 'f32' and proto in ('local', 'fedasync'):
+        raise ValueError(
+            f"proto {proto!r} has no upload-aggregate wire; wire='int8' "
+            f"applies to safa/fedavg/fedcs only")
     if not members:
         raise ValueError('empty sweep')
     m = members[0].env.m
@@ -1050,10 +1091,11 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
             if proto == 'safa':
                 g, l, c = protocol.safa_run_fleet(
                     g, l, c, seg, weights, local_train_fn=task.local_train,
-                    use_kernel=use_kernel)
+                    use_kernel=use_kernel, wire=wire)
             elif proto in ('fedavg', 'fedcs'):
                 g, l = protocol.fedavg_run_fleet(
-                    g, l, seg, weights, local_train_fn=task.local_train)
+                    g, l, seg, weights, local_train_fn=task.local_train,
+                    wire=wire)
             elif proto == 'local':
                 l = protocol.local_run_fleet(
                     l, seg, local_train_fn=task.local_train)
@@ -1078,7 +1120,7 @@ def run_sweep(task: Optional[Task], members, *, rounds: int,
                            jnp.asarray(mem.env.weights), fleet.records[s],
                            evals, proto=proto,
                            local_train_fn=task.local_train,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, wire=wire)
             hist.final_global = ns.global_w
     return hists
 

@@ -130,18 +130,37 @@ def discriminative_aggregation(cache, trained, global_prev, *, picked,
 # One full numeric SAFA round (jit-able), generic over a local-train fn
 # ---------------------------------------------------------------------------
 
+def check_wire(wire: str):
+    if wire not in ('f32', 'int8'):
+        raise ValueError(f"unknown wire {wire!r} (want 'f32' or 'int8')")
+
+
 def safa_round(global_w, local_w, cache, *, sync_mask, completed, picked,
                undrafted, deprecated, weights, local_train_fn, train_args=(),
-               use_kernel: bool = False):
+               use_kernel: bool = False, wire: str = 'f32'):
     """Run one SAFA round numerically.
 
     local_train_fn(stacked_params, *train_args) -> stacked trained params
     (it is responsible for vmapping over the clients dim).
 
+    ``wire='int8'`` runs the compressed-wire fast path: the client
+    uploads cross the simulated wire as one block-quantised int8 pack
+    buffer and the server dequantises them in-register inside the fused
+    Eq. 6-8 kernel (``ops.safa_compressed_update``) — exactly 2 kernel
+    dispatches per round regardless of model depth.  ``use_kernel`` is
+    ignored on that path (the fused kernel IS the aggregation).
+
     Returns (new_global, new_local, new_cache).
     """
+    check_wire(wire)
     base = distribute(global_w, local_w, sync_mask)
     trained = local_train_fn(base, *train_args)
+    if wire == 'int8':
+        from repro.kernels import ops as kops
+        return kops.safa_compressed_update(
+            base, trained, cache, global_w, picked=picked,
+            undrafted=undrafted, deprecated=deprecated, completed=completed,
+            weights=weights)
     # crashed clients make no visible progress this round
     trained = masked_select(completed, trained, base)
     res = discriminative_aggregation(
@@ -201,7 +220,7 @@ class AsyncSchedule(NamedTuple):
 
 
 def _safa_scan(global_w, local_w, cache, schedule, weights, local_train_fn,
-               use_kernel):
+               use_kernel, wire='f32'):
     """Unjitted scan body shared by the single-run and fleet engines."""
     def step(carry, sched):
         g, l, c = carry
@@ -210,7 +229,7 @@ def _safa_scan(global_w, local_w, cache, schedule, weights, local_train_fn,
             picked=sched.picked, undrafted=sched.undrafted,
             deprecated=sched.deprecated, weights=weights,
             local_train_fn=local_train_fn, train_args=(sched.round_idx,),
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, wire=wire)
         return out, None
 
     carry, _ = jax.lax.scan(step, (global_w, local_w, cache), schedule)
@@ -218,24 +237,26 @@ def _safa_scan(global_w, local_w, cache, schedule, weights, local_train_fn,
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2),
-                   static_argnames=('local_train_fn', 'use_kernel'))
+                   static_argnames=('local_train_fn', 'use_kernel', 'wire'))
 def safa_run_scan(global_w, local_w, cache, schedule: RoundSchedule, weights,
-                  *, local_train_fn, use_kernel=False):
+                  *, local_train_fn, use_kernel=False, wire='f32'):
     """Run ``k = len(schedule.round_idx)`` SAFA rounds as one compiled scan.
 
     Bit-identical to ``k`` per-round ``safa_round`` dispatches: the scan
     body is the same trace, compiled once.  The carry is donated, so the
     caller's buffers are reused in place across the whole run.
+    ``wire='int8'`` compiles the compressed-wire round body — 2 kernel
+    dispatches per round inside the one scanned program.
     Returns (new_global, new_local, new_cache).
     """
     return _safa_scan(global_w, local_w, cache, schedule, weights,
-                      local_train_fn, use_kernel)
+                      local_train_fn, use_kernel, wire)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2),
-                   static_argnames=('local_train_fn', 'use_kernel'))
+                   static_argnames=('local_train_fn', 'use_kernel', 'wire'))
 def safa_run_fleet(global_w, local_w, cache, schedule: RoundSchedule, weights,
-                   *, local_train_fn, use_kernel=False):
+                   *, local_train_fn, use_kernel=False, wire='f32'):
     """Run S independent SAFA simulations as ONE vmapped-scan dispatch.
 
     Every operand gains a leading fleet axis: global_w [S, ...] leaves,
@@ -254,17 +275,18 @@ def safa_run_fleet(global_w, local_w, cache, schedule: RoundSchedule, weights,
     Returns (new_global, new_local, new_cache), each fleet-stacked.
     """
     run = lambda g, l, c, s, w: _safa_scan(g, l, c, s, w, local_train_fn,
-                                           use_kernel)
+                                           use_kernel, wire)
     return jax.vmap(run)(global_w, local_w, cache, schedule, weights)
 
 
-def _fedavg_scan(global_w, local_w, schedule, weights, local_train_fn):
+def _fedavg_scan(global_w, local_w, schedule, weights, local_train_fn,
+                 wire='f32'):
     def step(carry, sched):
         g, l = carry
         ng, nl = fedavg_round(
             g, l, selected=sched.selected, completed=sched.completed,
             weights=weights, local_train_fn=local_train_fn,
-            train_args=(sched.round_idx,))
+            train_args=(sched.round_idx,), wire=wire)
         return (ng, nl), None
 
     carry, _ = jax.lax.scan(step, (global_w, local_w), schedule)
@@ -272,22 +294,25 @@ def _fedavg_scan(global_w, local_w, schedule, weights, local_train_fn):
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1),
-                   static_argnames=('local_train_fn',))
+                   static_argnames=('local_train_fn', 'wire'))
 def fedavg_run_scan(global_w, local_w, schedule: SyncSchedule, weights, *,
-                    local_train_fn):
+                    local_train_fn, wire='f32'):
     """FedAvg counterpart of ``safa_run_scan``: k synchronous rounds in one
-    dispatch with the (global, local) carry donated."""
-    return _fedavg_scan(global_w, local_w, schedule, weights, local_train_fn)
+    dispatch with the (global, local) carry donated.  ``wire='int8'``
+    round-trips the uploads through the packed int8 wire format (2 kernel
+    dispatches per round) before the synchronous aggregation."""
+    return _fedavg_scan(global_w, local_w, schedule, weights, local_train_fn,
+                        wire)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1),
-                   static_argnames=('local_train_fn',))
+                   static_argnames=('local_train_fn', 'wire'))
 def fedavg_run_fleet(global_w, local_w, schedule: SyncSchedule, weights, *,
-                     local_train_fn):
+                     local_train_fn, wire='f32'):
     """FedAvg/FedCS counterpart of ``safa_run_fleet``: S synchronous
     simulations (schedule fields [S, k, m], weights [S, m]) in one vmapped
     scan with the fleet-stacked (global, local) carry donated."""
-    run = lambda g, l, s, w: _fedavg_scan(g, l, s, w, local_train_fn)
+    run = lambda g, l, s, w: _fedavg_scan(g, l, s, w, local_train_fn, wire)
     return jax.vmap(run)(global_w, local_w, schedule, weights)
 
 
@@ -363,12 +388,20 @@ def fedasync_run_fleet(global_w, local_w, schedule: AsyncSchedule,
 # ---------------------------------------------------------------------------
 
 def fedavg_round(global_w, local_w, *, selected, completed, weights,
-                 local_train_fn, train_args=()):
+                 local_train_fn, train_args=(), wire: str = 'f32'):
     """FedAvg: selected clients sync + train; aggregate over the selected
     clients that actually committed (renormalised weights); everyone else
-    idles.  Returns (new_global, new_local)."""
+    idles.  ``wire='int8'`` ships the uploads through the packed int8 wire
+    (one quantize + one dequantize grid dispatch for the whole stacked
+    tree — ``ops.wire_roundtrip_packed``), so the server aggregates what a
+    compressed transfer actually delivers.  Returns (new_global,
+    new_local)."""
+    check_wire(wire)
     base = distribute(global_w, local_w, selected)
     trained = local_train_fn(base, *train_args)
+    if wire == 'int8':
+        from repro.kernels import ops as kops
+        trained = kops.wire_roundtrip_packed(trained, like=global_w)
     ok = selected & completed
     wsum = jnp.maximum(jnp.sum(weights * ok), 1e-12)
     eff_w = jnp.where(ok, weights, 0.0) / wsum

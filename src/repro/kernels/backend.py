@@ -1,0 +1,31 @@
+"""Shared Pallas backend detection for every kernel module.
+
+Pallas kernels compile only on TPU; everywhere else (CPU containers, GPU
+dev boxes) they execute through the interpreter for structural
+validation.  Every kernel module used to carry its own copy of the
+detection constant — this is the single home for it.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def use_interpret() -> bool:
+    """True when pallas_call should run in interpret mode.
+
+    ``REPRO_FORCE_INTERPRET`` overrides the backend detection for tests:
+    ``1``/``true`` forces interpret mode even on TPU, ``0``/``false``
+    forces compilation even off-TPU (useful only for asserting that the
+    override plumbing itself works); unset or empty falls back to the
+    backend detection."""
+    env = os.environ.get('REPRO_FORCE_INTERPRET')
+    if env:
+        return env.lower() not in ('0', 'false')
+    return jax.default_backend() != 'tpu'
+
+
+# Captured once at import, like the per-module constants it replaces: a
+# process runs all kernels on one backend.
+INTERPRET = use_interpret()

@@ -6,6 +6,16 @@ first-class, kernel-backed feature: client uploads / server distribution can
 be quantised to int8 with one fp32 scale per QBLOCK values (4.03 bits/value
 of overhead at QBLOCK=128... 0.25 extra bytes per 128), cutting uplink bytes
 ~3.97x vs f32.  Both directions run as single-pass Pallas kernels.
+
+Two granularities are exposed:
+
+* ``quantize`` / ``dequantize`` — one flat [N] vector per call (the
+  per-leaf reference path: 2 dispatches per pytree leaf);
+* ``quantize_packed`` / ``dequantize_packed`` (+ ``quantize_packed_fleet``)
+  — a whole packed [m, N] (or [S, m, N]) upload buffer in ONE grid
+  dispatch, each client row block-quantised independently.  This is the
+  wire format of the compressed fast path: the simulated uplink carries
+  the int8 buffer plus the [m, N/QBLOCK] f32 scale rows.
 """
 from __future__ import annotations
 
@@ -15,9 +25,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import INTERPRET
+
 QBLOCK = 128
 DEFAULT_TILE = 2048  # values per program instance; must be multiple of QBLOCK
-INTERPRET = jax.default_backend() != 'tpu'
 
 
 def _quant_kernel(x_ref, q_ref, scale_ref):
@@ -78,3 +89,110 @@ def dequantize(q, scales, *, n: int, tile: int = DEFAULT_TILE):
         interpret=INTERPRET,
     )(qp, sp)
     return x[0, :n]
+
+
+# ---------------------------------------------------------------------------
+# Packed wire format: whole [m, N] upload buffer, one dispatch
+# ---------------------------------------------------------------------------
+
+def _quant_packed_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)              # [m, T]
+    m, t = x.shape
+    xb = x.reshape(m, t // QBLOCK, QBLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q.reshape(m, t)
+    scale_ref[...] = scale.reshape(m, -1)
+
+
+def _dequant_packed_kernel(q_ref, scale_ref, x_ref):
+    m, t = x_ref.shape
+    q = q_ref[...].astype(jnp.float32).reshape(m, t // QBLOCK, QBLOCK)
+    x_ref[...] = (q * scale_ref[...][:, :, None]).reshape(m, t)
+
+
+def _quant_fleet_kernel(x_ref, q_ref, scale_ref):
+    """Fleet body: squeeze the leading [1, m, T] fleet-block dim so the
+    math is exactly the single-buffer kernel's."""
+    x = x_ref[...][0].astype(jnp.float32)           # [m, T]
+    m, t = x.shape
+    xb = x.reshape(m, t // QBLOCK, QBLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q.reshape(m, t)[None]
+    scale_ref[...] = scale.reshape(m, -1)[None]
+
+
+def _check_packed(n: int, tile: int):
+    if tile % QBLOCK:
+        raise ValueError(f'tile={tile} not a multiple of QBLOCK={QBLOCK}')
+    if n % tile:
+        raise ValueError(
+            f'packed buffer width {n} not a multiple of tile={tile}; pack '
+            f'with pad_to=tile (see ops.pack_spec)')
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def quantize_packed(x, *, tile: int = DEFAULT_TILE):
+    """Block-quantise a whole packed upload buffer in ONE grid dispatch.
+
+    x: [m, N] f32 pack buffer (N % tile == 0; see ``ops.pack_spec``) ->
+    (q [m, N] int8, scales [m, N/QBLOCK] f32).  Each client row is
+    quantised independently — exactly what m per-client ``quantize``
+    calls on QBLOCK-aligned leaves produce, in 1 dispatch instead of
+    2 per leaf per client.
+    """
+    m, n = x.shape
+    _check_packed(n, tile)
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _quant_packed_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, tile), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((m, tile), lambda i: (0, i)),
+                   pl.BlockSpec((m, tile // QBLOCK), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.int8),
+                   jax.ShapeDtypeStruct((m, n // QBLOCK), jnp.float32)],
+        interpret=INTERPRET,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def dequantize_packed(q, scales, *, tile: int = DEFAULT_TILE):
+    """Inverse of ``quantize_packed``: (q [m, N], scales [m, N/QBLOCK]) ->
+    x [m, N] f32, one grid dispatch."""
+    m, n = q.shape
+    _check_packed(n, tile)
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _dequant_packed_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, tile), lambda i: (0, i)),
+                  pl.BlockSpec((m, tile // QBLOCK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(q, scales)
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def quantize_packed_fleet(x, *, tile: int = DEFAULT_TILE):
+    """Fleet variant of ``quantize_packed``: x [S, m, N] -> (q [S, m, N],
+    scales [S, m, N/QBLOCK]) over an explicit (S, N // tile) grid — all S
+    servers' upload buffers quantised in one dispatch."""
+    s, m, n = x.shape
+    _check_packed(n, tile)
+    grid = (s, n // tile)
+    return pl.pallas_call(
+        _quant_fleet_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i))],
+        out_specs=[pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i)),
+                   pl.BlockSpec((1, m, tile // QBLOCK),
+                                lambda s, i: (s, 0, i))],
+        out_shape=[jax.ShapeDtypeStruct((s, m, n), jnp.int8),
+                   jax.ShapeDtypeStruct((s, m, n // QBLOCK), jnp.float32)],
+        interpret=INTERPRET,
+    )(x)

@@ -27,16 +27,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.protocol import AggregationResult
-from repro.kernels.comm_quant import dequantize, quantize
+from repro.kernels.comm_quant import (QBLOCK, dequantize, dequantize_packed,
+                                      quantize, quantize_packed,
+                                      quantize_packed_fleet)
 from repro.kernels.safa_aggregate import (DEFAULT_TILE, safa_aggregate,
                                           safa_aggregate_packed,
-                                          safa_aggregate_packed_fleet)
+                                          safa_aggregate_packed_fleet,
+                                          safa_aggregate_packed_q8,
+                                          safa_aggregate_packed_q8_fleet)
 from repro.kernels.swa_attention import swa_attention
 
 __all__ = ['safa_aggregate', 'safa_aggregate_packed',
            'safa_aggregate_packed_fleet', 'safa_aggregate_tree',
            'safa_aggregate_tree_packed', 'safa_aggregate_tree_packed_fleet',
-           'quantize', 'dequantize',
+           'safa_aggregate_packed_q8', 'safa_aggregate_packed_q8_fleet',
+           'quantize', 'dequantize', 'quantize_packed', 'dequantize_packed',
+           'quantize_packed_fleet', 'safa_compressed_update',
+           'wire_roundtrip_packed', 'wire_spec',
            'swa_attention', 'quantize_tree', 'dequantize_tree',
            'PackSpec', 'pack_spec', 'pack_stacked', 'pack_global',
            'pack_fleet', 'unpack_fleet',
@@ -93,8 +100,10 @@ class PackSpec(NamedTuple):
     """Static layout of a model pytree inside a flat pack buffer.
 
     ``offsets[i]:offsets[i] + sizes[i]`` holds leaf i (global shapes, i.e.
-    without the clients dim); ``n_padded`` is ``sum(sizes)`` rounded up to a
-    tile multiple so kernels never re-pad per call."""
+    without the clients dim); each leaf's slot is zero-padded up to the
+    next leaf's offset (slots only exceed sizes under ``align > 1``);
+    ``n_padded`` is the laid-out total rounded up to a tile multiple so
+    kernels never re-pad per call."""
     treedef: Any
     shapes: tuple
     dtypes: tuple
@@ -103,9 +112,21 @@ class PackSpec(NamedTuple):
     n_total: int
     n_padded: int
 
+    def slot(self, i: int) -> int:
+        """Width of leaf i's slot (its size plus alignment padding)."""
+        nxt = self.offsets[i + 1] if i + 1 < len(self.offsets) \
+            else self.n_total
+        return nxt - self.offsets[i]
 
-def pack_spec(global_tree, *, pad_to: int = DEFAULT_TILE) -> PackSpec:
-    """Build the layout from a *global* (unstacked) model pytree."""
+
+def pack_spec(global_tree, *, pad_to: int = DEFAULT_TILE,
+              align: int = 1) -> PackSpec:
+    """Build the layout from a *global* (unstacked) model pytree.
+
+    ``align > 1`` rounds every leaf's slot up to an ``align`` multiple so
+    leaf boundaries never share a block — the quantized wire format uses
+    ``align=QBLOCK`` so packed per-QBLOCK scales match per-leaf
+    quantisation bit for bit (see ``wire_spec``)."""
     leaves, treedef = jax.tree_util.tree_flatten(global_tree)
     shapes = tuple(l.shape for l in leaves)
     dtypes = tuple(l.dtype for l in leaves)
@@ -113,16 +134,28 @@ def pack_spec(global_tree, *, pad_to: int = DEFAULT_TILE) -> PackSpec:
     offsets, off = [], 0
     for s in sizes:
         offsets.append(off)
-        off += s
+        off += s + ((-s) % align)
     n_padded = off + ((-off) % pad_to)
     return PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
                     sizes=sizes, offsets=tuple(offsets), n_total=off,
                     n_padded=n_padded)
 
 
+def wire_spec(global_tree, *, pad_to: int = DEFAULT_TILE) -> PackSpec:
+    """The pack layout of the int8 wire format: QBLOCK-aligned leaf slots,
+    so every quantisation block lies inside exactly one leaf of exactly one
+    client row."""
+    return pack_spec(global_tree, pad_to=pad_to, align=QBLOCK)
+
+
 def _pack(leaves, lead_shape, spec: PackSpec, compute_dtype):
-    flat = [l.astype(compute_dtype).reshape(lead_shape + (-1,))
-            for l in leaves]
+    flat = []
+    for i, (l, size) in enumerate(zip(leaves, spec.sizes)):
+        x = l.astype(compute_dtype).reshape(lead_shape + (-1,))
+        gap = spec.slot(i) - size
+        if gap:
+            x = jnp.pad(x, [(0, 0)] * len(lead_shape) + [(0, gap)])
+        flat.append(x)
     pad = spec.n_padded - spec.n_total
     if pad:
         flat.append(jnp.zeros(lead_shape + (pad,), compute_dtype))
@@ -246,11 +279,82 @@ def dequantize_tree(qtree, like):
     return jax.tree_util.tree_unflatten(treedef, outs)
 
 
-def comm_bytes(tree, quantized: bool) -> int:
-    """Bytes on the wire for one model transfer (benchmark accounting)."""
+# ---------------------------------------------------------------------------
+# Compressed wire path: packed int8 uplink in 2 dispatches total
+# ---------------------------------------------------------------------------
+
+def safa_compressed_update(base, trained, cache, global_prev, *, picked,
+                           undrafted, deprecated, completed, weights,
+                           spec: PackSpec = None):
+    """One SAFA server step on the int8 wire: quantize + fused
+    dequant-aggregate, exactly TWO kernel dispatches for any model depth.
+
+    base/trained/cache: stacked pytrees ([m, ...] leaves); global_prev:
+    global pytree; picked/undrafted/deprecated/completed: [m] bool;
+    weights: [m] f32.  The trained tree is packed once
+    (QBLOCK-aligned layout), block-quantised in one grid dispatch
+    (``quantize_packed`` — the simulated uplink carries int8 + scales),
+    and ``safa_aggregate_packed_q8`` dequantises it in-register while
+    applying Eq. 6-8 with the cache buffer aliased.  Crashed clients'
+    rows are replaced by their base model inside the kernel (no upload
+    arrived).  Returns (new_global, new_local, new_cache) pytrees —
+    the same triple ``protocol.safa_round`` hands back.
+
+    Bit-identical to the per-leaf reference (each client quantising each
+    leaf with ``quantize``/``dequantize`` before a packed aggregation):
+    the QBLOCK-aligned layout keeps every quantisation block inside one
+    leaf of one client row, so the scales — and therefore every
+    dequantised value — agree exactly.
+    """
+    if spec is None:
+        spec = wire_spec(global_prev)
+    _require_f32(spec)
+    q, scales = quantize_packed(pack_stacked(trained, spec))
+    ng, nc, nl = safa_aggregate_packed_q8(
+        q, scales, pack_stacked(base, spec), pack_stacked(cache, spec),
+        pack_global(global_prev, spec), picked, undrafted, deprecated,
+        completed, weights)
+    return (unpack_global(ng, spec), unpack_stacked(nl, spec),
+            unpack_stacked(nc, spec))
+
+
+def wire_roundtrip_packed(tree, spec: PackSpec = None, *, like=None):
+    """Simulate the int8 wire for a whole stacked pytree in 2 dispatches:
+    pack -> ``quantize_packed`` -> ``dequantize_packed`` -> unpack.
+
+    Used by protocols without a fused aggregation kernel (FedAvg/FedCS):
+    the server sees exactly what a compressed transfer delivers, at
+    packed-dispatch cost instead of 2 dispatches per leaf per client.
+    ``like`` supplies the global tree for spec inference (defaults to the
+    first client's row of ``tree``)."""
+    if spec is None:
+        if like is None:
+            like = jax.tree.map(lambda a: a[0], tree)
+        spec = wire_spec(like)
+    _require_f32(spec)
+    buf = pack_stacked(tree, spec)
+    q, scales = quantize_packed(buf)
+    return unpack_stacked(dequantize_packed(q, scales), spec)
+
+
+def comm_bytes(tree, quantized: bool, *, layout: str = 'tree') -> int:
+    """Bytes on the wire for one model transfer (benchmark accounting).
+
+    ``layout='tree'`` counts the pytree leaves as shipped individually
+    (per-leaf scale ceilings, no padding); ``layout='packed'`` counts the
+    packed wire buffers as the fast path actually ships them — including
+    the QBLOCK alignment / tile padding and the full scale rows of the
+    quantized format, or the tile padding of a f32 pack."""
+    if layout not in ('tree', 'packed'):
+        raise ValueError(
+            f"unknown layout {layout!r} (want 'tree' or 'packed')")
     leaves = jax.tree.leaves(tree)
+    if layout == 'packed':
+        spec = wire_spec(tree) if quantized else pack_spec(tree)
+        if not quantized:
+            return 4 * spec.n_padded
+        return spec.n_padded + 4 * (spec.n_padded // QBLOCK)
     n = sum(l.size for l in leaves)
     if not quantized:
         return sum(l.size * l.dtype.itemsize for l in leaves)
-    from repro.kernels.comm_quant import QBLOCK
     return n + 4 * sum(-(-l.size // QBLOCK) for l in leaves)

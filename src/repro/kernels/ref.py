@@ -35,6 +35,34 @@ def dequantize_ref(q, scales, n, qblock=128):
     return (qp * scales[:, None]).reshape(-1)[:n]
 
 
+def quantize_packed_ref(x, qblock=128):
+    """Row-wise oracle for ``quantize_packed``: each client row of a
+    [m, N] pack buffer block-quantised independently via ``quantize_ref``.
+    N must already be a qblock multiple (pack buffers are)."""
+    rows = [quantize_ref(row, qblock) for row in x]
+    return (jnp.stack([q for q, _ in rows]),
+            jnp.stack([s for _, s in rows]))
+
+
+def dequantize_packed_ref(q, scales, qblock=128):
+    """Row-wise oracle for ``dequantize_packed``."""
+    n = q.shape[1]
+    return jnp.stack([dequantize_ref(qr, sr, n)
+                      for qr, sr in zip(q, scales)])
+
+
+def safa_aggregate_q8_ref(q, scales, base, cache, global_prev, picked,
+                          undrafted, deprecated, completed, weights):
+    """Composition oracle for the fused int8 kernel: dequantise the wire
+    rows, substitute base for crashed clients, then Eq. 6-8; also returns
+    the post-wire trained matrix (the kernel's new_local output)."""
+    trained = jnp.where(completed[:, None], dequantize_packed_ref(q, scales),
+                        base)
+    ng, nc = safa_aggregate_ref(cache, trained, global_prev, picked,
+                                undrafted, deprecated, weights)
+    return ng, nc, trained
+
+
 def swa_attention_ref(q, k, v, *, window=None):
     """Causal (+window) attention oracle — the naive O(S^2) path."""
     return attn_mod.attention_ref(q, k, v, causal=True, window=window)

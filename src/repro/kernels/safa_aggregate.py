@@ -23,6 +23,14 @@ Two entry points share the kernel body:
   model (see ``ops.pack_stacked``), launched exactly once per round with
   ``input_output_aliases`` donating the cache buffer to the new-cache
   output, so the server never holds two full cache copies.
+
+The compressed-wire fast path adds ``safa_aggregate_packed_q8`` (+ fleet
+variant): the trained operand arrives as the int8 wire format
+(q [m, N] + per-QBLOCK f32 scales, see ``comm_quant.quantize_packed``)
+and is dequantised *in-register* inside the same kernel body that applies
+Eq. 6-8 — the f32 [m, N] client-update matrix is never materialised in
+HBM on the aggregation input, and a fully compressed round is exactly two
+dispatches (quantize + this kernel).
 """
 from __future__ import annotations
 
@@ -32,9 +40,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_TILE = 2048
 # CPU containers run the kernel body in interpret mode; on TPU it compiles.
-INTERPRET = jax.default_backend() != 'tpu'
+from repro.kernels.backend import INTERPRET
+from repro.kernels.comm_quant import QBLOCK
+
+DEFAULT_TILE = 2048
 
 
 def _agg_math(cache, trained, g, picked, undrafted, deprecated, w):
@@ -195,3 +205,168 @@ def safa_aggregate_packed_fleet(cache, trained, global_prev, picked,
       col(deprecated.astype(jnp.int32)),
       col(weights.astype(jnp.float32)))
     return new_global[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Compressed-wire fast path: fused int8 dequant -> Eq. 6-8
+# ---------------------------------------------------------------------------
+
+def _q8_math(q, scales, base, cache, global_row, picked, undrafted,
+             deprecated, completed, weights):
+    """Dequantise the int8 client rows in-register, substitute the base
+    model for crashed clients (they upload nothing), then the shared
+    Eq. 6-8 body.  Returns (new_global [1, T], new_cache, new_local):
+    new_local is the post-wire trained matrix (base where crashed) — the
+    clients' own view of the round, emitted so the caller never needs a
+    separate dequantise dispatch."""
+    m, t = q.shape
+    deq = (q.astype(jnp.float32).reshape(m, t // QBLOCK, QBLOCK)
+           * scales[:, :, None]).reshape(m, t)
+    trained = jnp.where(completed, deq, base)
+    ng, nc = _agg_math(cache, trained, global_row, picked, undrafted,
+                       deprecated, weights)
+    return ng, nc, trained
+
+
+def _q8_kernel(q_ref, scale_ref, base_ref, cache_ref, global_ref, picked_ref,
+               undrafted_ref, deprecated_ref, completed_ref, weights_ref,
+               new_global_ref, new_cache_ref, new_local_ref):
+    new_global_ref[...], new_cache_ref[...], new_local_ref[...] = _q8_math(
+        q_ref[...],                     # [m, T] int8
+        scale_ref[...],                 # [m, T/QBLOCK] f32
+        base_ref[...],                  # [m, T]
+        cache_ref[...],                 # [m, T]
+        global_ref[...],                # [1, T]
+        picked_ref[...] != 0,           # [m, 1]
+        undrafted_ref[...] != 0,
+        deprecated_ref[...] != 0,
+        completed_ref[...] != 0,
+        weights_ref[...])               # [m, 1] float32
+
+
+def _q8_fleet_kernel(q_ref, scale_ref, base_ref, cache_ref, global_ref,
+                     picked_ref, undrafted_ref, deprecated_ref, completed_ref,
+                     weights_ref, new_global_ref, new_cache_ref,
+                     new_local_ref):
+    ng, nc, nl = _q8_math(
+        q_ref[...][0], scale_ref[...][0], base_ref[...][0], cache_ref[...][0],
+        global_ref[...][0], picked_ref[...][0] != 0,
+        undrafted_ref[...][0] != 0, deprecated_ref[...][0] != 0,
+        completed_ref[...][0] != 0, weights_ref[...][0])
+    new_global_ref[...] = ng[None]
+    new_cache_ref[...] = nc[None]
+    new_local_ref[...] = nl[None]
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed_q8(q, scales, base, cache, global_prev, picked,
+                             undrafted, deprecated, completed, weights, *,
+                             tile: int = DEFAULT_TILE):
+    """Fused int8-wire Eq. 6-8: dequantise + aggregate in ONE dispatch.
+
+    q: [m, N] int8 wire buffer; scales: [m, N/QBLOCK] f32 (both from
+    ``comm_quant.quantize_packed`` on a QBLOCK-aligned pack — see
+    ``ops.pack_spec(align=QBLOCK)``); base/cache: [m, N] f32 pack buffers
+    (N % tile == 0); global_prev: [N]; picked/undrafted/deprecated/
+    completed: [m] bool; weights: [m] f32.
+
+    The kernel body dequantises each client tile in-register, replaces
+    crashed clients' rows with their base model (no upload arrived), and
+    applies the shared ``_agg_math``; the cache input is aliased to the
+    new-cache output.  Returns (new_global [N], new_cache [m, N],
+    new_local [m, N]) — new_local is the dequantised trained matrix with
+    base rows for crashed clients, i.e. what every client locally holds
+    after the round.
+    """
+    m, np_ = cache.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    grid = (np_ // tile,)
+    col = lambda arr: arr.reshape(m, 1)
+    new_global, new_cache, new_local = pl.pallas_call(
+        _q8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, tile), lambda i: (0, i)),              # q
+            pl.BlockSpec((m, tile // QBLOCK), lambda i: (0, i)),    # scales
+            pl.BlockSpec((m, tile), lambda i: (0, i)),              # base
+            pl.BlockSpec((m, tile), lambda i: (0, i)),              # cache
+            pl.BlockSpec((1, tile), lambda i: (0, i)),              # global
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),                 # picked
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),                 # undrafted
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),                 # deprecated
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),                 # completed
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),                 # weights
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((m, tile), lambda i: (0, i)),
+            pl.BlockSpec((m, tile), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, np_), cache.dtype),
+            jax.ShapeDtypeStruct((m, np_), cache.dtype),
+            jax.ShapeDtypeStruct((m, np_), cache.dtype),
+        ],
+        # the cache buffer is dead after the call: write new_cache in place
+        input_output_aliases={3: 1},
+        interpret=INTERPRET,
+    )(q, scales, base, cache, global_prev.reshape(1, -1),
+      col(picked.astype(jnp.int32)), col(undrafted.astype(jnp.int32)),
+      col(deprecated.astype(jnp.int32)), col(completed.astype(jnp.int32)),
+      col(weights.astype(jnp.float32)))
+    return new_global[0], new_cache, new_local
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed_q8_fleet(q, scales, base, cache, global_prev,
+                                   picked, undrafted, deprecated, completed,
+                                   weights, *, tile: int = DEFAULT_TILE):
+    """Fleet variant of ``safa_aggregate_packed_q8``: every operand gains a
+    leading fleet axis (q/scales/base/cache [S, m, ...], global_prev
+    [S, N], masks/weights [S, m]) and the grid a fleet dimension — S
+    compressed server aggregations in one dispatch, cache aliased.
+    Returns (new_global [S, N], new_cache [S, m, N], new_local [S, m, N]).
+    """
+    s, m, np_ = cache.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    grid = (s, np_ // tile)
+    col = lambda arr: arr.reshape(s, m, 1)
+    new_global, new_cache, new_local = pl.pallas_call(
+        _q8_fleet_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i)),     # q
+            pl.BlockSpec((1, m, tile // QBLOCK),
+                         lambda s, i: (s, 0, i)),                   # scales
+            pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i)),     # base
+            pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i)),     # cache
+            pl.BlockSpec((1, 1, tile), lambda s, i: (s, 0, i)),     # global
+            pl.BlockSpec((1, m, 1), lambda s, i: (s, 0, 0)),        # picked
+            pl.BlockSpec((1, m, 1), lambda s, i: (s, 0, 0)),        # undrafted
+            pl.BlockSpec((1, m, 1), lambda s, i: (s, 0, 0)),        # deprecated
+            pl.BlockSpec((1, m, 1), lambda s, i: (s, 0, 0)),        # completed
+            pl.BlockSpec((1, m, 1), lambda s, i: (s, 0, 0)),        # weights
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tile), lambda s, i: (s, 0, i)),
+            pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i)),
+            pl.BlockSpec((1, m, tile), lambda s, i: (s, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, 1, np_), cache.dtype),
+            jax.ShapeDtypeStruct((s, m, np_), cache.dtype),
+            jax.ShapeDtypeStruct((s, m, np_), cache.dtype),
+        ],
+        input_output_aliases={3: 1},
+        interpret=INTERPRET,
+    )(q, scales, base, cache, global_prev.reshape(s, 1, np_),
+      col(picked.astype(jnp.int32)), col(undrafted.astype(jnp.int32)),
+      col(deprecated.astype(jnp.int32)), col(completed.astype(jnp.int32)),
+      col(weights.astype(jnp.float32)))
+    return new_global[:, 0], new_cache, new_local

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-INTERPRET = jax.default_backend() != 'tpu'
+from repro.kernels.backend import INTERPRET
+
 NEG_INF = -1e30
 
 
