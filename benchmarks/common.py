@@ -1,15 +1,25 @@
-"""Shared benchmark plumbing: paper environment grids + CSV output."""
+"""Shared benchmark plumbing: paper environment grids + CSV output.
+
+Benchmark runs go through the declarative experiment API
+(``repro.api.Experiment``): a protocol name resolves to its registered
+spec, execution knobs land in ``ExecSpec``, and ``run_protocol`` compiles
+and runs the experiment — so benchmark configs *are* specs.
+"""
 from __future__ import annotations
 
+import dataclasses
 import time
 
+from repro import api
 from repro.configs import PAPER_TASKS
-from repro.core import federation
 from repro.fedsim import FLEnv
 
 CR_GRID = (0.1, 0.3, 0.5, 0.7)
 C_GRID = (0.1, 0.3, 0.5, 0.7, 1.0)
 PROTOCOLS = ('fedavg', 'fedcs', 'safa')
+
+#: ``run_protocol``/``build_experiment`` kwargs routed into ``ExecSpec``.
+EXEC_KEYS = tuple(f.name for f in dataclasses.fields(api.ExecSpec))
 
 
 def make_env(task_name: str, cr: float, seed: int = 0, scale: float = 1.0) -> FLEnv:
@@ -21,13 +31,29 @@ def make_env(task_name: str, cr: float, seed: int = 0, scale: float = 1.0) -> FL
                  t_lim=t['t_lim'], seed=seed)
 
 
+def build_experiment(name: str, env: FLEnv, C: float, rounds: int,
+                     lag_tolerance: int = 5, task=None, seed: int = 0,
+                     **kw) -> api.Experiment:
+    """A benchmark cell as a declarative spec: protocol fields from the
+    grid, execution knobs (``EXEC_KEYS``) into ``ExecSpec``."""
+    proto_kw = {}
+    if name != 'fedasync':          # fedasync is fully asynchronous: no C
+        proto_kw['fraction'] = C
+    if name == 'safa':
+        proto_kw['lag_tolerance'] = lag_tolerance
+    exec_kw = {k: kw.pop(k) for k in EXEC_KEYS if k in kw}
+    exec_kw.setdefault('numeric', task is not None)
+    if kw:
+        raise TypeError(f'unknown run_protocol kwargs: {sorted(kw)}')
+    return api.Experiment(task, env, api.spec(name, **proto_kw),
+                          api.ExecSpec(**exec_kw), rounds=rounds, seed=seed)
+
+
 def run_protocol(name: str, env: FLEnv, C: float, rounds: int,
                  lag_tolerance: int = 5, task=None, **kw):
-    fn = federation.RUNNERS[name]
-    kwargs = dict(fraction=C, rounds=rounds, numeric=task is not None, **kw)
-    if name == 'safa':
-        kwargs['lag_tolerance'] = lag_tolerance
-    return fn(task, env, **kwargs)
+    return build_experiment(name, env, C, rounds,
+                            lag_tolerance=lag_tolerance, task=task,
+                            **kw).compile().run()
 
 
 def sweep_members(task_name: str, grid, seed: int = 0, scale: float = 1.0,
@@ -35,7 +61,7 @@ def sweep_members(task_name: str, grid, seed: int = 0, scale: float = 1.0,
     """One ``SweepMember`` per (cr, C) cell — fresh envs per member (the
     event draws consume the env rng), same ``seed`` so the fleet shares one
     client population."""
-    return [federation.SweepMember(
+    return [api.SweepMember(
         env=make_env(task_name, cr, seed=seed, scale=scale), fraction=C,
         lag_tolerance=lag_tolerance) for cr, C in grid]
 

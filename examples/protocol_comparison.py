@@ -1,17 +1,21 @@
 """Reproduce the paper's headline comparison: SAFA vs FedAvg vs FedCS vs
 FedAsync vs fully-local, on round efficiency and model quality, across
 crash rates.  Each protocol's crash-rate grid runs as one batched fleet
-(``run_sweep``) — every runner shares the scan/fleet engines.
+(``Experiment(...).compile().run_sweep``) — every protocol in the
+``api.PROTOCOLS`` registry shares the scan/fleet engines.
 
     PYTHONPATH=src python examples/protocol_comparison.py
-"""
 
-from repro.core import federation
+(ROUNDS env var overrides the round count — CI uses a tiny value.)
+"""
+import os
+
+from repro import api
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
 from repro.fedsim import FLEnv, env_grid
 
-C, ROUNDS = 0.3, 80
+C, ROUNDS = 0.3, int(os.environ.get('ROUNDS', '80'))
 CRASH_RATES = (0.1, 0.3, 0.5, 0.7)
 BASE = dict(m=5, dataset_size=506, batch_size=5, epochs=3, t_lim=830.0,
             seed=3)
@@ -22,12 +26,14 @@ data = partition(x, y, env0.partition_sizes, 5, seed=1)
 task = regression_task(data, lr=1e-3, epochs=3)
 
 rows = {}
-for name in federation.RUNNERS:
-    members = [federation.SweepMember(env=e, fraction=C, lag_tolerance=5)
+for pdef in api.PROTOCOLS.values():
+    members = [api.SweepMember(env=e, fraction=C, lag_tolerance=5)
                for e in env_grid(BASE, crash_prob=CRASH_RATES)]
-    hists = federation.run_sweep(task, members, rounds=ROUNDS, proto=name,
-                                 eval_every=20)
-    rows.update({(cr, name): h for cr, h in zip(CRASH_RATES, hists)})
+    exp = api.Experiment(task, env0, pdef.spec_cls(),
+                         api.ExecSpec(eval_every=max(2, ROUNDS // 4)),
+                         rounds=ROUNDS)
+    hists = exp.compile().run_sweep(members)
+    rows.update({(cr, pdef.name): h for cr, h in zip(CRASH_RATES, hists)})
 
 print(f'{"cr":>4} {"protocol":>8} {"best_acc":>9} {"round_len":>10} '
       f'{"EUR":>6} {"SR":>6} {"futility":>8}')

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import federation
+from repro import api
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
 from repro.fedsim import FLEnv
@@ -17,9 +17,15 @@ x, y = make_regression()
 data = partition(x, y, env.partition_sizes, batch_size=5, seed=1)
 task = regression_task(data, lr=1e-3, epochs=3)
 
-# 3. Run SAFA: post-training CFCFM selection (C=0.5), lag tolerance 5.
-hist = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
-                           rounds=60, eval_every=15)
+# 3. Declare the experiment: SAFA with post-training CFCFM selection
+#    (C=0.5) and lag tolerance 5; execution knobs live in ExecSpec.
+exp = api.Experiment(task, env,
+                     api.SafaSpec(fraction=0.5, lag_tolerance=5),
+                     api.ExecSpec(eval_every=15),
+                     rounds=60)
+
+# 4. Compile and run (one lax.scan dispatch per eval segment).
+hist = exp.compile().run()
 
 print(f'protocol: {hist.protocol}')
 print(f'best eval: {hist.best_eval}')

@@ -1,5 +1,6 @@
 """Docs smoke check: every import in the fenced ``python`` code blocks of
-README.md / docs/ARCHITECTURE.md must resolve against the installed tree.
+README.md / docs/ARCHITECTURE.md — and every import in the example
+scripts — must resolve against the installed tree.
 
 Catches the classic documentation failure — an example referencing a
 module or symbol that was renamed since the docs were written — without
@@ -14,23 +15,32 @@ import sys
 from pathlib import Path
 
 DOCS = ('README.md', 'docs/ARCHITECTURE.md')
+# plain .py sources scanned whole (no fence extraction): the runnable
+# examples the docs point at, kept import-clean alongside them
+PY_DOCS = ('examples/quickstart.py', 'examples/protocol_comparison.py')
 BLOCK = re.compile(r'```python\n(.*?)```', re.DOTALL)
 IMPORT = re.compile(r'^(?:from\s+[\w.]+\s+import\s+.+|import\s+[\w.]+.*)$')
 
 
+def py_import_lines(text: str):
+    for line in text.splitlines():
+        line = line.strip()
+        if IMPORT.match(line):
+            yield line
+
+
 def import_lines(text: str):
     for block in BLOCK.findall(text):
-        for line in block.splitlines():
-            line = line.strip()
-            if IMPORT.match(line):
-                yield line
+        yield from py_import_lines(block)
 
 
 def main() -> int:
     root = Path(__file__).resolve().parent.parent
     failed = 0
-    for doc in DOCS:
-        lines = sorted(set(import_lines((root / doc).read_text())))
+    sources = [(doc, import_lines) for doc in DOCS] + \
+        [(doc, py_import_lines) for doc in PY_DOCS]
+    for doc, extract in sources:
+        lines = sorted(set(extract((root / doc).read_text())))
         if not lines:
             print(f'{doc}: WARNING — no python import lines found')
             continue

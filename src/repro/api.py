@@ -1,0 +1,13 @@
+"""Public experiment API — the single entry point for running protocols.
+
+Declarative specs (``SafaSpec``/``FedAvgSpec``/``FedCSSpec``/``LocalSpec``/
+``FedAsyncSpec`` + ``ExecSpec``) feed the ``PROTOCOLS`` registry, and
+``Experiment(...).compile()`` returns a ``CompiledRunner`` with
+checkpoint/resume-capable ``run()`` / ``run_sweep(members)``.  See
+``docs/ARCHITECTURE.md`` ("The API layer") for the full tour; the
+implementation lives in ``repro.core.api``.
+"""
+from repro.core import api as _impl
+from repro.core.api import *  # noqa: F401,F403
+
+__all__ = list(_impl.__all__)

@@ -1,0 +1,823 @@
+"""Unified experiment API: declarative specs -> protocol registry ->
+compiled, resumable runners.
+
+One spec, one compile step, many protocols::
+
+    from repro import api
+
+    exp = api.Experiment(task, env,
+                         api.SafaSpec(fraction=0.5, lag_tolerance=5),
+                         api.ExecSpec(eval_every=15),
+                         rounds=60)
+    hist = exp.compile().run()
+
+The pieces:
+
+* **Protocol specs** (``SafaSpec``/``FedAvgSpec``/``FedCSSpec``/
+  ``LocalSpec``/``FedAsyncSpec``) are frozen dataclasses carrying only
+  protocol-semantic fields; **``ExecSpec``** carries execution knobs
+  (``engine``, ``wire``, ``use_kernel``, ``shard``, ``eval_every``,
+  ``numeric``).  All cross-field validation lives in ``check_compat``.
+* **``PROTOCOLS``** maps each spec type to a ``ProtocolDef`` — the
+  protocol's precompute / scan / fleet triple plus its loop-engine round
+  — so a new variant (say, a SEAFL-style staleness-discounted
+  aggregation) registers with ``api.register`` and immediately gains
+  every engine, sweep batching, and checkpointing, without touching
+  ``federation.py``.
+* **``Experiment``** binds (task, env, protocol spec, exec spec, rounds,
+  seed); ``.precompute()`` runs the host event state machine once (the
+  env rng is consumed exactly once, the schedule is cached) and
+  ``.compile()`` returns a ``CompiledRunner``.
+* **``CompiledRunner.run()``** executes the single run;
+  ``.run_sweep(members)`` executes S member configurations as a batched
+  fleet (``SweepSpec(members, tasks=...)`` for per-member Tasks via
+  padded stacking).  Both accept ``checkpoint=`` for kill/resume: the
+  scan carry and the host schedule cursor persist at every eval-segment
+  boundary (``repro.checkpoint``), and a resumed run finishes
+  bit-identical to an uninterrupted one.
+
+The legacy free functions (``federation.run_safa`` & co.) are thin shims
+over this module and emit ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.core import federation, protocol, schedules
+from repro.core.federation import Task
+from repro.core.schedules import History, RoundRecord, SweepMember
+
+__all__ = [
+    'CompiledRunner', 'ExecSpec', 'Experiment', 'FedAsyncSpec', 'FedAvgSpec',
+    'FedCSSpec', 'History', 'LocalSpec', 'PROTOCOLS', 'ProtocolDef',
+    'ProtocolSpec', 'RoundRecord', 'SafaSpec', 'SweepMember', 'SweepSpec',
+    'Task', 'check_compat', 'register', 'spec',
+]
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolSpec:
+    """Base class for protocol specs: protocol-semantic fields only —
+    execution knobs live in ``ExecSpec``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SafaSpec(ProtocolSpec):
+    """SAFA (the paper's protocol): post-training CFCFM selection at
+    quota C*m, Eq. 3 lag-tolerant distribution, Eq. 6-8 three-bypass
+    aggregation.  ``quantize_uploads`` is the per-leaf int8 reference
+    form of the packed ``wire='int8'`` path (mutually exclusive)."""
+    fraction: float = 0.5
+    lag_tolerance: int = 5
+    quantize_uploads: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgSpec(ProtocolSpec):
+    """FedAvg baseline: random pre-training selection, synchronous."""
+    fraction: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class FedCSSpec(ProtocolSpec):
+    """FedCS baseline: fastest-first selection under the deadline."""
+    fraction: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSpec(ProtocolSpec):
+    """Fully-local baseline: no aggregation except at eval points."""
+    fraction: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAsyncSpec(ProtocolSpec):
+    """FedAsync baseline: every client, every round; merge-per-arrival
+    with staleness-polynomial mixing alpha*(1+staleness)^(-exp)."""
+    alpha: float = 0.6
+    staleness_exp: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """Execution knobs, orthogonal to protocol semantics.
+
+    ``engine=None`` resolves to the compiled default: ``'scan'`` for
+    ``run()``, ``'fleet'`` for ``run_sweep()``; the reference engines
+    (``'loop'`` / ``'sequential'``) stay available and bit-identical."""
+    engine: Optional[str] = None
+    wire: str = 'f32'
+    use_kernel: Any = False
+    shard: bool = True
+    eval_every: int = 10
+    numeric: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A sweep: S member configurations, optionally with per-member
+    ``tasks`` (one per member, padded-stacked so members may hold
+    different client partitions — multi-``seed`` env sweeps batch too)."""
+    members: tuple
+    tasks: Optional[tuple] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, 'members', tuple(self.members))
+        if self.tasks is not None:
+            object.__setattr__(self, 'tasks', tuple(self.tasks))
+            if len(self.tasks) != len(self.members):
+                raise ValueError(
+                    f'got {len(self.tasks)} tasks for {len(self.members)} '
+                    f'members (want one task per member, or tasks=None '
+                    f'for a shared task)')
+
+
+# ---------------------------------------------------------------------------
+# Protocol registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolDef:
+    """Everything the runners need to execute one protocol.
+
+    ``precompute(env, spec, *, rounds, seed)`` runs the host event state
+    machine; ``fleet_precompute(members, *, rounds)`` the fleet-major
+    form.  ``scan_segment`` / ``fleet_segment`` advance the model state
+    through one compiled eval segment; ``loop_round`` is the per-round
+    reference; ``finish_segment`` (optional) runs at eval stops (the
+    fully-local aggregation).  Registering a new def via ``register``
+    makes the protocol available to ``Experiment`` and sweeps without
+    touching ``federation.py``."""
+    name: str
+    spec_cls: type
+    precompute: Callable
+    fleet_precompute: Callable
+    scan_segment: Callable
+    loop_round: Callable
+    fleet_segment: Callable
+    finish_segment: Optional[Callable] = None
+    uses_cache: bool = False
+    supports_wire: bool = False
+    supports_kernel: bool = False
+
+
+#: spec type -> ProtocolDef.  The single source of protocol dispatch.
+PROTOCOLS: dict = {}
+_BY_NAME: dict = {}
+
+
+def register(pdef: ProtocolDef) -> ProtocolDef:
+    """Add a protocol to the registry (spec type and name must be new)."""
+    if pdef.spec_cls in PROTOCOLS:
+        raise ValueError(f'spec type {pdef.spec_cls.__name__} already '
+                         f'registered (as {PROTOCOLS[pdef.spec_cls].name!r})')
+    if pdef.name in _BY_NAME:
+        raise ValueError(f'protocol name {pdef.name!r} already registered')
+    PROTOCOLS[pdef.spec_cls] = pdef
+    _BY_NAME[pdef.name] = pdef
+    return pdef
+
+
+def spec(name: str, **fields) -> ProtocolSpec:
+    """Build a protocol spec by registry name ('safa', 'fedavg', ...)."""
+    if name not in _BY_NAME:
+        raise ValueError(
+            f'unknown proto {name!r} (want one of {sorted(_BY_NAME)})')
+    return _BY_NAME[name].spec_cls(**fields)
+
+
+def check_compat(protocol_spec: ProtocolSpec,
+                 exec_spec: Optional[ExecSpec] = None) -> ProtocolDef:
+    """Validate a (protocol, exec) spec pair; returns the ProtocolDef.
+
+    This is the single home for every cross-field rule the legacy
+    runners enforced ad hoc: wire values, engine names, kernel modes,
+    wire x protocol compatibility, and the quantize_uploads-vs-wire
+    exclusivity."""
+    pdef = PROTOCOLS.get(type(protocol_spec))
+    if pdef is None:
+        raise TypeError(
+            f'unregistered protocol spec {type(protocol_spec).__name__!r}; '
+            f'known specs: {sorted(c.__name__ for c in PROTOCOLS)} '
+            f'(register new ones via api.register)')
+    ex = exec_spec if exec_spec is not None else ExecSpec()
+    protocol.check_wire(ex.wire)
+    if ex.engine not in (None, 'scan', 'loop', 'fleet', 'sequential'):
+        raise ValueError(
+            f'unknown engine {ex.engine!r} (want "scan"/"loop" for runs, '
+            f'"fleet"/"sequential" for sweeps, or None for the default)')
+    if ex.use_kernel not in (False, True, 'packed'):
+        raise ValueError(
+            f'unknown use_kernel {ex.use_kernel!r} (want False, True, or '
+            f'"packed")')
+    if ex.wire != 'f32' and not pdef.supports_wire:
+        raise ValueError(
+            f"protocol {pdef.name!r} has no upload-aggregate wire; "
+            f"wire='int8' applies to safa/fedavg/fedcs only")
+    if ex.use_kernel and not pdef.supports_kernel:
+        raise ValueError(
+            f'protocol {pdef.name!r} has no fused aggregation kernel; '
+            f'use_kernel applies to safa only')
+    if getattr(protocol_spec, 'quantize_uploads', False) and ex.wire != 'f32':
+        raise ValueError(
+            "quantize_uploads=True is the per-leaf reference for the packed "
+            "wire='int8' path; pass one or the other, not both")
+    return pdef
+
+
+# ---------------------------------------------------------------------------
+# Engine plumbing (shared by every protocol def)
+# ---------------------------------------------------------------------------
+
+class _RunState:
+    """The model-state carry between segments: global/local(/cache)."""
+    __slots__ = ('global_w', 'local_w', 'cache')
+
+    def __init__(self, global_w=None, local_w=None, cache=None):
+        self.global_w, self.local_w, self.cache = global_w, local_w, cache
+
+    def tree(self):
+        t = {'global': self.global_w, 'local': self.local_w}
+        if self.cache is not None:
+            t['cache'] = self.cache
+        return t
+
+    def set_tree(self, t):
+        self.global_w, self.local_w = t['global'], t['local']
+        self.cache = t.get('cache')
+
+
+def _to_j(mask: np.ndarray):
+    return jnp.asarray(mask)
+
+
+def _eval_rounds(rounds: int, eval_every: int):
+    """Rounds at which the runners evaluate the global model.
+
+    These are also the scan-engine segment boundaries — and therefore the
+    checkpoint/resume boundaries: at most two distinct segment lengths
+    exist per run (eval_every and a ragged final remainder), so the
+    scanned program traces at most twice."""
+    stops = sorted(set(range(eval_every, rounds + 1, eval_every)) | {rounds})
+    return [t for t in stops if t >= 1]
+
+
+def _record_eval(hist: History, rec: RoundRecord, task, global_w):
+    rec.eval = task.evaluate(global_w)
+    if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
+        hist.best_eval = rec.eval
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *a: jnp.stack(a), *trees)
+
+
+def _tree_member(tree, s: int):
+    return jax.tree.map(lambda a: a[s], tree)
+
+
+def _init_state(task, m: int, seed: int, uses_cache: bool) -> _RunState:
+    key = jax.random.PRNGKey(seed)
+    g = task.init_global(key)
+    return _RunState(g, protocol.broadcast_global(g, m),
+                     protocol.broadcast_global(g, m) if uses_cache else None)
+
+
+def _apply_saved_history(hist: History, d: dict) -> None:
+    """Replay a checkpoint's eval entries into a freshly-precomputed
+    History (records/futility are recomputed bit-identically; only the
+    evals and best_eval need restoring)."""
+    hist.best_eval = d['best_eval']
+    for rec, rd in zip(hist.records, d['records']):
+        if rd.get('eval') is not None:
+            rec.eval = rd['eval']
+
+
+def _env_fp(env) -> str:
+    return repr([(f.name, getattr(env, f.name))
+                 for f in dataclasses.fields(env)])
+
+
+def _task_fp(task) -> str:
+    """Task identity for checkpoint fingerprints.  Tasks that implement
+    ``fingerprint()`` (e.g. ``SupervisedTask``: a hash of the client
+    data + hypers) pin the training problem; others fall back to the
+    class name, which at least catches swapping task types."""
+    if task is None:
+        return 'None'
+    fp = getattr(task, 'fingerprint', None)
+    return fp() if callable(fp) else type(task).__name__
+
+
+def _fresh_records(records: list) -> list:
+    """Per-run copies of a schedule's RoundRecords.  The schedule is
+    cached on the Experiment, so Histories from repeated run() calls
+    must not alias (and thereby leak evals into) each other's records."""
+    return [dataclasses.replace(r, eval=None) for r in records]
+
+
+def _stacked_task(tasks):
+    """Memoised ``stack_tasks``: repeated ``run_sweep`` calls over the
+    same task tuple (e.g. the checkpoint resume flow) reuse one stacked
+    task, so the padded data is built once and the bound ``fleet_train``
+    stays a stable static jit argument (a fresh one would force a full
+    recompile).  Cached on the first task; entries hold the member tasks
+    alive, so the id-tuple key cannot be reused while it is live."""
+    from repro.data.tasks import stack_tasks
+    cache = tasks[0].__dict__.setdefault('_fleet_task_stacks', {})
+    key = tuple(map(id, tasks))
+    if key not in cache:
+        cache[key] = stack_tasks(tasks)
+    return cache[key]
+
+
+# ---------------------------------------------------------------------------
+# Built-in protocol defs
+# ---------------------------------------------------------------------------
+
+def _safa_precompute(env, sp, *, rounds, seed):
+    del seed  # SAFA's event process draws only from the env rng
+    return federation.precompute_safa_schedule(
+        env, fraction=sp.fraction, lag_tolerance=sp.lag_tolerance,
+        rounds=rounds)
+
+
+def _safa_scan_segment(st, seg, weights, train_fn, ex):
+    st.global_w, st.local_w, st.cache = protocol.safa_run_scan(
+        st.global_w, st.local_w, st.cache, seg, weights,
+        local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire)
+
+
+def _safa_loop_round(st, sched, i, weights, train_fn, ex):
+    st.global_w, st.local_w, st.cache = protocol.safa_round(
+        st.global_w, st.local_w, st.cache,
+        sync_mask=_to_j(sched.sync[i]), completed=_to_j(sched.committed[i]),
+        picked=_to_j(sched.picked[i]), undrafted=_to_j(sched.undrafted[i]),
+        deprecated=_to_j(sched.deprecated[i]), weights=weights,
+        local_train_fn=train_fn, train_args=(i + 1,),
+        use_kernel=ex.use_kernel, wire=ex.wire)
+
+
+def _safa_fleet_segment(st, seg, weights, train_fn, ex, ctx):
+    st.global_w, st.local_w, st.cache = protocol.safa_run_fleet(
+        st.global_w, st.local_w, st.cache, seg, weights,
+        local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire,
+        train_ctx=ctx)
+
+
+def _sync_precompute(fedcs):
+    def precompute(env, sp, *, rounds, seed):
+        return federation.precompute_sync_schedule(
+            env, fraction=sp.fraction, rounds=rounds, seed=seed, fedcs=fedcs)
+    return precompute
+
+
+def _sync_fleet_precompute(fedcs):
+    def precompute(members, *, rounds):
+        return federation.precompute_sync_fleet_schedule(
+            members, rounds=rounds, fedcs=fedcs)
+    return precompute
+
+
+def _fedavg_scan_segment(st, seg, weights, train_fn, ex):
+    st.global_w, st.local_w = protocol.fedavg_run_scan(
+        st.global_w, st.local_w, seg, weights, local_train_fn=train_fn,
+        wire=ex.wire)
+
+
+def _fedavg_loop_round(st, sched, i, weights, train_fn, ex):
+    st.global_w, st.local_w = protocol.fedavg_round(
+        st.global_w, st.local_w, selected=_to_j(sched.selected[i]),
+        completed=_to_j(sched.completed[i]), weights=weights,
+        local_train_fn=train_fn, train_args=(i + 1,), wire=ex.wire)
+
+
+def _fedavg_fleet_segment(st, seg, weights, train_fn, ex, ctx):
+    st.global_w, st.local_w = protocol.fedavg_run_fleet(
+        st.global_w, st.local_w, seg, weights, local_train_fn=train_fn,
+        wire=ex.wire, train_ctx=ctx)
+
+
+def _local_precompute(env, sp, *, rounds, seed):
+    return federation.precompute_local_schedule(
+        env, fraction=sp.fraction, rounds=rounds, seed=seed)
+
+
+def _local_fleet_precompute(members, *, rounds):
+    return schedules.LocalFleetSchedule.stack([
+        federation.precompute_local_schedule(
+            mem.env, fraction=mem.fraction, rounds=rounds, seed=mem.seed)
+        for mem in members])
+
+
+def _local_scan_segment(st, seg, weights, train_fn, ex):
+    del weights, ex
+    st.local_w = protocol.local_run_scan(st.local_w, seg,
+                                         local_train_fn=train_fn)
+
+
+def _local_loop_round(st, sched, i, weights, train_fn, ex):
+    del weights, ex
+    st.local_w = protocol.local_only_round(
+        st.local_w, completed=_to_j(sched.completed[i]),
+        local_train_fn=train_fn, train_args=(i + 1,))
+
+
+def _local_fleet_segment(st, seg, weights, train_fn, ex, ctx):
+    del weights, ex
+    st.local_w = protocol.local_run_fleet(st.local_w, seg,
+                                          local_train_fn=train_fn,
+                                          train_ctx=ctx)
+
+
+def _local_finish_segment(st, weights, fleet: bool):
+    """There is no global model between rounds — aggregate at eval stops
+    (and leave the result in the state so final_global is uniform)."""
+    if fleet:
+        st.global_w = jax.vmap(protocol.aggregate)(st.local_w, weights)
+    else:
+        st.global_w = protocol.aggregate(st.local_w, weights)
+
+
+def _fedasync_precompute(env, sp, *, rounds, seed):
+    del seed  # FedAsync's event process draws only from the env rng
+    return federation.precompute_fedasync_schedule(
+        env, rounds=rounds, alpha=sp.alpha, staleness_exp=sp.staleness_exp)
+
+
+def _fedasync_fleet_precompute(members, *, rounds):
+    return schedules.AsyncFleetSchedule.stack([
+        federation.precompute_fedasync_schedule(
+            mem.env, rounds=rounds, alpha=mem.alpha,
+            staleness_exp=mem.staleness_exp)
+        for mem in members])
+
+
+def _fedasync_scan_segment(st, seg, weights, train_fn, ex):
+    del weights, ex
+    st.global_w, st.local_w = protocol.fedasync_run_scan(
+        st.global_w, st.local_w, seg, local_train_fn=train_fn)
+
+
+def _fedasync_loop_round(st, sched, i, weights, train_fn, ex):
+    del weights, ex
+    st.global_w, st.local_w = protocol.fedasync_round(
+        st.global_w, st.local_w, committed=_to_j(sched.committed[i]),
+        order=jnp.asarray(sched.order[i]),
+        alphas=jnp.asarray(sched.alphas[i], jnp.float32),
+        local_train_fn=train_fn, train_args=(i + 1,))
+
+
+def _fedasync_fleet_segment(st, seg, weights, train_fn, ex, ctx):
+    del weights, ex
+    st.global_w, st.local_w = protocol.fedasync_run_fleet(
+        st.global_w, st.local_w, seg, local_train_fn=train_fn,
+        train_ctx=ctx)
+
+
+register(ProtocolDef(
+    name='safa', spec_cls=SafaSpec,
+    precompute=_safa_precompute,
+    fleet_precompute=lambda members, *, rounds:
+        federation.precompute_fleet_schedule(members, rounds=rounds),
+    scan_segment=_safa_scan_segment, loop_round=_safa_loop_round,
+    fleet_segment=_safa_fleet_segment,
+    uses_cache=True, supports_wire=True, supports_kernel=True))
+
+register(ProtocolDef(
+    name='fedavg', spec_cls=FedAvgSpec,
+    precompute=_sync_precompute(fedcs=False),
+    fleet_precompute=_sync_fleet_precompute(fedcs=False),
+    scan_segment=_fedavg_scan_segment, loop_round=_fedavg_loop_round,
+    fleet_segment=_fedavg_fleet_segment, supports_wire=True))
+
+register(ProtocolDef(
+    name='fedcs', spec_cls=FedCSSpec,
+    precompute=_sync_precompute(fedcs=True),
+    fleet_precompute=_sync_fleet_precompute(fedcs=True),
+    scan_segment=_fedavg_scan_segment, loop_round=_fedavg_loop_round,
+    fleet_segment=_fedavg_fleet_segment, supports_wire=True))
+
+register(ProtocolDef(
+    name='local', spec_cls=LocalSpec,
+    precompute=_local_precompute,
+    fleet_precompute=_local_fleet_precompute,
+    scan_segment=_local_scan_segment, loop_round=_local_loop_round,
+    fleet_segment=_local_fleet_segment,
+    finish_segment=_local_finish_segment))
+
+register(ProtocolDef(
+    name='fedasync', spec_cls=FedAsyncSpec,
+    precompute=_fedasync_precompute,
+    fleet_precompute=_fedasync_fleet_precompute,
+    scan_segment=_fedasync_scan_segment, loop_round=_fedasync_loop_round,
+    fleet_segment=_fedasync_fleet_segment))
+
+
+# ---------------------------------------------------------------------------
+# Experiment + CompiledRunner
+# ---------------------------------------------------------------------------
+
+class Experiment:
+    """One declarative experiment: (task, env, protocol spec, exec spec,
+    rounds, seed).  ``task`` may be None for timing-only runs
+    (``ExecSpec(numeric=False)``)."""
+
+    def __init__(self, task, env, protocol: ProtocolSpec,
+                 exec: Optional[ExecSpec] = None, *,  # noqa: A002
+                 rounds: int, seed: int = 0):
+        self.task = task
+        self.env = env
+        self.protocol = protocol
+        self.exec = exec if exec is not None else ExecSpec()
+        self.rounds = int(rounds)
+        self.seed = int(seed)
+        self._pdef = check_compat(self.protocol, self.exec)
+        self._sched = None
+
+    def precompute(self):
+        """Run the host event state machine (versions, crash draws,
+        selection) once and cache the [rounds, m] schedule.  The env rng
+        is consumed exactly once per Experiment — repeated calls (and
+        repeated ``run()``s) replay the same schedule."""
+        if self._sched is None:
+            self._sched = self._pdef.precompute(
+                self.env, self.protocol, rounds=self.rounds, seed=self.seed)
+        return self._sched
+
+    def compile(self) -> 'CompiledRunner':
+        """Resolve the engine and pin the static pieces of the compiled
+        program (train fn, kernel/wire modes).  The XLA trace itself is
+        built at the first ``run()`` dispatch and cached by jit."""
+        return CompiledRunner(self)
+
+    def fingerprint(self, members=None, tasks=None, task=None) -> str:
+        """Identity of the run a checkpoint belongs to: protocol/exec
+        specs, rounds, seed, env(s) — and the task(s), so a carry is
+        never resumed against different training data."""
+        parts = [
+            f'proto={self._pdef.name}',
+            f'spec={dataclasses.asdict(self.protocol)!r}',
+            f'exec={dataclasses.asdict(self.exec)!r}',
+            f'rounds={self.rounds}', f'seed={self.seed}',
+        ]
+        if members is None:
+            parts.append('env=' + _env_fp(self.env))
+            parts.append('task=' + _task_fp(self.task))
+        else:
+            parts += ['member=' + _env_fp(mem.env) + repr(
+                (mem.fraction, mem.lag_tolerance, mem.seed, mem.alpha,
+                 mem.staleness_exp)) for mem in members]
+            if tasks is not None:
+                parts += ['task=' + _task_fp(t) for t in tasks]
+            else:
+                parts.append('task=' + _task_fp(task))
+        return '|'.join(parts)
+
+
+class CompiledRunner:
+    """Executes an ``Experiment``.  ``run()`` drives the single
+    simulation; ``run_sweep(members)`` drives S member configurations as
+    one batched fleet.  Both checkpoint at eval-segment boundaries when
+    ``checkpoint=`` names a path, and resume from it when it exists."""
+
+    def __init__(self, exp: Experiment):
+        self.exp = exp
+        self._pdef = exp._pdef
+        self._dev = None            # cached device-resident schedule
+
+    # -- single run ---------------------------------------------------------
+
+    def _engine(self, *, sweep: bool) -> str:
+        e = self.exp.exec.engine
+        if sweep:
+            e = e if e is not None else 'fleet'
+            if e not in ('fleet', 'sequential'):
+                raise ValueError(
+                    f'unknown engine {e!r} (want "fleet" or "sequential")')
+        else:
+            e = e if e is not None else 'scan'
+            if e not in ('scan', 'loop'):
+                raise ValueError(
+                    f'unknown engine {e!r} (want "scan" or "loop")')
+        return e
+
+    def _train_fn(self, task):
+        if getattr(self.exp.protocol, 'quantize_uploads', False):
+            return federation._quantized_train_fn(task.local_train)
+        return task.local_train
+
+    def run(self, *, checkpoint: Optional[str] = None,
+            max_segments: Optional[int] = None) -> History:
+        """Execute the experiment.  ``checkpoint`` (a path) enables
+        save/resume at eval-segment boundaries; ``max_segments`` stops
+        after that many segments *this call* (the partial History carries
+        the state reached so far — resume via ``checkpoint``)."""
+        exp = self.exp
+        ex = exp.exec
+        engine = self._engine(sweep=False)
+        sched = exp.precompute()
+        hist = History(self._pdef.name, records=_fresh_records(sched.records),
+                       futility=sched.futility)
+        if not ex.numeric:
+            return hist
+        if exp.task is None:
+            raise ValueError('numeric run needs a Task '
+                             '(or ExecSpec(numeric=False))')
+
+        st = _init_state(exp.task, exp.env.m, exp.seed, self._pdef.uses_cache)
+        start_seg = 0
+        fingerprint = exp.fingerprint()
+        if checkpoint is not None and ckpt.exists(checkpoint):
+            tree, start_seg, saved = ckpt.load_run(
+                checkpoint, st.tree(), fingerprint=fingerprint)
+            st.set_tree(tree)
+            _apply_saved_history(hist, saved[0])
+
+        weights = jnp.asarray(exp.env.weights)
+        train_fn = self._train_fn(exp.task)
+        evals = _eval_rounds(exp.rounds, ex.eval_every)
+        if engine == 'scan' and self._dev is None:
+            self._dev = sched.to_device()
+        start = evals[start_seg - 1] if start_seg else 0
+        done = 0
+        for k in range(start_seg, len(evals)):
+            stop = evals[k]
+            if engine == 'scan':
+                seg = jax.tree.map(lambda a: a[start:stop], self._dev)
+                self._pdef.scan_segment(st, seg, weights, train_fn, ex)
+            else:
+                for t in range(start + 1, stop + 1):
+                    self._pdef.loop_round(st, sched, t - 1, weights,
+                                          train_fn, ex)
+            if self._pdef.finish_segment is not None:
+                self._pdef.finish_segment(st, weights, False)
+            _record_eval(hist, hist.records[stop - 1], exp.task, st.global_w)
+            start = stop
+            done += 1
+            if checkpoint is not None:
+                ckpt.save_run(checkpoint, st.tree(), seg_done=k + 1,
+                              histories=[hist], fingerprint=fingerprint)
+            if max_segments is not None and done >= max_segments \
+                    and k + 1 < len(evals):
+                break
+        hist.final_global = st.global_w
+        return hist
+
+    # -- sweeps -------------------------------------------------------------
+
+    def run_sweep(self, members, *, checkpoint: Optional[str] = None,
+                  max_segments: Optional[int] = None) -> list:
+        """Run S = len(members) simulations of this protocol as a batched
+        fleet; returns one ``History`` per member, in order.
+
+        ``members`` is a list of ``SweepMember`` or a ``SweepSpec``; a
+        ``SweepSpec`` may carry per-member ``tasks`` (padded stacking —
+        members may then hold different client partitions).  The
+        experiment's own env/seed are not used here; each member carries
+        its own.  ``engine='fleet'`` (default) executes all members in a
+        single vmapped-scan dispatch per eval segment (sharded over JAX
+        devices when several are visible and S divides evenly);
+        ``engine='sequential'`` drives the same precomputed schedules
+        through S per-member scan runs — bit-identical per member."""
+        exp = self.exp
+        ex = exp.exec
+        engine = self._engine(sweep=True)
+        if isinstance(members, SweepSpec):
+            sweep, members = members, list(members.members)
+            tasks = list(sweep.tasks) if sweep.tasks is not None else None
+        else:
+            members, tasks = list(members), None
+        if not members:
+            raise ValueError('empty sweep')
+        m = members[0].env.m
+        if any(mem.env.m != m for mem in members):
+            raise ValueError('fleet members must share the client count m')
+        if tasks is not None and all(t is tasks[0] for t in tasks):
+            # one shared task object: take the cheaper no-padding path
+            shared_task, tasks = tasks[0], None
+        else:
+            shared_task = exp.task
+        if getattr(exp.protocol, 'quantize_uploads', False):
+            raise ValueError(
+                'quantize_uploads is the single-run per-leaf reference '
+                "knob; sweeps take the packed wire instead (wire='int8')")
+
+        fleet = self._pdef.fleet_precompute(members, rounds=exp.rounds)
+        hists = [History(self._pdef.name,
+                         records=_fresh_records(fleet.records[s]),
+                         futility=float(fleet.futility[s]))
+                 for s in range(fleet.size)]
+        if not ex.numeric:
+            return hists
+        if shared_task is None and tasks is None:
+            raise ValueError('numeric sweep needs a Task (shared or '
+                             'per-member) or ExecSpec(numeric=False)')
+        if checkpoint is not None and engine != 'fleet':
+            raise ValueError("sweep checkpointing requires engine='fleet'")
+
+        weights = jnp.asarray(np.stack([mem.env.weights for mem in members]))
+        evals = _eval_rounds(exp.rounds, ex.eval_every)
+
+        if engine == 'sequential':
+            for s, (mem, hist) in enumerate(zip(members, hists)):
+                task_s = tasks[s] if tasks is not None else shared_task
+                st = _init_state(task_s, m, mem.seed, self._pdef.uses_cache)
+                dev = fleet.member(s).to_device()
+                w_s = jnp.asarray(mem.env.weights)
+                train_fn = task_s.local_train
+                start = 0
+                for stop in evals:
+                    seg = jax.tree.map(lambda a: a[start:stop], dev)
+                    self._pdef.scan_segment(st, seg, w_s, train_fn, ex)
+                    if self._pdef.finish_segment is not None:
+                        self._pdef.finish_segment(st, w_s, False)
+                    _record_eval(hist, hist.records[stop - 1], task_s,
+                                 st.global_w)
+                    start = stop
+                hist.final_global = st.global_w
+            return hists
+
+        # fleet engine: one init per member (deduped per distinct seed for
+        # a shared task — vmapping init_global is NOT bit-stable), then one
+        # broadcast into the fleet-major carry
+        if tasks is not None:
+            stacked = _stacked_task(tasks)
+            ctx = stacked.fleet_ctx()
+            train_fn = stacked.fleet_train
+            g = _stack_trees([tasks[s].init_global(jax.random.PRNGKey(mem.seed))
+                              for s, mem in enumerate(members)])
+        else:
+            ctx = None
+            train_fn = self._train_fn(shared_task)
+            init = {}
+            for mem in members:
+                if mem.seed not in init:
+                    init[mem.seed] = shared_task.init_global(
+                        jax.random.PRNGKey(mem.seed))
+            g = _stack_trees([init[mem.seed] for mem in members])
+
+        def bcast():
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[:, None],
+                                           (a.shape[0], m) + a.shape[1:]), g)
+
+        st = _RunState(g, bcast(),
+                       bcast() if self._pdef.uses_cache else None)
+        start_seg = 0
+        fingerprint = exp.fingerprint(members, tasks=tasks, task=shared_task)
+        if checkpoint is not None and ckpt.exists(checkpoint):
+            tree, start_seg, saved = ckpt.load_run(
+                checkpoint, st.tree(), fingerprint=fingerprint)
+            st.set_tree(tree)
+            for hist, d in zip(hists, saved):
+                _apply_saved_history(hist, d)
+
+        dev = fleet.to_device()
+        ndev = len(jax.devices())
+        if ex.shard and ndev > 1 and len(members) % ndev == 0:
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec
+            mesh = Mesh(np.asarray(jax.devices()), ('fleet',))
+            sharding = NamedSharding(mesh, PartitionSpec('fleet'))
+            tree, dev, weights, ctx = jax.device_put(
+                (st.tree(), dev, weights, ctx), sharding)
+            st.set_tree(tree)
+
+        start = evals[start_seg - 1] if start_seg else 0
+        done = 0
+        g_host = jax.tree.map(np.asarray, st.global_w)
+        for k in range(start_seg, len(evals)):
+            stop = evals[k]
+            seg = jax.tree.map(lambda a: a[:, start:stop], dev)
+            self._pdef.fleet_segment(st, seg, weights, train_fn, ex, ctx)
+            if self._pdef.finish_segment is not None:
+                self._pdef.finish_segment(st, weights, True)
+            # one host gather per leaf: slicing members out of a (possibly
+            # device-sharded) fleet array S times is far slower than one
+            # fetch + S host slices
+            g_host = jax.tree.map(np.asarray, st.global_w)
+            for s, hist in enumerate(hists):
+                task_s = tasks[s] if tasks is not None else shared_task
+                _record_eval(hist, hist.records[stop - 1], task_s,
+                             _tree_member(g_host, s))
+            start = stop
+            done += 1
+            if checkpoint is not None:
+                ckpt.save_run(checkpoint, st.tree(), seg_done=k + 1,
+                              histories=hists, fingerprint=fingerprint)
+            if max_segments is not None and done >= max_segments \
+                    and k + 1 < len(evals):
+                break
+        for s, hist in enumerate(hists):
+            hist.final_global = _tree_member(g_host, s)
+        return hists

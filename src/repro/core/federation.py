@@ -1,81 +1,65 @@
-"""Federation orchestrators: SAFA / FedAvg / FedCS / FedAsync / fully-local.
+"""Federation event processes: SAFA / FedAvg / FedCS / FedAsync / local.
 
-The orchestrator owns the *protocol* state machine (versions, commit flags,
-pending straggler progress) in numpy, drives the event simulator for
-timing/crash draws, and (optionally, ``numeric=True``) executes the model
-math via the jit-able mask algebra in ``repro.core.protocol``.
+This module owns the *protocol state machines* (versions, commit flags,
+pending straggler progress) in numpy: they drive the event simulator for
+timing/crash draws and precompute whole runs — and whole sweeps — as mask
+schedules, because the event process never looks at model weights.
 
-Timing-only mode (``numeric=False``) reproduces the paper's round-length /
-T_dist / SR / futility tables at full scale without touching model weights —
-those metrics depend only on the event process, exactly as in the paper.
+* ``precompute_safa_schedule`` / ``precompute_sync_schedule`` /
+  ``precompute_local_schedule`` / ``precompute_fedasync_schedule`` run a
+  single simulation's state machine in one host pass and emit
+  ``[rounds, m]`` mask schedules (containers in ``repro.core.schedules``).
+* ``precompute_fleet_schedule`` / ``precompute_sync_fleet_schedule`` run S
+  state machines fleet-major on ``[S, m]`` arrays, bit-identical to S
+  independent precomputes.
 
-Because the event process never looks at model weights, every per-round mask
-is known before the first gradient step: ``precompute_safa_schedule`` /
-``precompute_sync_schedule`` run the whole state machine in one cheap host
-pass and emit [rounds, m] mask schedules.  The numeric run then picks an
-*engine*:
+Execution lives elsewhere: the compiled scan/fleet engines are in
+``repro.core.protocol``, and the public entry point that wires specs,
+schedules and engines together is ``repro.core.api`` (``repro.api``) —
+declarative ``Experiment``s with checkpoint/resume-capable runners.
 
-* ``engine='scan'`` (default) — the entire span between eval points runs as
-  a single ``jax.lax.scan`` dispatch with the (global, local, cache) carry
-  donated (``protocol.safa_run_scan`` / ``protocol.fedavg_run_scan``);
-* ``engine='loop'`` — the seed's per-round Python loop, kept as the
-  reference mode (one dispatch per op per round, masks shuttled
-  host->device every round); bit-identical to the scanned engine.
-
-Every runner in ``RUNNERS`` — SAFA, FedAvg, FedCS, fully-local and
-FedAsync — has a schedule precompute and compiles to one scan dispatch per
-eval segment; the per-round reference loops are kept as the bit-identical
-``engine='loop'`` ground truth.
-
-Because every paper result is a *sweep* (seeds x crash rates x lag
-tolerances x fractions), schedules also stack fleet-major: ``FleetSchedule``
-(and its sync/local/async counterparts) hold S independent event processes
-as [S, rounds, m] mask tensors and ``run_sweep`` executes all S simulations
-of any protocol in one ``jax.vmap``-over-scan dispatch
-(``protocol.safa_run_fleet`` / ``fedavg_run_fleet`` / ``local_run_fleet`` /
-``fedasync_run_fleet``), bit-identical per member to S sequential
-``engine='scan'`` runs.
+The historical free functions (``run_safa``, ``run_fedavg``, ``run_fedcs``,
+``run_local``, ``run_fedasync``, ``run_sweep``) remain as thin shims over
+``api.Experiment`` for backwards compatibility; they emit
+``DeprecationWarning`` and are bit-identical to their spec spellings
+(regression-tested).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
+import sys
+import warnings
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import protocol, selection
+from repro.core.schedules import (
+    AsyncFleetSchedule,
+    FedasyncSchedule,
+    FleetSchedule,
+    History,
+    LocalFleetSchedule,
+    LocalSchedule,
+    RoundRecord,
+    SafaSchedule,
+    SweepMember,
+    SyncFleetSchedule,
+    SyncSchedule,
+)
 from repro.fedsim import FLEnv
 
-
-@dataclasses.dataclass
-class RoundRecord:
-    round: int
-    round_len: float
-    t_dist: float
-    eur: float
-    sr: float
-    vv: float
-    n_picked: int
-    n_committed: int
-    n_crashed: int
-    eval: Optional[dict] = None
-
-
-@dataclasses.dataclass
-class History:
-    protocol: str
-    records: list = dataclasses.field(default_factory=list)
-    futility: float = 0.0
-    best_eval: Optional[dict] = None
-    final_global: Any = None
-
-    def mean(self, field: str) -> float:
-        return float(np.mean([getattr(r, field) for r in self.records]))
-
-    def evals(self):
-        return [(r.round, r.eval) for r in self.records if r.eval is not None]
+__all__ = [
+    'AsyncFleetSchedule', 'FedasyncSchedule', 'FleetSchedule', 'History',
+    'LocalFleetSchedule', 'LocalSchedule', 'RoundRecord', 'RUNNERS',
+    'SafaSchedule', 'SweepMember', 'SyncFleetSchedule', 'SyncSchedule',
+    'Task', 'precompute_fedasync_schedule', 'precompute_fleet_schedule',
+    'precompute_local_schedule', 'precompute_safa_schedule',
+    'precompute_sync_fleet_schedule', 'precompute_sync_schedule',
+    'run_fedasync', 'run_fedavg', 'run_fedcs', 'run_local', 'run_safa',
+    'run_sweep',
+]
 
 
 class Task:
@@ -98,42 +82,12 @@ class Task:
         raise NotImplementedError
 
 
-def _to_j(mask: np.ndarray):
-    return jnp.asarray(mask)
-
-
 class _NumericState:
     def __init__(self, task: Task, m: int, seed: int):
         key = jax.random.PRNGKey(seed)
         self.global_w = task.init_global(key)
         self.local_w = protocol.broadcast_global(self.global_w, m)
         self.cache = protocol.broadcast_global(self.global_w, m)
-
-
-@dataclasses.dataclass
-class SafaSchedule:
-    """Precomputed SAFA event process: [rounds, m] bool mask schedules plus
-    the timing records they imply.  Independent of model weights."""
-    sync: np.ndarray
-    committed: np.ndarray
-    picked: np.ndarray
-    undrafted: np.ndarray
-    deprecated: np.ndarray
-    records: list
-    futility: float
-
-    @property
-    def rounds(self) -> int:
-        return self.sync.shape[0]
-
-    def to_device(self) -> protocol.RoundSchedule:
-        """One host->device hop for the whole run."""
-        return protocol.RoundSchedule(
-            sync=jnp.asarray(self.sync), completed=jnp.asarray(self.committed),
-            picked=jnp.asarray(self.picked),
-            undrafted=jnp.asarray(self.undrafted),
-            deprecated=jnp.asarray(self.deprecated),
-            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
 
 
 def _masked_var(values: np.ndarray, mask: np.ndarray) -> np.ndarray:
@@ -262,112 +216,6 @@ def _quantized_train_fn(base_fn):
     return cache[key]
 
 
-def _eval_rounds(rounds: int, eval_every: int):
-    """Rounds at which the orchestrators evaluate the global model.
-
-    These are also the scan-engine segment boundaries: at most two distinct
-    segment lengths exist per run (eval_every and a ragged final remainder),
-    so the scanned program traces at most twice."""
-    stops = sorted(set(range(eval_every, rounds + 1, eval_every)) | {rounds})
-    return [t for t in stops if t >= 1]
-
-
-def _record_eval(hist: History, rec: RoundRecord, task: Task, global_w):
-    rec.eval = task.evaluate(global_w)
-    if hist.best_eval is None or rec.eval['loss'] < hist.best_eval['loss']:
-        hist.best_eval = rec.eval
-
-
-def _scan_segments(task: Task, hist: History, ns: _NumericState, dev,
-                   weights, records, evals, *, proto: str, local_train_fn,
-                   use_kernel=False, wire='f32'):
-    """Drive one numeric run through the scan engine: one donated-carry
-    dispatch per eval segment.  Shared by every single-run orchestrator
-    and ``run_sweep(engine='sequential')`` so they stay step-identical.
-
-    ``proto`` picks the scanned round body; for ``'local'`` there is no
-    global model in the carry, so the eval-point aggregation happens here
-    (and lands in ``ns.global_w`` so the caller's final_global handling is
-    uniform)."""
-    start = 0
-    for stop in evals:
-        seg = jax.tree.map(lambda a: a[start:stop], dev)
-        if proto == 'safa':
-            ns.global_w, ns.local_w, ns.cache = protocol.safa_run_scan(
-                ns.global_w, ns.local_w, ns.cache, seg, weights,
-                local_train_fn=local_train_fn, use_kernel=use_kernel,
-                wire=wire)
-        elif proto in ('fedavg', 'fedcs'):
-            ns.global_w, ns.local_w = protocol.fedavg_run_scan(
-                ns.global_w, ns.local_w, seg, weights,
-                local_train_fn=local_train_fn, wire=wire)
-        elif proto == 'local':
-            ns.local_w = protocol.local_run_scan(
-                ns.local_w, seg, local_train_fn=local_train_fn)
-            ns.global_w = protocol.aggregate(ns.local_w, weights)
-        else:  # fedasync
-            ns.global_w, ns.local_w = protocol.fedasync_run_scan(
-                ns.global_w, ns.local_w, seg,
-                local_train_fn=local_train_fn)
-        _record_eval(hist, records[stop - 1], task, ns.global_w)
-        start = stop
-
-
-def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
-             lag_tolerance: int, rounds: int, eval_every: int = 10,
-             numeric: bool = True, use_kernel=False,
-             quantize_uploads: bool = False, seed: int = 0,
-             engine: str = 'scan', wire: str = 'f32') -> History:
-    """``wire='int8'`` runs every round on the compressed-wire fast path
-    (packed int8 uplink + fused dequant-aggregate kernel, 2 dispatches per
-    round); ``quantize_uploads=True`` is the per-leaf reference form of
-    the same wire (2 dispatches per leaf per client), kept as the
-    bit-identity ground truth — the two are mutually exclusive."""
-    protocol.check_wire(wire)
-    if quantize_uploads and wire != 'f32':
-        raise ValueError(
-            "quantize_uploads=True is the per-leaf reference for the packed "
-            "wire='int8' path; pass one or the other, not both")
-    m = env.m
-    sched = precompute_safa_schedule(env, fraction=fraction,
-                                     lag_tolerance=lag_tolerance,
-                                     rounds=rounds)
-    hist = History('safa', records=sched.records, futility=sched.futility)
-    if not numeric:
-        return hist
-
-    ns = _NumericState(task, m, seed)
-    weights = jnp.asarray(env.weights)
-    train_fn = _quantized_train_fn(task.local_train) if quantize_uploads \
-        else task.local_train
-
-    evals = _eval_rounds(rounds, eval_every)
-    if engine == 'scan':
-        _scan_segments(task, hist, ns, sched.to_device(), weights,
-                       sched.records, evals, proto='safa',
-                       local_train_fn=train_fn, use_kernel=use_kernel,
-                       wire=wire)
-    elif engine == 'loop':
-        for t in range(1, rounds + 1):
-            i = t - 1
-            ns.global_w, ns.local_w, ns.cache = protocol.safa_round(
-                ns.global_w, ns.local_w, ns.cache,
-                sync_mask=_to_j(sched.sync[i]),
-                completed=_to_j(sched.committed[i]),
-                picked=_to_j(sched.picked[i]),
-                undrafted=_to_j(sched.undrafted[i]),
-                deprecated=_to_j(sched.deprecated[i]), weights=weights,
-                local_train_fn=train_fn, train_args=(t,),
-                use_kernel=use_kernel, wire=wire)
-            if t in evals:
-                _record_eval(hist, sched.records[i], task, ns.global_w)
-    else:
-        raise ValueError(f'unknown engine {engine!r} (want "scan" or "loop")')
-
-    hist.final_global = ns.global_w
-    return hist
-
-
 def _capped_round_len(arrival: np.ndarray, mask: np.ndarray,
                       t_lim: float) -> float:
     """Deadline-capped max arrival over ``mask``, ignoring non-finite
@@ -415,27 +263,6 @@ def _sync_rounds_common(selected, crashed, cfrac, full_tt, *, t_lim,
     return np.minimum(t_lim, round_len), t_dist
 
 
-@dataclasses.dataclass
-class SyncSchedule:
-    """Precomputed FedAvg/FedCS event process ([rounds, m] masks + records).
-    ``completed`` is the per-round survivor mask (``~crashed``); the numeric
-    round intersects it with ``selected`` itself."""
-    selected: np.ndarray
-    completed: np.ndarray
-    records: list
-    futility: float
-
-    @property
-    def rounds(self) -> int:
-        return self.selected.shape[0]
-
-    def to_device(self) -> protocol.SyncSchedule:
-        return protocol.SyncSchedule(
-            selected=jnp.asarray(self.selected),
-            completed=jnp.asarray(self.completed),
-            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
-
-
 def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
                              seed: int, fedcs: bool) -> SyncSchedule:
     """Host pass for the synchronous baselines (selection + crash draws)."""
@@ -479,67 +306,6 @@ def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
                         futility=wasted / max(performed, 1e-9))
 
 
-def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
-               rounds: int, eval_every: int = 10, numeric: bool = True,
-               seed: int = 0, fedcs: bool = False,
-               engine: str = 'scan', wire: str = 'f32') -> History:
-    """``wire='int8'`` ships the uploads through the packed int8 wire
-    (cross-protocol comparison against SAFA's compressed fast path)."""
-    protocol.check_wire(wire)
-    sched = precompute_sync_schedule(env, fraction=fraction, rounds=rounds,
-                                     seed=seed, fedcs=fedcs)
-    hist = History('fedcs' if fedcs else 'fedavg', records=sched.records,
-                   futility=sched.futility)
-    if not numeric:
-        return hist
-
-    ns = _NumericState(task, env.m, seed)
-    weights = jnp.asarray(env.weights)
-    evals = _eval_rounds(rounds, eval_every)
-    if engine == 'scan':
-        _scan_segments(task, hist, ns, sched.to_device(), weights,
-                       sched.records, evals,
-                       proto='fedcs' if fedcs else 'fedavg',
-                       local_train_fn=task.local_train, wire=wire)
-    elif engine == 'loop':
-        for t in range(1, rounds + 1):
-            i = t - 1
-            ns.global_w, ns.local_w = protocol.fedavg_round(
-                ns.global_w, ns.local_w, selected=_to_j(sched.selected[i]),
-                completed=_to_j(sched.completed[i]), weights=weights,
-                local_train_fn=task.local_train, train_args=(t,), wire=wire)
-            if t in evals:
-                _record_eval(hist, sched.records[i], task, ns.global_w)
-    else:
-        raise ValueError(f'unknown engine {engine!r} (want "scan" or "loop")')
-
-    hist.final_global = ns.global_w
-    return hist
-
-
-def run_fedcs(task, env, **kw) -> History:
-    return run_fedavg(task, env, fedcs=True, **kw)
-
-
-@dataclasses.dataclass
-class LocalSchedule:
-    """Precomputed fully-local event process ([rounds, m] survivor mask +
-    records).  ``completed`` is selected & survived — the only mask the
-    numeric round needs (there is no aggregation until eval points)."""
-    completed: np.ndarray
-    records: list
-    futility: float
-
-    @property
-    def rounds(self) -> int:
-        return self.completed.shape[0]
-
-    def to_device(self) -> protocol.LocalSchedule:
-        return protocol.LocalSchedule(
-            completed=jnp.asarray(self.completed),
-            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
-
-
 def precompute_local_schedule(env: FLEnv, *, fraction: float, rounds: int,
                               seed: int) -> LocalSchedule:
     """Host pass for the fully-local baseline (selection + crash draws).
@@ -566,32 +332,6 @@ def precompute_local_schedule(env: FLEnv, *, fraction: float, rounds: int,
                            n_crashed=n_crashed[i])
                for i in range(rounds)]
     return LocalSchedule(completed=completed, records=records, futility=0.0)
-
-
-@dataclasses.dataclass
-class FedasyncSchedule:
-    """Precomputed FedAsync event process: [rounds, m] commit masks plus
-    the arrival-ordered merge permutations and staleness-scaled mixing
-    weights the sequential server applies each round.  Model weights never
-    enter — merge order is pure arrival timing and the alphas depend only
-    on staleness — so the whole sequential-merge schedule is known up
-    front."""
-    committed: np.ndarray       # [rounds, m] bool
-    order: np.ndarray           # [rounds, m] int — arrival merge order
-    alphas: np.ndarray          # [rounds, m] float — 0 for non-commits
-    records: list
-    futility: float
-
-    @property
-    def rounds(self) -> int:
-        return self.committed.shape[0]
-
-    def to_device(self) -> protocol.AsyncSchedule:
-        return protocol.AsyncSchedule(
-            committed=jnp.asarray(self.committed),
-            order=jnp.asarray(self.order),
-            alphas=jnp.asarray(self.alphas, jnp.float32),
-            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
 
 
 def precompute_fedasync_schedule(env: FLEnv, *, rounds: int,
@@ -642,162 +382,14 @@ def precompute_fedasync_schedule(env: FLEnv, *, rounds: int,
 
 
 # ---------------------------------------------------------------------------
-# Fleet engine: batched multi-seed / multi-config sweeps
+# Fleet precomputes: batched multi-seed / multi-config sweeps
 # ---------------------------------------------------------------------------
 #
-# A sweep is S independent simulations of the same protocol over one shared
-# Task.  Each member's event process is precomputed exactly as for a single
-# run, the resulting [rounds, m] schedules stack into [S, rounds, m]
-# tensors, and all S numeric runs execute as ONE vmapped-scan dispatch
-# (protocol.safa_run_fleet / fedavg_run_fleet) — bit-identical per member
-# to S sequential engine='scan' runs, but paying one dispatch, one compile
-# and one fleet-major set of buffers for the whole grid.
-
-@dataclasses.dataclass
-class SweepMember:
-    """One simulation in a fleet sweep: its own environment + protocol
-    hyper-parameters.  All members of a sweep share the Task (model shapes
-    and client data), so their envs must agree on ``m`` — build them from
-    one base config (``fedsim.env_grid``), varying ``crash_prob``,
-    ``draw_seed``, ``t_lim``, ... per member."""
-    env: FLEnv
-    fraction: float = 0.5       # ignored by fedasync (fully asynchronous)
-    lag_tolerance: int = 5      # SAFA only
-    seed: int = 0               # numeric-init (and sync/local-selection) seed
-    alpha: float = 0.6          # FedAsync only: base mixing weight
-    staleness_exp: float = 0.5  # FedAsync only: staleness polynomial
-
-
-class _FleetStack:
-    """Shared fleet-major stacking machinery.  Subclasses set ``MASKS``
-    (the [S, rounds, m] field names, first one authoritative for shapes)
-    and ``_MEMBER_CLS`` (the single-run schedule type)."""
-    MASKS: tuple = ()
-    _MEMBER_CLS = None
-
-    @property
-    def size(self) -> int:
-        return getattr(self, self.MASKS[0]).shape[0]
-
-    @property
-    def rounds(self) -> int:
-        return getattr(self, self.MASKS[0]).shape[1]
-
-    @classmethod
-    def stack(cls, members: list):
-        """Stack S single-run schedules (all with the same rounds and m)."""
-        if len({getattr(s, cls.MASKS[0]).shape for s in members}) != 1:
-            raise ValueError('fleet members must share (rounds, m)')
-        return cls(**{k: np.stack([getattr(s, k) for s in members])
-                      for k in cls.MASKS},
-                   records=[s.records for s in members],
-                   futility=np.array([s.futility for s in members]))
-
-    def member(self, s: int):
-        """Member s's schedule, identical to its own precompute."""
-        return self._MEMBER_CLS(
-            **{k: getattr(self, k)[s] for k in self.MASKS},
-            records=self.records[s], futility=float(self.futility[s]))
-
-    def _round_idx(self):
-        """[S, rounds] per-member round indices for to_device()."""
-        return jnp.asarray(np.broadcast_to(
-            np.arange(1, self.rounds + 1, dtype=np.int32),
-            (self.size, self.rounds)))
-
-
-@dataclasses.dataclass
-class FleetSchedule(_FleetStack):
-    """S independent SAFA event processes stacked fleet-major.
-
-    Mask tensors are [S, rounds, m]; ``records[s]`` / ``futility[s]`` hold
-    member s's timing records and futility ratio, exactly as
-    ``precompute_safa_schedule`` produced them."""
-    sync: np.ndarray
-    committed: np.ndarray
-    picked: np.ndarray
-    undrafted: np.ndarray
-    deprecated: np.ndarray
-    records: list
-    futility: np.ndarray
-
-    MASKS = ('sync', 'committed', 'picked', 'undrafted', 'deprecated')
-    _MEMBER_CLS = SafaSchedule
-
-    def to_device(self) -> protocol.RoundSchedule:
-        """One host->device hop for the whole fleet ([S, rounds, m] masks,
-        [S, rounds] round indices)."""
-        return protocol.RoundSchedule(
-            sync=jnp.asarray(self.sync), completed=jnp.asarray(self.committed),
-            picked=jnp.asarray(self.picked),
-            undrafted=jnp.asarray(self.undrafted),
-            deprecated=jnp.asarray(self.deprecated),
-            round_idx=self._round_idx())
-
-
-@dataclasses.dataclass
-class SyncFleetSchedule(_FleetStack):
-    """FedAvg/FedCS counterpart of ``FleetSchedule`` ([S, rounds, m])."""
-    selected: np.ndarray
-    completed: np.ndarray
-    records: list
-    futility: np.ndarray
-
-    MASKS = ('selected', 'completed')
-    _MEMBER_CLS = SyncSchedule
-
-    def to_device(self) -> protocol.SyncSchedule:
-        return protocol.SyncSchedule(
-            selected=jnp.asarray(self.selected),
-            completed=jnp.asarray(self.completed),
-            round_idx=self._round_idx())
-
-
-@dataclasses.dataclass
-class LocalFleetSchedule(_FleetStack):
-    """Fully-local counterpart of ``FleetSchedule`` ([S, rounds, m])."""
-    completed: np.ndarray
-    records: list
-    futility: np.ndarray
-
-    MASKS = ('completed',)
-    _MEMBER_CLS = LocalSchedule
-
-    def to_device(self) -> protocol.LocalSchedule:
-        return protocol.LocalSchedule(
-            completed=jnp.asarray(self.completed),
-            round_idx=self._round_idx())
-
-
-@dataclasses.dataclass
-class AsyncFleetSchedule(_FleetStack):
-    """FedAsync counterpart of ``FleetSchedule``: [S, rounds, m] commit
-    masks plus the merge-order/alpha tensors driving each member's
-    arrival-ordered sequential mixes."""
-    committed: np.ndarray
-    order: np.ndarray
-    alphas: np.ndarray
-    records: list
-    futility: np.ndarray
-
-    MASKS = ('committed', 'order', 'alphas')
-    _MEMBER_CLS = FedasyncSchedule
-
-    def to_device(self) -> protocol.AsyncSchedule:
-        return protocol.AsyncSchedule(
-            committed=jnp.asarray(self.committed),
-            order=jnp.asarray(self.order),
-            alphas=jnp.asarray(self.alphas, jnp.float32),
-            round_idx=self._round_idx())
-
-
-def _stack_trees(trees):
-    return jax.tree.map(lambda *a: jnp.stack(a), *trees)
-
-
-def _tree_member(tree, s: int):
-    return jax.tree.map(lambda a: a[s], tree)
-
+# A sweep is S independent simulations of the same protocol.  Each member's
+# event process is precomputed exactly as for a single run and the resulting
+# [rounds, m] schedules stack into [S, rounds, m] tensors — here the whole
+# fleet-major state machine runs in one host pass, bit-identical to S
+# independent precomputes (regression-tested).
 
 def precompute_fleet_schedule(members, *, rounds: int) -> FleetSchedule:
     """Run S SAFA event state machines in ONE fleet-major host pass.
@@ -979,235 +571,153 @@ def precompute_sync_fleet_schedule(members, *, rounds: int,
         futility=wasted_tot / np.maximum(performed_tot, 1e-9))
 
 
-def run_sweep(task: Optional[Task], members, *, rounds: int,
-              proto: str = 'safa', eval_every: int = 10,
-              numeric: bool = True, use_kernel=False,
-              engine: str = 'fleet', shard: bool = True,
-              wire: str = 'f32') -> list:
-    """Run S = len(members) simulations of one protocol as a batched fleet.
+# ---------------------------------------------------------------------------
+# Legacy runner shims (DeprecationWarning; bit-identical to the spec path)
+# ---------------------------------------------------------------------------
 
-    Returns one ``History`` per member, in order.  ``engine='fleet'``
-    (default) executes all members in a single vmapped-scan dispatch per
-    eval segment; ``engine='sequential'`` drives the same precomputed
-    schedules through S per-member ``engine='scan'`` runs (the reference
-    path and the benchmark baseline) — both produce bit-identical
-    per-member results.
+def _deprecated(name: str, spelling: str):
+    # attribute the warning to the first frame OUTSIDE this module, so
+    # run_fedcs -> run_fedavg chains still point at the user's call site
+    # (and per-call-site warning dedup keeps working)
+    level, frame = 3, sys._getframe(2)
+    while frame is not None and frame.f_globals.get('__name__') == __name__:
+        level += 1
+        frame = frame.f_back
+    warnings.warn(
+        f'federation.{name}() is deprecated; spell it as {spelling} '
+        f'(repro.api — see docs/ARCHITECTURE.md, "The API layer")',
+        DeprecationWarning, stacklevel=level)
 
-    ``proto`` is any ``RUNNERS`` key ('safa', 'fedavg', 'fedcs', 'local',
-    'fedasync'); one sweep runs one protocol (members of a fleet share a
-    compiled program).  For 'local' the fleet carry is the local stack
-    only, with one vmapped aggregation per eval point; for 'fedasync' the
-    schedule carries each member's merge-order/alpha tensors and
-    ``SweepMember.fraction`` is ignored (``alpha``/``staleness_exp`` apply
-    instead).
 
-    When multiple JAX devices are visible and S divides evenly, ``shard``
-    (default True) splits the fleet axis across them — every op in the
-    scanned program is fleet-parallel, so the shards run with zero
-    communication (on CPU, ``--xla_force_host_platform_device_count=N``
-    turns N cores into N such devices).
+def run_safa(task: Optional[Task], env: FLEnv, *, fraction: float,
+             lag_tolerance: int, rounds: int, eval_every: int = 10,
+             numeric: bool = True, use_kernel=False,
+             quantize_uploads: bool = False, seed: int = 0,
+             engine: str = 'scan', wire: str = 'f32') -> History:
+    """Deprecated shim over ``api.Experiment(..., SafaSpec(...))``.
 
-    ``wire='int8'`` runs every member on the compressed int8 wire
-    (SAFA: fused quantize + dequant-aggregate; FedAvg/FedCS: packed
-    quantize/dequantize round-trip); 'local' and 'fedasync' have no
-    per-round upload-aggregate wire and reject it.
+    ``wire='int8'`` runs every round on the compressed-wire fast path
+    (packed int8 uplink + fused dequant-aggregate kernel, 2 dispatches per
+    round); ``quantize_uploads=True`` is the per-leaf reference form of
+    the same wire (2 dispatches per leaf per client), kept as the
+    bit-identity ground truth — the two are mutually exclusive."""
+    _deprecated('run_safa', 'Experiment(task, env, SafaSpec(...), '
+                'ExecSpec(...)).compile().run()')
+    from repro.core import api
+    exp = api.Experiment(
+        task, env,
+        api.SafaSpec(fraction=fraction, lag_tolerance=lag_tolerance,
+                     quantize_uploads=quantize_uploads),
+        api.ExecSpec(engine=engine, wire=wire, use_kernel=use_kernel,
+                     eval_every=eval_every, numeric=numeric),
+        rounds=rounds, seed=seed)
+    return exp.compile().run()
 
-    Per-member bit-identity with sequential runs holds when the Task's
-    math lowers batch-size independently — true for the shipped
-    regression/SVM tasks, whose predictions are elementwise-mul+reduce
-    (see ``data/tasks.py:_reg_pred``).  Tasks built on ``dot_general``
-    (e.g. the CNN's matmuls/convs) are only guaranteed numerically
-    equivalent, not bit-equal, under the fleet vmap.
-    """
-    if proto not in RUNNERS:
-        raise ValueError(
-            f'unknown proto {proto!r} (want one of {sorted(RUNNERS)})')
-    if engine not in ('fleet', 'sequential'):
-        raise ValueError(
-            f'unknown engine {engine!r} (want "fleet" or "sequential")')
-    protocol.check_wire(wire)
-    if wire != 'f32' and proto in ('local', 'fedasync'):
-        raise ValueError(
-            f"proto {proto!r} has no upload-aggregate wire; wire='int8' "
-            f"applies to safa/fedavg/fedcs only")
-    if not members:
-        raise ValueError('empty sweep')
-    m = members[0].env.m
-    if any(mem.env.m != m for mem in members):
-        raise ValueError('fleet members must share the client count m')
 
-    if proto == 'safa':
-        fleet = precompute_fleet_schedule(members, rounds=rounds)
-    elif proto in ('fedavg', 'fedcs'):
-        fleet = precompute_sync_fleet_schedule(members, rounds=rounds,
-                                               fedcs=proto == 'fedcs')
-    elif proto == 'local':
-        fleet = LocalFleetSchedule.stack([
-            precompute_local_schedule(mem.env, fraction=mem.fraction,
-                                      rounds=rounds, seed=mem.seed)
-            for mem in members])
-    else:  # fedasync
-        fleet = AsyncFleetSchedule.stack([
-            precompute_fedasync_schedule(mem.env, rounds=rounds,
-                                         alpha=mem.alpha,
-                                         staleness_exp=mem.staleness_exp)
-            for mem in members])
-    hists = [History(proto, records=fleet.records[s],
-                     futility=float(fleet.futility[s]))
-             for s in range(fleet.size)]
-    if not numeric:
-        return hists
+def run_fedavg(task: Optional[Task], env: FLEnv, *, fraction: float,
+               rounds: int, eval_every: int = 10, numeric: bool = True,
+               seed: int = 0, fedcs: bool = False,
+               engine: str = 'scan', wire: str = 'f32') -> History:
+    """Deprecated shim over ``api.Experiment(..., FedAvgSpec/FedCSSpec)``.
 
-    weights = jnp.asarray(np.stack([mem.env.weights for mem in members]))
-    evals = _eval_rounds(rounds, eval_every)
+    ``wire='int8'`` ships the uploads through the packed int8 wire
+    (cross-protocol comparison against SAFA's compressed fast path)."""
+    _deprecated('run_fedcs' if fedcs else 'run_fedavg',
+                'Experiment(task, env, FedCSSpec(...) if fedcs else '
+                'FedAvgSpec(...), ExecSpec(...)).compile().run()')
+    from repro.core import api
+    spec_cls = api.FedCSSpec if fedcs else api.FedAvgSpec
+    exp = api.Experiment(
+        task, env, spec_cls(fraction=fraction),
+        api.ExecSpec(engine=engine, wire=wire, eval_every=eval_every,
+                     numeric=numeric),
+        rounds=rounds, seed=seed)
+    return exp.compile().run()
 
-    if engine == 'fleet':
-        # one init per distinct seed (vmapping init_global is NOT bit-stable,
-        # so inits stay per-member calls), broadcast fleet-major in one op
-        init = {}
-        for mem in members:
-            if mem.seed not in init:
-                init[mem.seed] = task.init_global(jax.random.PRNGKey(mem.seed))
-        g = _stack_trees([init[mem.seed] for mem in members])
 
-        def bcast():
-            return jax.tree.map(
-                lambda a: jnp.broadcast_to(a[:, None],
-                                           (a.shape[0], m) + a.shape[1:]), g)
-
-        l = bcast()
-        c = bcast() if proto == 'safa' else None
-        dev = fleet.to_device()
-        ndev = len(jax.devices())
-        if shard and ndev > 1 and len(members) % ndev == 0:
-            from jax.sharding import Mesh, NamedSharding, PartitionSpec
-            mesh = Mesh(np.asarray(jax.devices()), ('fleet',))
-            sharding = NamedSharding(mesh, PartitionSpec('fleet'))
-            g, l, c, dev, weights = jax.device_put((g, l, c, dev, weights),
-                                                   sharding)
-        start = 0
-        for stop in evals:
-            seg = jax.tree.map(lambda a: a[:, start:stop], dev)
-            if proto == 'safa':
-                g, l, c = protocol.safa_run_fleet(
-                    g, l, c, seg, weights, local_train_fn=task.local_train,
-                    use_kernel=use_kernel, wire=wire)
-            elif proto in ('fedavg', 'fedcs'):
-                g, l = protocol.fedavg_run_fleet(
-                    g, l, seg, weights, local_train_fn=task.local_train,
-                    wire=wire)
-            elif proto == 'local':
-                l = protocol.local_run_fleet(
-                    l, seg, local_train_fn=task.local_train)
-                g = jax.vmap(protocol.aggregate)(l, weights)
-            else:  # fedasync
-                g, l = protocol.fedasync_run_fleet(
-                    g, l, seg, local_train_fn=task.local_train)
-            # one host gather per leaf: slicing members out of a (possibly
-            # device-sharded) fleet array S times is far slower than one
-            # fetch + S host slices
-            g_host = jax.tree.map(np.asarray, g)
-            for s, hist in enumerate(hists):
-                _record_eval(hist, fleet.records[s][stop - 1], task,
-                             _tree_member(g_host, s))
-            start = stop
-        for s, hist in enumerate(hists):
-            hist.final_global = _tree_member(g_host, s)
-    else:
-        for s, (mem, hist) in enumerate(zip(members, hists)):
-            ns = _NumericState(task, m, mem.seed)
-            _scan_segments(task, hist, ns, fleet.member(s).to_device(),
-                           jnp.asarray(mem.env.weights), fleet.records[s],
-                           evals, proto=proto,
-                           local_train_fn=task.local_train,
-                           use_kernel=use_kernel, wire=wire)
-            hist.final_global = ns.global_w
-    return hists
+def run_fedcs(task, env, **kw) -> History:
+    return run_fedavg(task, env, fedcs=True, **kw)
 
 
 def run_local(task: Optional[Task], env: FLEnv, *, fraction: float,
               rounds: int, eval_every: int = 10, numeric: bool = True,
-              seed: int = 0, engine: str = 'scan') -> History:
-    """Fully-local baseline: C-fraction of clients train each round with no
+              seed: int = 0, engine: str = 'scan', wire: str = 'f32',
+              use_kernel=False) -> History:
+    """Deprecated shim over ``api.Experiment(..., LocalSpec(...))``.
+
+    Fully-local baseline: C-fraction of clients train each round with no
     aggregation; a weighted aggregation happens at eval points (and after
-    the last round) only."""
-    sched = precompute_local_schedule(env, fraction=fraction, rounds=rounds,
-                                      seed=seed)
-    hist = History('local', records=sched.records, futility=0.0)
-    if not numeric:
-        return hist
-
-    ns = _NumericState(task, env.m, seed)
-    weights = jnp.asarray(env.weights)
-    evals = _eval_rounds(rounds, eval_every)
-    if engine == 'scan':
-        _scan_segments(task, hist, ns, sched.to_device(), weights,
-                       sched.records, evals, proto='local',
-                       local_train_fn=task.local_train)
-    elif engine == 'loop':
-        for t in range(1, rounds + 1):
-            i = t - 1
-            ns.local_w = protocol.local_only_round(
-                ns.local_w, completed=_to_j(sched.completed[i]),
-                local_train_fn=task.local_train, train_args=(t,))
-            if t in evals:
-                ns.global_w = protocol.aggregate(ns.local_w, weights)
-                _record_eval(hist, sched.records[i], task, ns.global_w)
-    else:
-        raise ValueError(f'unknown engine {engine!r} (want "scan" or "loop")')
-
-    # evals always include the final round, so the last aggregation is it
-    hist.final_global = ns.global_w
-    return hist
+    the last round) only.  ``wire``/``use_kernel`` are accepted for
+    signature parity and rejected by ``api.check_compat`` with the same
+    message every surface uses."""
+    _deprecated('run_local', 'Experiment(task, env, LocalSpec(...), '
+                'ExecSpec(...)).compile().run()')
+    from repro.core import api
+    exp = api.Experiment(
+        task, env, api.LocalSpec(fraction=fraction),
+        api.ExecSpec(engine=engine, wire=wire, use_kernel=use_kernel,
+                     eval_every=eval_every, numeric=numeric),
+        rounds=rounds, seed=seed)
+    return exp.compile().run()
 
 
 def run_fedasync(task: Optional[Task], env: FLEnv, *, fraction: float = 1.0,
                  rounds: int = 100, eval_every: int = 10,
                  numeric: bool = True, alpha: float = 0.6,
                  staleness_exp: float = 0.5, seed: int = 0,
-                 engine: str = 'scan') -> History:
-    """FedAsync baseline (Xie et al. [9], paper §II): every willing client
+                 engine: str = 'scan', wire: str = 'f32',
+                 use_kernel=False) -> History:
+    """Deprecated shim over ``api.Experiment(..., FedAsyncSpec(...))``.
+
+    FedAsync baseline (Xie et al. [9], paper §II): every willing client
     trains every round and the server merges each arriving update
     immediately with staleness-polynomial mixing
-    alpha_eff = alpha * (1 + staleness)^(-staleness_exp).
-
-    ``fraction`` is ignored (fully asynchronous — the paper's critique is
-    precisely that the server must absorb every update: SR == 1 and m
-    model merges per virtual round).  The merge order and mixing weights
-    are pure event-process quantities, so they precompute like every other
-    schedule; under ``engine='scan'`` the arrival-ordered sequential mixes
-    run as an inner ``lax.scan`` inside the one compiled dispatch per eval
-    segment, bit-identical to the ``engine='loop'`` reference.
-    """
+    alpha_eff = alpha * (1 + staleness)^(-staleness_exp).  ``fraction`` is
+    ignored (fully asynchronous); ``wire``/``use_kernel`` are rejected by
+    ``api.check_compat`` with the same message every surface uses."""
     del fraction
-    sched = precompute_fedasync_schedule(env, rounds=rounds, alpha=alpha,
-                                         staleness_exp=staleness_exp)
-    hist = History('fedasync', records=sched.records)
-    if not numeric:
-        return hist
+    _deprecated('run_fedasync', 'Experiment(task, env, FedAsyncSpec(...), '
+                'ExecSpec(...)).compile().run()')
+    from repro.core import api
+    exp = api.Experiment(
+        task, env, api.FedAsyncSpec(alpha=alpha, staleness_exp=staleness_exp),
+        api.ExecSpec(engine=engine, wire=wire, use_kernel=use_kernel,
+                     eval_every=eval_every, numeric=numeric),
+        rounds=rounds, seed=seed)
+    return exp.compile().run()
 
-    ns = _NumericState(task, env.m, seed)
-    evals = _eval_rounds(rounds, eval_every)
-    if engine == 'scan':
-        _scan_segments(task, hist, ns, sched.to_device(), None,
-                       sched.records, evals, proto='fedasync',
-                       local_train_fn=task.local_train)
-    elif engine == 'loop':
-        for t in range(1, rounds + 1):
-            i = t - 1
-            ns.global_w, ns.local_w = protocol.fedasync_round(
-                ns.global_w, ns.local_w,
-                committed=_to_j(sched.committed[i]),
-                order=jnp.asarray(sched.order[i]),
-                alphas=jnp.asarray(sched.alphas[i], jnp.float32),
-                local_train_fn=task.local_train, train_args=(t,))
-            if t in evals:
-                _record_eval(hist, sched.records[i], task, ns.global_w)
+
+def run_sweep(task, members, *, rounds: int,
+              proto: str = 'safa', eval_every: int = 10,
+              numeric: bool = True, use_kernel=False,
+              engine: str = 'fleet', shard: bool = True,
+              wire: str = 'f32') -> list:
+    """Deprecated shim over ``api.CompiledRunner.run_sweep``.
+
+    Runs S = len(members) simulations of one protocol as a batched fleet
+    and returns one ``History`` per member, in order.  ``task`` may also
+    be a *list* of per-member Tasks (one per member, padded stacking) —
+    the ``api.SweepSpec(members, tasks=...)`` spelling.
+
+    ``use_kernel`` keeps its historical leniency: it only applies when
+    ``proto == 'safa'`` and is silently ignored otherwise (the api path
+    rejects it instead)."""
+    _deprecated('run_sweep', 'Experiment(task, env, spec, ExecSpec(...))'
+                '.compile().run_sweep(members)')
+    from repro.core import api
+    protocol_spec = api.spec(proto)
+    if isinstance(task, (list, tuple)):
+        sweep = api.SweepSpec(members=tuple(members), tasks=tuple(task))
+        task = None
     else:
-        raise ValueError(f'unknown engine {engine!r} (want "scan" or "loop")')
-
-    hist.final_global = ns.global_w
-    return hist
+        sweep = list(members)
+    exp = api.Experiment(
+        task, members[0].env if members else None, protocol_spec,
+        api.ExecSpec(engine=engine, wire=wire,
+                     use_kernel=use_kernel if proto == 'safa' else False,
+                     shard=shard, eval_every=eval_every, numeric=numeric),
+        rounds=rounds)
+    return exp.compile().run_sweep(sweep)
 
 
 RUNNERS = {
@@ -1218,5 +728,6 @@ RUNNERS = {
     'fedasync': run_fedasync,
 }
 
-# Backwards-compatible alias (pre-unification name).
+# Backwards-compatible alias (pre-unification name).  NOTE: the *new*
+# registry keyed by spec type lives in ``repro.api.PROTOCOLS``.
 PROTOCOLS = RUNNERS

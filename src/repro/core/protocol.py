@@ -220,15 +220,20 @@ class AsyncSchedule(NamedTuple):
 
 
 def _safa_scan(global_w, local_w, cache, schedule, weights, local_train_fn,
-               use_kernel, wire='f32'):
-    """Unjitted scan body shared by the single-run and fleet engines."""
+               use_kernel, wire='f32', train_extra=()):
+    """Unjitted scan body shared by the single-run and fleet engines.
+
+    ``train_extra`` holds per-run constants appended to the train call
+    (``local_train_fn(base, round_idx, *train_extra)``) — the per-member
+    data context of a per-member-Task fleet rides here."""
     def step(carry, sched):
         g, l, c = carry
         out = safa_round(
             g, l, c, sync_mask=sched.sync, completed=sched.completed,
             picked=sched.picked, undrafted=sched.undrafted,
             deprecated=sched.deprecated, weights=weights,
-            local_train_fn=local_train_fn, train_args=(sched.round_idx,),
+            local_train_fn=local_train_fn,
+            train_args=(sched.round_idx,) + tuple(train_extra),
             use_kernel=use_kernel, wire=wire)
         return out, None
 
@@ -256,7 +261,8 @@ def safa_run_scan(global_w, local_w, cache, schedule: RoundSchedule, weights,
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2),
                    static_argnames=('local_train_fn', 'use_kernel', 'wire'))
 def safa_run_fleet(global_w, local_w, cache, schedule: RoundSchedule, weights,
-                   *, local_train_fn, use_kernel=False, wire='f32'):
+                   *, local_train_fn, use_kernel=False, wire='f32',
+                   train_ctx=None):
     """Run S independent SAFA simulations as ONE vmapped-scan dispatch.
 
     Every operand gains a leading fleet axis: global_w [S, ...] leaves,
@@ -266,6 +272,12 @@ def safa_run_fleet(global_w, local_w, cache, schedule: RoundSchedule, weights,
     precomputed schedule captures — but share the Task (model shapes and
     client data) and round count.
 
+    ``train_ctx`` (optional) is a pytree of [S, ...] leaves vmapped with
+    the carry and handed to every train call as an extra argument
+    (``local_train_fn(base, round_idx, ctx)``) — this is how a fleet of
+    per-member Tasks ships each member its own (padded) client data while
+    the train function stays one static, shared callable.
+
     Per member this computes exactly the ``safa_run_scan`` program; the
     regression tests assert per-run bit-identity against S sequential scan
     runs.  The whole [S, ...] carry is donated, so sweeping S configs costs
@@ -274,19 +286,24 @@ def safa_run_fleet(global_w, local_w, cache, schedule: RoundSchedule, weights,
     a single kernel dispatch per round for the whole fleet).
     Returns (new_global, new_local, new_cache), each fleet-stacked.
     """
-    run = lambda g, l, c, s, w: _safa_scan(g, l, c, s, w, local_train_fn,
-                                           use_kernel, wire)
-    return jax.vmap(run)(global_w, local_w, cache, schedule, weights)
+    if train_ctx is None:
+        run = lambda g, l, c, s, w: _safa_scan(g, l, c, s, w, local_train_fn,
+                                               use_kernel, wire)
+        return jax.vmap(run)(global_w, local_w, cache, schedule, weights)
+    run = lambda g, l, c, s, w, ctx: _safa_scan(
+        g, l, c, s, w, local_train_fn, use_kernel, wire, train_extra=(ctx,))
+    return jax.vmap(run)(global_w, local_w, cache, schedule, weights,
+                         train_ctx)
 
 
 def _fedavg_scan(global_w, local_w, schedule, weights, local_train_fn,
-                 wire='f32'):
+                 wire='f32', train_extra=()):
     def step(carry, sched):
         g, l = carry
         ng, nl = fedavg_round(
             g, l, selected=sched.selected, completed=sched.completed,
             weights=weights, local_train_fn=local_train_fn,
-            train_args=(sched.round_idx,), wire=wire)
+            train_args=(sched.round_idx,) + tuple(train_extra), wire=wire)
         return (ng, nl), None
 
     carry, _ = jax.lax.scan(step, (global_w, local_w), schedule)
@@ -308,19 +325,25 @@ def fedavg_run_scan(global_w, local_w, schedule: SyncSchedule, weights, *,
 @functools.partial(jax.jit, donate_argnums=(0, 1),
                    static_argnames=('local_train_fn', 'wire'))
 def fedavg_run_fleet(global_w, local_w, schedule: SyncSchedule, weights, *,
-                     local_train_fn, wire='f32'):
+                     local_train_fn, wire='f32', train_ctx=None):
     """FedAvg/FedCS counterpart of ``safa_run_fleet``: S synchronous
     simulations (schedule fields [S, k, m], weights [S, m]) in one vmapped
-    scan with the fleet-stacked (global, local) carry donated."""
-    run = lambda g, l, s, w: _fedavg_scan(g, l, s, w, local_train_fn, wire)
-    return jax.vmap(run)(global_w, local_w, schedule, weights)
+    scan with the fleet-stacked (global, local) carry donated.
+    ``train_ctx``: per-member train context, as in ``safa_run_fleet``."""
+    if train_ctx is None:
+        run = lambda g, l, s, w: _fedavg_scan(g, l, s, w, local_train_fn,
+                                              wire)
+        return jax.vmap(run)(global_w, local_w, schedule, weights)
+    run = lambda g, l, s, w, ctx: _fedavg_scan(g, l, s, w, local_train_fn,
+                                               wire, train_extra=(ctx,))
+    return jax.vmap(run)(global_w, local_w, schedule, weights, train_ctx)
 
 
-def _local_scan(local_w, schedule, local_train_fn):
+def _local_scan(local_w, schedule, local_train_fn, train_extra=()):
     def step(l, sched):
-        return local_only_round(l, completed=sched.completed,
-                                local_train_fn=local_train_fn,
-                                train_args=(sched.round_idx,)), None
+        return local_only_round(
+            l, completed=sched.completed, local_train_fn=local_train_fn,
+            train_args=(sched.round_idx,) + tuple(train_extra)), None
 
     carry, _ = jax.lax.scan(step, local_w, schedule)
     return carry
@@ -338,20 +361,27 @@ def local_run_scan(local_w, schedule: LocalSchedule, *, local_train_fn):
 
 @functools.partial(jax.jit, donate_argnums=(0,),
                    static_argnames=('local_train_fn',))
-def local_run_fleet(local_w, schedule: LocalSchedule, *, local_train_fn):
+def local_run_fleet(local_w, schedule: LocalSchedule, *, local_train_fn,
+                    train_ctx=None):
     """S fully-local simulations (local_w [S, m, ...], schedule fields
-    [S, k, m]) in one vmapped scan with the fleet stack donated."""
-    run = lambda l, s: _local_scan(l, s, local_train_fn)
-    return jax.vmap(run)(local_w, schedule)
+    [S, k, m]) in one vmapped scan with the fleet stack donated.
+    ``train_ctx``: per-member train context, as in ``safa_run_fleet``."""
+    if train_ctx is None:
+        run = lambda l, s: _local_scan(l, s, local_train_fn)
+        return jax.vmap(run)(local_w, schedule)
+    run = lambda l, s, ctx: _local_scan(l, s, local_train_fn,
+                                        train_extra=(ctx,))
+    return jax.vmap(run)(local_w, schedule, train_ctx)
 
 
-def _fedasync_scan(global_w, local_w, schedule, local_train_fn):
+def _fedasync_scan(global_w, local_w, schedule, local_train_fn,
+                   train_extra=()):
     def step(carry, sched):
         g, l = carry
         return fedasync_round(
             g, l, committed=sched.committed, order=sched.order,
             alphas=sched.alphas, local_train_fn=local_train_fn,
-            train_args=(sched.round_idx,)), None
+            train_args=(sched.round_idx,) + tuple(train_extra)), None
 
     carry, _ = jax.lax.scan(step, (global_w, local_w), schedule)
     return carry
@@ -375,12 +405,17 @@ def fedasync_run_scan(global_w, local_w, schedule: AsyncSchedule, weights=None,
 @functools.partial(jax.jit, donate_argnums=(0, 1),
                    static_argnames=('local_train_fn',))
 def fedasync_run_fleet(global_w, local_w, schedule: AsyncSchedule,
-                       weights=None, *, local_train_fn):
+                       weights=None, *, local_train_fn, train_ctx=None):
     """S FedAsync simulations (schedule fields [S, k, m]) in one vmapped
-    scan with the fleet-stacked (global, local) carry donated."""
+    scan with the fleet-stacked (global, local) carry donated.
+    ``train_ctx``: per-member train context, as in ``safa_run_fleet``."""
     del weights
-    run = lambda g, l, s: _fedasync_scan(g, l, s, local_train_fn)
-    return jax.vmap(run)(global_w, local_w, schedule)
+    if train_ctx is None:
+        run = lambda g, l, s: _fedasync_scan(g, l, s, local_train_fn)
+        return jax.vmap(run)(global_w, local_w, schedule)
+    run = lambda g, l, s, ctx: _fedasync_scan(g, l, s, local_train_fn,
+                                              train_extra=(ctx,))
+    return jax.vmap(run)(global_w, local_w, schedule, train_ctx)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,298 @@
+"""Schedule and result containers for the federation layer.
+
+Everything here is a *data* type: per-round records, run histories, and
+the precomputed mask schedules — single-run ``[rounds, m]`` and
+fleet-major ``[S, rounds, m]`` — that the execution engines replay.  The
+state machines that *produce* these schedules live in
+``repro.core.federation``; the compiled engines that consume them live in
+``repro.core.protocol``; the public entry point that wires the two
+together is ``repro.core.api``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    round_len: float
+    t_dist: float
+    eur: float
+    sr: float
+    vv: float
+    n_picked: int
+    n_committed: int
+    n_crashed: int
+    eval: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class History:
+    protocol: str
+    records: list = dataclasses.field(default_factory=list)
+    futility: float = 0.0
+    best_eval: Optional[dict] = None
+    final_global: Any = None
+
+    def mean(self, field: str) -> float:
+        return float(np.mean([getattr(r, field) for r in self.records]))
+
+    def evals(self):
+        return [(r.round, r.eval) for r in self.records if r.eval is not None]
+
+    def to_dict(self) -> dict:
+        """JSON-serialisable form (checkpoint metadata).  ``final_global``
+        is a device pytree and is deliberately excluded — checkpoints
+        persist the model state separately (``repro.checkpoint``)."""
+        return {
+            'protocol': self.protocol,
+            'futility': float(self.futility),
+            'best_eval': self.best_eval,
+            'records': [dataclasses.asdict(r) for r in self.records],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> 'History':
+        return cls(protocol=d['protocol'],
+                   records=[RoundRecord(**r) for r in d['records']],
+                   futility=d['futility'], best_eval=d['best_eval'])
+
+
+@dataclasses.dataclass
+class SweepMember:
+    """One simulation in a fleet sweep: its own environment + protocol
+    hyper-parameters.  All members of a sweep share the client count
+    ``m``; they share the Task too unless the sweep carries per-member
+    Tasks (``api.SweepSpec(tasks=...)``, padded stacking)."""
+    env: Any                    # fedsim.FLEnv
+    fraction: float = 0.5       # ignored by fedasync (fully asynchronous)
+    lag_tolerance: int = 5      # SAFA only
+    seed: int = 0               # numeric-init (and sync/local-selection) seed
+    alpha: float = 0.6          # FedAsync only: base mixing weight
+    staleness_exp: float = 0.5  # FedAsync only: staleness polynomial
+
+
+@dataclasses.dataclass
+class SafaSchedule:
+    """Precomputed SAFA event process: [rounds, m] bool mask schedules plus
+    the timing records they imply.  Independent of model weights."""
+    sync: np.ndarray
+    committed: np.ndarray
+    picked: np.ndarray
+    undrafted: np.ndarray
+    deprecated: np.ndarray
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.sync.shape[0]
+
+    def to_device(self) -> protocol.RoundSchedule:
+        """One host->device hop for the whole run."""
+        return protocol.RoundSchedule(
+            sync=jnp.asarray(self.sync), completed=jnp.asarray(self.committed),
+            picked=jnp.asarray(self.picked),
+            undrafted=jnp.asarray(self.undrafted),
+            deprecated=jnp.asarray(self.deprecated),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+@dataclasses.dataclass
+class SyncSchedule:
+    """Precomputed FedAvg/FedCS event process ([rounds, m] masks + records).
+    ``completed`` is the per-round survivor mask (``~crashed``); the numeric
+    round intersects it with ``selected`` itself."""
+    selected: np.ndarray
+    completed: np.ndarray
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.selected.shape[0]
+
+    def to_device(self) -> protocol.SyncSchedule:
+        return protocol.SyncSchedule(
+            selected=jnp.asarray(self.selected),
+            completed=jnp.asarray(self.completed),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+@dataclasses.dataclass
+class LocalSchedule:
+    """Precomputed fully-local event process ([rounds, m] survivor mask +
+    records).  ``completed`` is selected & survived — the only mask the
+    numeric round needs (there is no aggregation until eval points)."""
+    completed: np.ndarray
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.completed.shape[0]
+
+    def to_device(self) -> protocol.LocalSchedule:
+        return protocol.LocalSchedule(
+            completed=jnp.asarray(self.completed),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+@dataclasses.dataclass
+class FedasyncSchedule:
+    """Precomputed FedAsync event process: [rounds, m] commit masks plus
+    the arrival-ordered merge permutations and staleness-scaled mixing
+    weights the sequential server applies each round.  Model weights never
+    enter — merge order is pure arrival timing and the alphas depend only
+    on staleness — so the whole sequential-merge schedule is known up
+    front."""
+    committed: np.ndarray       # [rounds, m] bool
+    order: np.ndarray           # [rounds, m] int — arrival merge order
+    alphas: np.ndarray          # [rounds, m] float — 0 for non-commits
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.committed.shape[0]
+
+    def to_device(self) -> protocol.AsyncSchedule:
+        return protocol.AsyncSchedule(
+            committed=jnp.asarray(self.committed),
+            order=jnp.asarray(self.order),
+            alphas=jnp.asarray(self.alphas, jnp.float32),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Fleet-major stacking: [S, rounds, m] schedules for batched sweeps
+# ---------------------------------------------------------------------------
+
+class _FleetStack:
+    """Shared fleet-major stacking machinery.  Subclasses set ``MASKS``
+    (the [S, rounds, m] field names, first one authoritative for shapes)
+    and ``_MEMBER_CLS`` (the single-run schedule type)."""
+    MASKS: tuple = ()
+    _MEMBER_CLS = None
+
+    @property
+    def size(self) -> int:
+        return getattr(self, self.MASKS[0]).shape[0]
+
+    @property
+    def rounds(self) -> int:
+        return getattr(self, self.MASKS[0]).shape[1]
+
+    @classmethod
+    def stack(cls, members: list):
+        """Stack S single-run schedules (all with the same rounds and m)."""
+        if len({getattr(s, cls.MASKS[0]).shape for s in members}) != 1:
+            raise ValueError('fleet members must share (rounds, m)')
+        return cls(**{k: np.stack([getattr(s, k) for s in members])
+                      for k in cls.MASKS},
+                   records=[s.records for s in members],
+                   futility=np.array([s.futility for s in members]))
+
+    def member(self, s: int):
+        """Member s's schedule, identical to its own precompute."""
+        return self._MEMBER_CLS(
+            **{k: getattr(self, k)[s] for k in self.MASKS},
+            records=self.records[s], futility=float(self.futility[s]))
+
+    def _round_idx(self):
+        """[S, rounds] per-member round indices for to_device()."""
+        return jnp.asarray(np.broadcast_to(
+            np.arange(1, self.rounds + 1, dtype=np.int32),
+            (self.size, self.rounds)))
+
+
+@dataclasses.dataclass
+class FleetSchedule(_FleetStack):
+    """S independent SAFA event processes stacked fleet-major.
+
+    Mask tensors are [S, rounds, m]; ``records[s]`` / ``futility[s]`` hold
+    member s's timing records and futility ratio, exactly as
+    ``precompute_safa_schedule`` produced them."""
+    sync: np.ndarray
+    committed: np.ndarray
+    picked: np.ndarray
+    undrafted: np.ndarray
+    deprecated: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    MASKS = ('sync', 'committed', 'picked', 'undrafted', 'deprecated')
+    _MEMBER_CLS = SafaSchedule
+
+    def to_device(self) -> protocol.RoundSchedule:
+        """One host->device hop for the whole fleet ([S, rounds, m] masks,
+        [S, rounds] round indices)."""
+        return protocol.RoundSchedule(
+            sync=jnp.asarray(self.sync), completed=jnp.asarray(self.committed),
+            picked=jnp.asarray(self.picked),
+            undrafted=jnp.asarray(self.undrafted),
+            deprecated=jnp.asarray(self.deprecated),
+            round_idx=self._round_idx())
+
+
+@dataclasses.dataclass
+class SyncFleetSchedule(_FleetStack):
+    """FedAvg/FedCS counterpart of ``FleetSchedule`` ([S, rounds, m])."""
+    selected: np.ndarray
+    completed: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    MASKS = ('selected', 'completed')
+    _MEMBER_CLS = SyncSchedule
+
+    def to_device(self) -> protocol.SyncSchedule:
+        return protocol.SyncSchedule(
+            selected=jnp.asarray(self.selected),
+            completed=jnp.asarray(self.completed),
+            round_idx=self._round_idx())
+
+
+@dataclasses.dataclass
+class LocalFleetSchedule(_FleetStack):
+    """Fully-local counterpart of ``FleetSchedule`` ([S, rounds, m])."""
+    completed: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    MASKS = ('completed',)
+    _MEMBER_CLS = LocalSchedule
+
+    def to_device(self) -> protocol.LocalSchedule:
+        return protocol.LocalSchedule(
+            completed=jnp.asarray(self.completed),
+            round_idx=self._round_idx())
+
+
+@dataclasses.dataclass
+class AsyncFleetSchedule(_FleetStack):
+    """FedAsync counterpart of ``FleetSchedule``: [S, rounds, m] commit
+    masks plus the merge-order/alpha tensors driving each member's
+    arrival-ordered sequential mixes."""
+    committed: np.ndarray
+    order: np.ndarray
+    alphas: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    MASKS = ('committed', 'order', 'alphas')
+    _MEMBER_CLS = FedasyncSchedule
+
+    def to_device(self) -> protocol.AsyncSchedule:
+        return protocol.AsyncSchedule(
+            committed=jnp.asarray(self.committed),
+            order=jnp.asarray(self.order),
+            alphas=jnp.asarray(self.alphas, jnp.float32),
+            round_idx=self._round_idx())

@@ -13,6 +13,13 @@ from typing import Optional
 import numpy as np
 
 
+def quota_of(fraction: float, m: int) -> int:
+    """The C*m selection quota shared by every policy: at least one
+    client, round-half-to-even (Python ``round`` == ``np.rint``, which the
+    batched selectors rely on for row identity)."""
+    return max(1, int(round(fraction * m)))
+
+
 @dataclasses.dataclass
 class SelectionResult:
     picked: np.ndarray       # [m] bool — P(t)
@@ -26,7 +33,7 @@ def cfcfm(arrival: np.ndarray, completed: np.ndarray, picked_prev: np.ndarray,
     """arrival: [m] float arrival times (inf for crashed); completed: [m]
     bool (finished training); picked_prev: [m] bool = P(t-1)."""
     m = arrival.shape[0]
-    quota = max(1, int(round(fraction * m)))
+    quota = quota_of(fraction, m)
     committed = completed & (arrival <= deadline)
     picked = np.zeros(m, bool)
 
@@ -116,7 +123,7 @@ def cfcfm_batch(arrival: np.ndarray, completed: np.ndarray,
 
 def fedavg_select(rng: np.random.Generator, m: int, fraction: float) -> np.ndarray:
     """Random pre-training selection (FedAvg)."""
-    quota = max(1, int(round(fraction * m)))
+    quota = quota_of(fraction, m)
     sel = np.zeros(m, bool)
     sel[rng.choice(m, size=quota, replace=False)] = True
     return sel
@@ -152,7 +159,7 @@ def fedcs_select(est_round_time: np.ndarray, fraction: float,
     time and greedily admits the fastest clients that fit the deadline, up
     to the C*m quota."""
     m = est_round_time.shape[0]
-    quota = max(1, int(round(fraction * m)))
+    quota = quota_of(fraction, m)
     order = np.argsort(est_round_time, kind='stable')
     sel = np.zeros(m, bool)
     n = 0

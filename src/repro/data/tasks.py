@@ -11,9 +11,11 @@ clients dim.
 from __future__ import annotations
 
 import functools
+import hashlib
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import optim
 from repro.core.federation import Task
@@ -28,6 +30,7 @@ class SupervisedTask(Task):
         self.loss_fn = loss_fn          # (params, x, y) -> scalar
         self.acc_fn = acc_fn            # (params, x, y) -> scalar
         self.epochs = epochs
+        self.lr = lr
         self.opt = optim.sgd(lr)
         self._x = jnp.asarray(data.x)   # [m, nb, B, ...]
         self._y = jnp.asarray(data.y)
@@ -63,6 +66,113 @@ class SupervisedTask(Task):
     def evaluate(self, global_params) -> dict:
         loss, acc = self._eval_jit(global_params, self._test_x, self._test_y)
         return {'loss': float(loss), 'acc': float(acc)}
+
+    def fingerprint(self) -> str:
+        """Identity of the training problem (client data + hypers) for
+        checkpoint-resume verification — resuming a carry under different
+        data would silently mix two runs."""
+        if '_fingerprint' not in self.__dict__:
+            h = hashlib.sha256()
+            for a in (self.data.x, self.data.y, self.data.test_x,
+                      self.data.test_y):
+                h.update(np.ascontiguousarray(a).tobytes())
+            h.update(repr((self.lr, self.epochs)).encode())
+            self._fingerprint = \
+                f'{type(self).__name__}:{h.hexdigest()[:16]}'
+        return self._fingerprint
+
+
+# ---------------------------------------------------------------------------
+# Fleet-stacking: per-member Tasks for batched sweeps
+# ---------------------------------------------------------------------------
+
+class StackedSupervisedTask:
+    """S ``SupervisedTask``s stacked fleet-major so a sweep whose members
+    hold *different client data* (e.g. multi-``seed`` env grids with
+    distinct partitions) still runs as one vmapped-scan dispatch.
+
+    Members may disagree on batch count (partition sizes differ), so every
+    member's [m, nb_s, B, ...] batch stack is zero-padded to the fleet
+    maximum and a per-member [nb_max] validity mask rides along; the
+    masked train step passes parameters through unchanged on padding
+    batches, which keeps each member bit-identical to its own unpadded
+    sequential run.  Members must share the model (leaf shapes), client
+    count m, batch size and epoch count — the fleet compiles ONE program.
+
+    This is not a ``Task`` itself: per-member init/eval stay with the
+    member tasks; the fleet engines consume ``fleet_ctx()`` (a pytree of
+    [S, ...] leaves vmapped alongside the carry) and ``fleet_train``.
+    """
+
+    def __init__(self, tasks):
+        if not tasks:
+            raise ValueError('empty task stack')
+        t0 = tasks[0]
+        if any(t.epochs != t0.epochs for t in tasks):
+            raise ValueError('stacked tasks must share the epoch count')
+        # one compiled program trains every member with t0's step, so the
+        # steps must BE the same: silently training member s with member
+        # 0's lr/loss would break the fleet==sequential bit-identity
+        hypers = {(t.lr, t.loss_fn, t.acc_fn) for t in tasks}
+        if len(hypers) != 1:
+            raise ValueError(
+                'stacked tasks must share lr/loss_fn/acc_fn (the fleet '
+                'compiles one train step for all members); got '
+                f'{len(hypers)} distinct combinations')
+        shapes = {t._x.shape[:1] + t._x.shape[3:] for t in tasks}
+        if len(shapes) != 1 or len({t._x.shape[2] for t in tasks}) != 1:
+            raise ValueError(
+                'stacked tasks must share (m, batch_size, features); got '
+                f'x shapes {sorted(t._x.shape for t in tasks)}')
+        self.tasks = tuple(tasks)
+        self._t0 = t0
+        nb = np.array([t._x.shape[1] for t in tasks])
+        nb_max = int(nb.max())
+
+        def pad(a, n):
+            widths = [(0, 0), (0, n - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
+            return np.pad(np.asarray(a), widths)
+
+        self._x = jnp.asarray(np.stack([pad(t._x, nb_max) for t in tasks]))
+        self._y = jnp.asarray(np.stack([pad(t._y, nb_max) for t in tasks]))
+        self._valid = jnp.asarray(np.arange(nb_max)[None, :] < nb[:, None])
+
+    def fleet_ctx(self):
+        """[S, ...] train context vmapped with the fleet carry."""
+        return {'x': self._x, 'y': self._y, 'valid': self._valid}
+
+    def fleet_train(self, stacked_params, round_idx, ctx):
+        """One member's train call (invoked inside the fleet vmap, so
+        ``stacked_params`` is [m, ...] and ``ctx`` leaves are that
+        member's slices)."""
+        del round_idx
+        train = lambda p, x, y: self._train_one_masked(p, x, y, ctx['valid'])
+        return jax.vmap(train)(stacked_params, ctx['x'], ctx['y'])
+
+    def _train_one_masked(self, params, x, y, valid):
+        """``SupervisedTask._train_one`` with a per-batch validity mask:
+        padding steps compute and discard, returning the carry unchanged —
+        an exact no-op, so the real steps' bits match the unpadded run."""
+        t = self._t0
+
+        def epoch(params, _):
+            def step(p, batch):
+                bx, by, v = batch
+                g = jax.grad(t.loss_fn)(p, bx, by)
+                p2, _ = t.opt.update(g, (), p)
+                return jax.tree.map(lambda a, b: jnp.where(v, a, b), p2, p), \
+                    None
+            params, _ = jax.lax.scan(step, params, (x, y, valid))
+            return params, None
+
+        params, _ = jax.lax.scan(epoch, params, None, length=t.epochs)
+        return params
+
+
+def stack_tasks(tasks) -> StackedSupervisedTask:
+    """Stack per-member ``SupervisedTask``s for a per-member-Task sweep
+    (``repro.api.SweepSpec(tasks=...)``)."""
+    return StackedSupervisedTask(list(tasks))
 
 
 # ---------------------------------------------------------------------------
