@@ -37,7 +37,16 @@ SECTIONS = {
     # sharded-fleet numbers; here it runs unsharded on one device
     'fleet_sweep': lambda full: __import__(
         'benchmarks.fleet_sweep', fromlist=['run']).run(),
+    # lazy too: the full sweep spawns one subprocess per cell for honest
+    # per-cell peak-RSS (see benchmarks/scale.py)
+    'scale': lambda full: __import__(
+        'benchmarks.scale', fromlist=['run']).run(
+            smoke=not full, json_path=_JSON_PATH['path']),
 }
+
+#: ``--json FILE`` routes the scale section's cell measurements
+#: (rounds/sec + peak RSS per protocol x schedule cell) into FILE.
+_JSON_PATH = {'path': None}
 
 # tiny-parameter variants for --smoke: every engine/protocol-comparison
 # script executes end to end in seconds, so CI catches bitrot in the
@@ -53,6 +62,9 @@ SMOKE_SECTIONS = {
     'fleet_sweep': lambda: __import__(
         'benchmarks.fleet_sweep', fromlist=['run']).run(rounds=6, s=4,
                                                         reps=1),
+    'scale': lambda: __import__(
+        'benchmarks.scale', fromlist=['run']).run(
+            smoke=True, json_path=_JSON_PATH['path']),
 }
 
 
@@ -63,9 +75,15 @@ def main(argv=None) -> None:
     ap.add_argument('--smoke', action='store_true',
                     help='tiny-parameter CI pass over the engine sections')
     ap.add_argument('--only', choices=list(SECTIONS), default=None)
+    ap.add_argument('--json', default=None, metavar='FILE',
+                    help='write the scale section cells as JSON '
+                         '(e.g. BENCH_scale.json)')
     args = ap.parse_args(argv)
     if args.full and args.smoke:
         ap.error('--full and --smoke are mutually exclusive')
+    _JSON_PATH['path'] = args.json
+    if args.json and args.only not in (None, 'scale'):
+        ap.error('--json applies to the scale section')
     sections = SMOKE_SECTIONS if args.smoke else SECTIONS
     print('name,us_per_call,derived')
     if args.only:

@@ -36,6 +36,9 @@ def import_lines(text: str):
 
 def main() -> int:
     root = Path(__file__).resolve().parent.parent
+    # docs reference benchmark modules (`python -m benchmarks.<name>`)
+    # that are run from the repo root, so resolve imports as if from there
+    sys.path.insert(0, str(root))
     failed = 0
     sources = [(doc, import_lines) for doc in DOCS] + \
         [(doc, py_import_lines) for doc in PY_DOCS]

@@ -84,8 +84,15 @@ class SafaSpec(ProtocolSpec):
 
 @dataclasses.dataclass(frozen=True)
 class FedAvgSpec(ProtocolSpec):
-    """FedAvg baseline: random pre-training selection, synchronous."""
+    """FedAvg baseline: random pre-training selection, synchronous.
+
+    ``sampler`` picks the without-replacement draw: ``'choice'`` (default)
+    is the legacy per-round ``Generator.choice`` stream; ``'topk'`` is the
+    vectorised bulk-uniform draw (one ``rng.random((rounds, m))``) that
+    scales to large populations — distributionally identical, different
+    stream by design."""
     fraction: float = 0.5
+    sampler: str = 'choice'
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,10 +121,24 @@ class ExecSpec:
 
     ``engine=None`` resolves to the compiled default: ``'scan'`` for
     ``run()``, ``'fleet'`` for ``run_sweep()``; the reference engines
-    (``'loop'`` / ``'sequential'``) stay available and bit-identical."""
+    (``'loop'`` / ``'sequential'``) stay available and bit-identical.
+
+    ``schedule`` picks the schedule representation and round math:
+
+    * ``'dense'`` — [rounds, m] masks, every client's row flows through
+      every round (the paper-scale reference).
+    * ``'sparse'`` — [rounds, quota] (idx, roles) tensors; only the
+      active rows are trained, then the identical dense server trace
+      runs.  Bit-identical to ``'dense'``, training FLOPs O(quota).
+    * ``'sparse_delta'`` — additionally keeps the aggregation O(quota·N)
+      per round by carrying the running weighted sum as a delta target.
+      Allclose- (not bit-) equivalent; with ``use_kernel='packed'``
+      (SAFA) the whole round fuses into one rows-indexed dispatch on
+      resident pack buffers."""
     engine: Optional[str] = None
     wire: str = 'f32'
     use_kernel: Any = False
+    schedule: str = 'dense'
     shard: bool = True
     eval_every: int = 10
     numeric: bool = True
@@ -169,6 +190,18 @@ class ProtocolDef:
     uses_cache: bool = False
     supports_wire: bool = False
     supports_kernel: bool = False
+    #: sparse-schedule support (``ExecSpec.schedule != 'dense'``):
+    #: ``sparse_precompute(env, spec, *, rounds, seed)`` emits the native
+    #: [rounds, quota] schedule (None -> protocol rejects sparse);
+    #: ``prepare_state(st, weights, ex, fleet)`` converts the initial
+    #: model state for the schedule mode (running aggregate, pack
+    #: buffers, dropping stateless carries) before any round runs.
+    sparse_precompute: Optional[Callable] = None
+    prepare_state: Optional[Callable] = None
+    #: the protocol's sparse_delta carry is the global model alone (no
+    #: [m, ...] local/cache stacks): the runners then never materialise
+    #: the O(m) state — resident memory stays quota-bounded at any m.
+    delta_stateless: bool = False
 
 
 #: spec type -> ProtocolDef.  The single source of protocol dispatch.
@@ -232,6 +265,29 @@ def check_compat(protocol_spec: ProtocolSpec,
         raise ValueError(
             "quantize_uploads=True is the per-leaf reference for the packed "
             "wire='int8' path; pass one or the other, not both")
+    if getattr(protocol_spec, 'sampler', 'choice') not in ('choice', 'topk'):
+        raise ValueError(
+            f'unknown sampler {protocol_spec.sampler!r} '
+            f"(want 'choice' or 'topk')")
+    if ex.schedule not in ('dense', 'sparse', 'sparse_delta'):
+        raise ValueError(
+            f'unknown schedule {ex.schedule!r} (want "dense", "sparse", or '
+            f'"sparse_delta")')
+    if ex.schedule != 'dense':
+        if pdef.sparse_precompute is None:
+            raise ValueError(
+                f'protocol {pdef.name!r} has no sparse schedule form; '
+                f'sparse schedules apply to safa/fedavg/fedcs only')
+        if getattr(protocol_spec, 'quantize_uploads', False):
+            raise ValueError(
+                'quantize_uploads is the dense per-leaf reference knob; '
+                "sparse schedules take the packed wire instead "
+                "(wire='int8')")
+        if ex.schedule == 'sparse_delta' and ex.use_kernel is True:
+            raise ValueError(
+                "the leaf-wise kernel (use_kernel=True) has no rows form; "
+                "schedule='sparse_delta' takes use_kernel=False or "
+                "'packed'")
     return pdef
 
 
@@ -240,21 +296,33 @@ def check_compat(protocol_spec: ProtocolSpec,
 # ---------------------------------------------------------------------------
 
 class _RunState:
-    """The model-state carry between segments: global/local(/cache)."""
-    __slots__ = ('global_w', 'local_w', 'cache')
+    """The model-state carry between segments: global/local(/cache).
+
+    Sparse-delta modes add ``agg`` (the running Eq. 7 aggregate) and,
+    under ``use_kernel='packed'``, ``packed`` — the (global, local,
+    cache, agg) pack-buffer carry with layout ``spec`` (static, rebuilt
+    on resume) that replaces the local/cache/agg trees entirely."""
+    __slots__ = ('global_w', 'local_w', 'cache', 'agg', 'packed', 'spec')
 
     def __init__(self, global_w=None, local_w=None, cache=None):
         self.global_w, self.local_w, self.cache = global_w, local_w, cache
+        self.agg, self.packed, self.spec = None, None, None
 
     def tree(self):
         t = {'global': self.global_w, 'local': self.local_w}
         if self.cache is not None:
             t['cache'] = self.cache
+        if self.agg is not None:
+            t['agg'] = self.agg
+        if self.packed is not None:
+            t['packed'] = self.packed
         return t
 
     def set_tree(self, t):
         self.global_w, self.local_w = t['global'], t['local']
         self.cache = t.get('cache')
+        self.agg = t.get('agg')
+        self.packed = t.get('packed')
 
 
 def _to_j(mask: np.ndarray):
@@ -286,9 +354,12 @@ def _tree_member(tree, s: int):
     return jax.tree.map(lambda a: a[s], tree)
 
 
-def _init_state(task, m: int, seed: int, uses_cache: bool) -> _RunState:
+def _init_state(task, m: int, seed: int, uses_cache: bool,
+                stateless: bool = False) -> _RunState:
     key = jax.random.PRNGKey(seed)
     g = task.init_global(key)
+    if stateless:           # sparse_delta with a global-only carry: never
+        return _RunState(g, None, None)   # materialise the [m, ...] stacks
     return _RunState(g, protocol.broadcast_global(g, m),
                      protocol.broadcast_global(g, m) if uses_cache else None)
 
@@ -352,60 +423,196 @@ def _safa_precompute(env, sp, *, rounds, seed):
         rounds=rounds)
 
 
+def _safa_sparse_precompute(env, sp, *, rounds, seed):
+    del seed
+    return federation.precompute_safa_schedule(
+        env, fraction=sp.fraction, lag_tolerance=sp.lag_tolerance,
+        rounds=rounds, form='sparse')
+
+
+def _pack_layout(global_w, wire):
+    from repro.kernels import ops as kops
+    return kops.wire_spec(global_w) if wire == 'int8' \
+        else kops.pack_spec(global_w)
+
+
+def _safa_prepare_state(st, weights, ex, fleet: bool):
+    """Sparse-delta carries: the running aggregate tree, or — under
+    ``use_kernel='packed'`` — the whole state as resident pack buffers
+    ([m+1, N] with a trailing scratch row for sentinel slots)."""
+    if ex.schedule != 'sparse_delta':
+        return
+    from repro.kernels import ops as kops
+    if ex.use_kernel != 'packed':
+        init = jax.vmap(protocol.init_aggregate) if fleet \
+            else protocol.init_aggregate
+        st.agg = init(st.cache, weights)
+        return
+    spec = _pack_layout(
+        _tree_member(st.global_w, 0) if fleet else st.global_w, ex.wire)
+    agg = (jax.vmap(protocol.init_aggregate) if fleet
+           else protocol.init_aggregate)(st.cache, weights)
+    pack_g = kops.pack_stacked if fleet else kops.pack_global
+    pack_m = kops.pack_fleet if fleet else kops.pack_stacked
+
+    def scratch(b):
+        pad = [(0, 0)] * (b.ndim - 2) + [(0, 1), (0, 0)]
+        return jnp.pad(b, pad)
+
+    st.packed = (pack_g(st.global_w, spec),
+                 scratch(pack_m(st.local_w, spec)),
+                 scratch(pack_m(st.cache, spec)),
+                 pack_g(agg, spec))
+    st.spec = spec
+    st.local_w = st.cache = None
+
+
 def _safa_scan_segment(st, seg, weights, train_fn, ex):
-    st.global_w, st.local_w, st.cache = protocol.safa_run_scan(
-        st.global_w, st.local_w, st.cache, seg, weights,
-        local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire)
+    if ex.schedule == 'dense':
+        st.global_w, st.local_w, st.cache = protocol.safa_run_scan(
+            st.global_w, st.local_w, st.cache, seg, weights,
+            local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire)
+    elif ex.schedule == 'sparse':
+        st.global_w, st.local_w, st.cache = protocol.safa_run_scan_sparse(
+            st.global_w, st.local_w, st.cache, seg, weights,
+            local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire)
+    elif st.packed is not None:
+        from repro.kernels import ops as kops
+        st.packed = protocol.safa_run_scan_sparse_delta_packed(
+            *st.packed, seg, weights, local_train_fn=train_fn,
+            spec=st.spec, wire=ex.wire)
+        st.global_w = kops.unpack_global(st.packed[0], st.spec)
+    else:
+        st.global_w, st.local_w, st.cache, st.agg = \
+            protocol.safa_run_scan_sparse_delta(
+                st.global_w, st.local_w, st.cache, st.agg, seg, weights,
+                local_train_fn=train_fn, wire=ex.wire)
 
 
 def _safa_loop_round(st, sched, i, weights, train_fn, ex):
-    st.global_w, st.local_w, st.cache = protocol.safa_round(
-        st.global_w, st.local_w, st.cache,
-        sync_mask=_to_j(sched.sync[i]), completed=_to_j(sched.committed[i]),
-        picked=_to_j(sched.picked[i]), undrafted=_to_j(sched.undrafted[i]),
-        deprecated=_to_j(sched.deprecated[i]), weights=weights,
-        local_train_fn=train_fn, train_args=(i + 1,),
-        use_kernel=ex.use_kernel, wire=ex.wire)
+    if ex.schedule == 'dense':
+        st.global_w, st.local_w, st.cache = protocol.safa_round(
+            st.global_w, st.local_w, st.cache,
+            sync_mask=_to_j(sched.sync[i]),
+            completed=_to_j(sched.committed[i]),
+            picked=_to_j(sched.picked[i]),
+            undrafted=_to_j(sched.undrafted[i]),
+            deprecated=_to_j(sched.deprecated[i]), weights=weights,
+            local_train_fn=train_fn, train_args=(i + 1,),
+            use_kernel=ex.use_kernel, wire=ex.wire)
+        return
+    idx, roles = _to_j(sched.idx[i]), _to_j(sched.roles[i])
+    if ex.schedule == 'sparse':
+        st.global_w, st.local_w, st.cache = protocol.safa_round_sparse(
+            st.global_w, st.local_w, st.cache, idx=idx, roles=roles,
+            weights=weights, local_train_fn=train_fn, train_args=(i + 1,),
+            use_kernel=ex.use_kernel, wire=ex.wire)
+    elif st.packed is not None:
+        from repro.kernels import ops as kops
+        st.packed = protocol.safa_round_sparse_delta_packed(
+            *st.packed, idx=idx, roles=roles, weights=weights,
+            local_train_fn=train_fn, train_args=(i + 1,), spec=st.spec,
+            wire=ex.wire)
+        st.global_w = kops.unpack_global(st.packed[0], st.spec)
+    else:
+        st.global_w, st.local_w, st.cache, st.agg = \
+            protocol.safa_round_sparse_delta(
+                st.global_w, st.local_w, st.cache, st.agg, idx=idx,
+                roles=roles, weights=weights, local_train_fn=train_fn,
+                train_args=(i + 1,), wire=ex.wire)
 
 
 def _safa_fleet_segment(st, seg, weights, train_fn, ex, ctx):
-    st.global_w, st.local_w, st.cache = protocol.safa_run_fleet(
-        st.global_w, st.local_w, st.cache, seg, weights,
-        local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire,
-        train_ctx=ctx)
+    if ex.schedule == 'dense':
+        st.global_w, st.local_w, st.cache = protocol.safa_run_fleet(
+            st.global_w, st.local_w, st.cache, seg, weights,
+            local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire,
+            train_ctx=ctx)
+    elif ex.schedule == 'sparse':
+        st.global_w, st.local_w, st.cache = protocol.safa_run_fleet_sparse(
+            st.global_w, st.local_w, st.cache, seg, weights,
+            local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire)
+    elif st.packed is not None:
+        from repro.kernels import ops as kops
+        st.packed = protocol.safa_run_fleet_sparse_delta_packed(
+            *st.packed, seg, weights, local_train_fn=train_fn,
+            spec=st.spec, wire=ex.wire)
+        st.global_w = kops.unpack_stacked(st.packed[0], st.spec)
+    else:
+        st.global_w, st.local_w, st.cache, st.agg = \
+            protocol.safa_run_fleet_sparse_delta(
+                st.global_w, st.local_w, st.cache, st.agg, seg, weights,
+                local_train_fn=train_fn, wire=ex.wire)
 
 
-def _sync_precompute(fedcs):
+def _sync_precompute(fedcs, form='dense'):
     def precompute(env, sp, *, rounds, seed):
         return federation.precompute_sync_schedule(
-            env, fraction=sp.fraction, rounds=rounds, seed=seed, fedcs=fedcs)
+            env, fraction=sp.fraction, rounds=rounds, seed=seed, fedcs=fedcs,
+            form=form, sampler=getattr(sp, 'sampler', 'choice'))
     return precompute
 
 
 def _sync_fleet_precompute(fedcs):
-    def precompute(members, *, rounds):
+    def precompute(members, sp, *, rounds):
         return federation.precompute_sync_fleet_schedule(
-            members, rounds=rounds, fedcs=fedcs)
+            members, rounds=rounds, fedcs=fedcs,
+            sampler=getattr(sp, 'sampler', 'choice'))
     return precompute
 
 
+def _fedavg_prepare_state(st, weights, ex, fleet: bool):
+    """The stateless sparse-delta FedAvg/FedCS carry is the global model
+    alone — drop the [m, ...] local stack before it is ever committed."""
+    del weights, fleet
+    if ex.schedule == 'sparse_delta':
+        st.local_w = None
+
+
 def _fedavg_scan_segment(st, seg, weights, train_fn, ex):
-    st.global_w, st.local_w = protocol.fedavg_run_scan(
-        st.global_w, st.local_w, seg, weights, local_train_fn=train_fn,
-        wire=ex.wire)
+    if ex.schedule == 'dense':
+        st.global_w, st.local_w = protocol.fedavg_run_scan(
+            st.global_w, st.local_w, seg, weights, local_train_fn=train_fn,
+            wire=ex.wire)
+    elif ex.schedule == 'sparse':
+        st.global_w, st.local_w = protocol.fedavg_run_scan_sparse(
+            st.global_w, st.local_w, seg, weights, local_train_fn=train_fn,
+            wire=ex.wire)
+    else:
+        st.global_w = protocol.fedavg_run_scan_sparse_delta(
+            st.global_w, seg, weights, local_train_fn=train_fn, wire=ex.wire)
 
 
 def _fedavg_loop_round(st, sched, i, weights, train_fn, ex):
-    st.global_w, st.local_w = protocol.fedavg_round(
-        st.global_w, st.local_w, selected=_to_j(sched.selected[i]),
-        completed=_to_j(sched.completed[i]), weights=weights,
-        local_train_fn=train_fn, train_args=(i + 1,), wire=ex.wire)
+    if ex.schedule == 'dense':
+        st.global_w, st.local_w = protocol.fedavg_round(
+            st.global_w, st.local_w, selected=_to_j(sched.selected[i]),
+            completed=_to_j(sched.completed[i]), weights=weights,
+            local_train_fn=train_fn, train_args=(i + 1,), wire=ex.wire)
+        return
+    idx, roles = _to_j(sched.idx[i]), _to_j(sched.roles[i])
+    if ex.schedule == 'sparse':
+        st.global_w, st.local_w = protocol.fedavg_round_sparse(
+            st.global_w, st.local_w, idx=idx, roles=roles, weights=weights,
+            local_train_fn=train_fn, train_args=(i + 1,), wire=ex.wire)
+    else:
+        st.global_w = protocol.fedavg_round_sparse_delta(
+            st.global_w, idx=idx, roles=roles, weights=weights,
+            local_train_fn=train_fn, train_args=(i + 1,), wire=ex.wire)
 
 
 def _fedavg_fleet_segment(st, seg, weights, train_fn, ex, ctx):
-    st.global_w, st.local_w = protocol.fedavg_run_fleet(
-        st.global_w, st.local_w, seg, weights, local_train_fn=train_fn,
-        wire=ex.wire, train_ctx=ctx)
+    if ex.schedule == 'dense':
+        st.global_w, st.local_w = protocol.fedavg_run_fleet(
+            st.global_w, st.local_w, seg, weights, local_train_fn=train_fn,
+            wire=ex.wire, train_ctx=ctx)
+    elif ex.schedule == 'sparse':
+        st.global_w, st.local_w = protocol.fedavg_run_fleet_sparse(
+            st.global_w, st.local_w, seg, weights, local_train_fn=train_fn,
+            wire=ex.wire)
+    else:
+        st.global_w = protocol.fedavg_run_fleet_sparse_delta(
+            st.global_w, seg, weights, local_train_fn=train_fn, wire=ex.wire)
 
 
 def _local_precompute(env, sp, *, rounds, seed):
@@ -413,7 +620,8 @@ def _local_precompute(env, sp, *, rounds, seed):
         env, fraction=sp.fraction, rounds=rounds, seed=seed)
 
 
-def _local_fleet_precompute(members, *, rounds):
+def _local_fleet_precompute(members, sp, *, rounds):
+    del sp
     return schedules.LocalFleetSchedule.stack([
         federation.precompute_local_schedule(
             mem.env, fraction=mem.fraction, rounds=rounds, seed=mem.seed)
@@ -455,7 +663,8 @@ def _fedasync_precompute(env, sp, *, rounds, seed):
         env, rounds=rounds, alpha=sp.alpha, staleness_exp=sp.staleness_exp)
 
 
-def _fedasync_fleet_precompute(members, *, rounds):
+def _fedasync_fleet_precompute(members, sp, *, rounds):
+    del sp
     return schedules.AsyncFleetSchedule.stack([
         federation.precompute_fedasync_schedule(
             mem.env, rounds=rounds, alpha=mem.alpha,
@@ -488,25 +697,31 @@ def _fedasync_fleet_segment(st, seg, weights, train_fn, ex, ctx):
 register(ProtocolDef(
     name='safa', spec_cls=SafaSpec,
     precompute=_safa_precompute,
-    fleet_precompute=lambda members, *, rounds:
+    fleet_precompute=lambda members, sp, *, rounds:
         federation.precompute_fleet_schedule(members, rounds=rounds),
     scan_segment=_safa_scan_segment, loop_round=_safa_loop_round,
     fleet_segment=_safa_fleet_segment,
-    uses_cache=True, supports_wire=True, supports_kernel=True))
+    uses_cache=True, supports_wire=True, supports_kernel=True,
+    sparse_precompute=_safa_sparse_precompute,
+    prepare_state=_safa_prepare_state))
 
 register(ProtocolDef(
     name='fedavg', spec_cls=FedAvgSpec,
     precompute=_sync_precompute(fedcs=False),
     fleet_precompute=_sync_fleet_precompute(fedcs=False),
     scan_segment=_fedavg_scan_segment, loop_round=_fedavg_loop_round,
-    fleet_segment=_fedavg_fleet_segment, supports_wire=True))
+    fleet_segment=_fedavg_fleet_segment, supports_wire=True,
+    sparse_precompute=_sync_precompute(fedcs=False, form='sparse'),
+    prepare_state=_fedavg_prepare_state, delta_stateless=True))
 
 register(ProtocolDef(
     name='fedcs', spec_cls=FedCSSpec,
     precompute=_sync_precompute(fedcs=True),
     fleet_precompute=_sync_fleet_precompute(fedcs=True),
     scan_segment=_fedavg_scan_segment, loop_round=_fedavg_loop_round,
-    fleet_segment=_fedavg_fleet_segment, supports_wire=True))
+    fleet_segment=_fedavg_fleet_segment, supports_wire=True,
+    sparse_precompute=_sync_precompute(fedcs=True, form='sparse'),
+    prepare_state=_fedavg_prepare_state, delta_stateless=True))
 
 register(ProtocolDef(
     name='local', spec_cls=LocalSpec,
@@ -547,11 +762,15 @@ class Experiment:
 
     def precompute(self):
         """Run the host event state machine (versions, crash draws,
-        selection) once and cache the [rounds, m] schedule.  The env rng
-        is consumed exactly once per Experiment — repeated calls (and
-        repeated ``run()``s) replay the same schedule."""
+        selection) once and cache the schedule — [rounds, m] masks for
+        ``schedule='dense'``, native [rounds, quota] (idx, roles) tensors
+        otherwise (same event stream, O(m + rounds*quota) host memory).
+        The env rng is consumed exactly once per Experiment — repeated
+        calls (and repeated ``run()``s) replay the same schedule."""
         if self._sched is None:
-            self._sched = self._pdef.precompute(
+            pre = self._pdef.precompute if self.exec.schedule == 'dense' \
+                else self._pdef.sparse_precompute
+            self._sched = pre(
                 self.env, self.protocol, rounds=self.rounds, seed=self.seed)
         return self._sched
 
@@ -612,7 +831,14 @@ class CompiledRunner:
                     f'unknown engine {e!r} (want "scan" or "loop")')
         return e
 
+    def _stateless(self, ex) -> bool:
+        """Global-only carry: skip the [m, ...] local/cache stacks."""
+        return ex.schedule == 'sparse_delta' and self._pdef.delta_stateless
+
     def _train_fn(self, task):
+        if self.exp.exec.schedule != 'dense':
+            # rows-train contract: (params_rows, rows, round_idx)
+            return task.local_train_rows
         if getattr(self.exp.protocol, 'quantize_uploads', False):
             return federation._quantized_train_fn(task.local_train)
         return task.local_train
@@ -635,7 +861,11 @@ class CompiledRunner:
             raise ValueError('numeric run needs a Task '
                              '(or ExecSpec(numeric=False))')
 
-        st = _init_state(exp.task, exp.env.m, exp.seed, self._pdef.uses_cache)
+        st = _init_state(exp.task, exp.env.m, exp.seed, self._pdef.uses_cache,
+                         self._stateless(ex))
+        weights_j = jnp.asarray(exp.env.weights)
+        if self._pdef.prepare_state is not None:
+            self._pdef.prepare_state(st, weights_j, ex, False)
         start_seg = 0
         fingerprint = exp.fingerprint()
         if checkpoint is not None and ckpt.exists(checkpoint):
@@ -644,7 +874,7 @@ class CompiledRunner:
             st.set_tree(tree)
             _apply_saved_history(hist, saved[0])
 
-        weights = jnp.asarray(exp.env.weights)
+        weights = weights_j
         train_fn = self._train_fn(exp.task)
         evals = _eval_rounds(exp.rounds, ex.eval_every)
         if engine == 'scan' and self._dev is None:
@@ -712,8 +942,18 @@ class CompiledRunner:
             raise ValueError(
                 'quantize_uploads is the single-run per-leaf reference '
                 "knob; sweeps take the packed wire instead (wire='int8')")
+        if ex.schedule != 'dense' and tasks is not None:
+            raise ValueError(
+                'sparse schedules need the rows-train contract, which the '
+                'padded per-member task stack does not implement; use a '
+                'shared task (or schedule="dense")')
 
-        fleet = self._pdef.fleet_precompute(members, rounds=exp.rounds)
+        fleet = self._pdef.fleet_precompute(members, exp.protocol,
+                                            rounds=exp.rounds)
+        if ex.schedule != 'dense':
+            # fleet-major sparse form of the SAME event stream (members
+            # re-padded to the fleet-max active-set capacity)
+            fleet = fleet.to_sparse()
         hists = [History(self._pdef.name,
                          records=_fresh_records(fleet.records[s]),
                          futility=float(fleet.futility[s]))
@@ -732,10 +972,14 @@ class CompiledRunner:
         if engine == 'sequential':
             for s, (mem, hist) in enumerate(zip(members, hists)):
                 task_s = tasks[s] if tasks is not None else shared_task
-                st = _init_state(task_s, m, mem.seed, self._pdef.uses_cache)
+                st = _init_state(task_s, m, mem.seed, self._pdef.uses_cache,
+                                 self._stateless(ex))
                 dev = fleet.member(s).to_device()
                 w_s = jnp.asarray(mem.env.weights)
-                train_fn = task_s.local_train
+                train_fn = task_s.local_train if ex.schedule == 'dense' \
+                    else task_s.local_train_rows
+                if self._pdef.prepare_state is not None:
+                    self._pdef.prepare_state(st, w_s, ex, False)
                 start = 0
                 for stop in evals:
                     seg = jax.tree.map(lambda a: a[start:stop], dev)
@@ -772,8 +1016,13 @@ class CompiledRunner:
                 lambda a: jnp.broadcast_to(a[:, None],
                                            (a.shape[0], m) + a.shape[1:]), g)
 
-        st = _RunState(g, bcast(),
-                       bcast() if self._pdef.uses_cache else None)
+        if self._stateless(ex):
+            st = _RunState(g, None, None)
+        else:
+            st = _RunState(g, bcast(),
+                           bcast() if self._pdef.uses_cache else None)
+        if self._pdef.prepare_state is not None:
+            self._pdef.prepare_state(st, weights, ex, True)
         start_seg = 0
         fingerprint = exp.fingerprint(members, tasks=tasks, task=shared_task)
         if checkpoint is not None and ckpt.exists(checkpoint):

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import protocol, selection
+from repro.core import protocol, schedules, selection
 from repro.core.schedules import (
     AsyncFleetSchedule,
     FedasyncSchedule,
@@ -78,6 +78,17 @@ class Task:
     def local_train(self, stacked_params, round_idx):
         raise NotImplementedError
 
+    def local_train_rows(self, params_rows, rows, round_idx):
+        """Sparse-schedule training: train only the K client replicas in
+        ``params_rows`` ([K, ...] leaves), whose client ids are ``rows``
+        ([K] int32, device array; sentinel ids >= m gather-clamp to
+        garbage rows whose output the engine discards).  Must produce, row
+        for row, the same bits ``local_train`` produces for those clients —
+        that is the sparse==dense contract."""
+        raise NotImplementedError(
+            f'{type(self).__name__} does not implement local_train_rows; '
+            f'sparse schedules need the rows-train contract')
+
     def evaluate(self, global_params) -> dict:
         raise NotImplementedError
 
@@ -104,14 +115,24 @@ def _masked_var(values: np.ndarray, mask: np.ndarray) -> np.ndarray:
 
 
 def precompute_safa_schedule(env: FLEnv, *, fraction: float,
-                             lag_tolerance: int, rounds: int) -> SafaSchedule:
+                             lag_tolerance: int, rounds: int,
+                             form: str = 'dense'):
     """Run the SAFA timing/event state machine (Eq. 3 version bookkeeping,
     crash draws, CFCFM selection) for all rounds in one numpy host pass.
 
     The event process never reads model weights, so the full [rounds, m]
     mask schedule — and every timing metric — is known up front.  Consumes
     ``env``'s rng exactly as the seed's round-by-round loop did.
+
+    ``form='sparse'`` emits a compact ``SparseSchedule`` instead: the SAME
+    loop runs (same draws, same selection, same records), but each round
+    stores only its active set's (idx, roles) pair, so peak host memory is
+    O(m + rounds * K) instead of O(rounds * m).  By construction
+    ``precompute(form='sparse')`` equals ``precompute(form='dense')
+    .to_sparse()`` exactly — one event stream, two encodings.
     """
+    if form not in ('dense', 'sparse'):
+        raise ValueError(f"unknown form {form!r} (want 'dense' or 'sparse')")
     m = env.m
     v = np.zeros(m, dtype=int)             # base-model versions
     committed_prev = np.ones(m, bool)      # round 1: everyone holds w(0)
@@ -124,7 +145,8 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
     crashed_all, cfrac_all = env.draw_rounds(rounds)
     masks = {k: np.zeros((rounds, m), bool)
              for k in ('sync', 'committed', 'picked', 'undrafted',
-                       'deprecated')}
+                       'deprecated')} if form == 'dense' else None
+    sparse_rows = []
     records = []
 
     for t in range(1, rounds + 1):
@@ -155,12 +177,17 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
         pending[sel.committed] = 0.0
         v[sel.committed] = t
 
-        i = t - 1
-        masks['sync'][i] = sync
-        masks['committed'][i] = sel.committed
-        masks['picked'][i] = sel.picked
-        masks['undrafted'][i] = sel.undrafted
-        masks['deprecated'][i] = dep
+        if form == 'dense':
+            i = t - 1
+            masks['sync'][i] = sync
+            masks['committed'][i] = sel.committed
+            masks['picked'][i] = sel.picked
+            masks['undrafted'][i] = sel.undrafted
+            masks['deprecated'][i] = dep
+        else:
+            sparse_rows.append(schedules.safa_sparse_row(
+                sync, sel.committed, sel.picked, sel.undrafted, dep,
+                bootstrap=(t == 1)))
 
         records.append(RoundRecord(
             round=t,
@@ -176,8 +203,12 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
         committed_prev = sel.committed.copy()
         picked_prev = sel.picked.copy()
 
-    return SafaSchedule(records=records,
-                        futility=wasted / max(performed, 1e-9), **masks)
+    futility = wasted / max(performed, 1e-9)
+    if form == 'sparse':
+        idx, roles = schedules.pack_sparse_rows(sparse_rows, m)
+        return schedules.SparseSchedule(m=m, idx=idx, roles=roles,
+                                        records=records, futility=futility)
+    return SafaSchedule(records=records, futility=futility, **masks)
 
 
 def _quantized_train_fn(base_fn):
@@ -264,8 +295,19 @@ def _sync_rounds_common(selected, crashed, cfrac, full_tt, *, t_lim,
 
 
 def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
-                             seed: int, fedcs: bool) -> SyncSchedule:
-    """Host pass for the synchronous baselines (selection + crash draws)."""
+                             seed: int, fedcs: bool, form: str = 'dense',
+                             sampler: str = 'choice'):
+    """Host pass for the synchronous baselines (selection + crash draws).
+
+    ``sampler`` picks the FedAvg selection stream: 'choice' is the legacy
+    per-round ``Generator.choice`` draw; 'topk' is the vectorised
+    without-replacement sampler (``selection.fedavg_select_topk``) whose
+    bulk-uniform stream scales to large m.  FedCS selection is
+    deterministic and ignores it.  ``form='sparse'`` emits a
+    ``SparseSyncSchedule`` (same loop, compact per-round storage), exactly
+    equal to the dense precompute's ``.to_sparse()``."""
+    if form not in ('dense', 'sparse'):
+        raise ValueError(f"unknown form {form!r} (want 'dense' or 'sparse')")
     m = env.m
     rng = np.random.default_rng(seed + 1)
     full_tt = env.full_train_time()
@@ -273,14 +315,26 @@ def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
     wasted = 0.0
     performed = 0.0
     crashed_all, cfrac_all = env.draw_rounds(rounds)
-    selected_s = np.zeros((rounds, m), bool)
-    completed_s = np.zeros((rounds, m), bool)
+    sel_idx_all = None
+    if not fedcs and sampler == 'topk':
+        # one bulk uniform draw for all rounds (row t == round t's draw)
+        sel_idx_all = selection.fedavg_select_topk(rng, m, fraction, rounds)
+    elif sampler not in ('choice', 'topk'):
+        raise ValueError(
+            f"unknown sampler {sampler!r} (want 'choice' or 'topk')")
+    dense = form == 'dense'
+    selected_s = np.zeros((rounds, m), bool) if dense else None
+    completed_s = np.zeros((rounds, m), bool) if dense else None
+    sparse_rows = []
     records = []
 
     for t in range(1, rounds + 1):
         if fedcs:
             est = 2 * env.t_updown + full_tt
             sel = selection.fedcs_select(est, fraction, env.t_lim)
+        elif sel_idx_all is not None:
+            sel = np.zeros(m, bool)
+            sel[sel_idx_all[t - 1]] = True
         else:
             sel = selection.fedavg_select(rng, m, fraction)
         crashed, cfrac = crashed_all[t - 1], cfrac_all[t - 1]
@@ -292,8 +346,11 @@ def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
         performed += float(np.sum(np.where(sel, np.where(crashed, cfrac, 1.0), 0.0) * work))
         wasted += float(np.sum((sel & crashed) * cfrac * work))
 
-        selected_s[t - 1] = sel
-        completed_s[t - 1] = ~crashed
+        if dense:
+            selected_s[t - 1] = sel
+            completed_s[t - 1] = ~crashed
+        else:
+            sparse_rows.append(schedules.sync_sparse_row(sel, ~crashed))
         records.append(RoundRecord(
             round=t, round_len=round_len, t_dist=t_dist,
             eur=float(completed.sum()) / m,
@@ -301,9 +358,14 @@ def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
             n_picked=int(completed.sum()), n_committed=int(completed.sum()),
             n_crashed=int(crashed.sum())))
 
+    futility = wasted / max(performed, 1e-9)
+    if not dense:
+        idx, roles = schedules.pack_sparse_rows(sparse_rows, m)
+        return schedules.SparseSyncSchedule(m=m, idx=idx, roles=roles,
+                                            records=records,
+                                            futility=futility)
     return SyncSchedule(selected=selected_s, completed=completed_s,
-                        records=records,
-                        futility=wasted / max(performed, 1e-9))
+                        records=records, futility=futility)
 
 
 def precompute_local_schedule(env: FLEnv, *, fraction: float, rounds: int,
@@ -499,8 +561,9 @@ def precompute_fleet_schedule(members, *, rounds: int) -> FleetSchedule:
                          **masks)
 
 
-def precompute_sync_fleet_schedule(members, *, rounds: int,
-                                   fedcs: bool) -> SyncFleetSchedule:
+def precompute_sync_fleet_schedule(members, *, rounds: int, fedcs: bool,
+                                   sampler: str = 'choice'
+                                   ) -> SyncFleetSchedule:
     """FedAvg/FedCS host pass for a whole fleet in one [S, rounds, m] sweep.
 
     Bit-identical to stacking S ``precompute_sync_schedule`` calls
@@ -537,7 +600,8 @@ def precompute_sync_fleet_schedule(members, *, rounds: int,
                                    (s_count, rounds, m)).copy()
     else:
         rngs = [np.random.default_rng(mem.seed + 1) for mem in members]
-        selected = selection.fedavg_select_batch(rngs, m, fraction, rounds)
+        selected = selection.fedavg_select_batch(rngs, m, fraction, rounds,
+                                                 sampler=sampler)
 
     round_len, t_dist = _sync_rounds_common(
         selected, crashed_all, cfrac_all, full_tt[:, None],

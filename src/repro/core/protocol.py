@@ -135,6 +135,31 @@ def check_wire(wire: str):
         raise ValueError(f"unknown wire {wire!r} (want 'f32' or 'int8')")
 
 
+def safa_server_step(base, trained, cache, global_w, *, completed, picked,
+                     undrafted, deprecated, weights, use_kernel=False,
+                     wire='f32'):
+    """Everything the SAFA server does after local training: the wire
+    transfer plus the Eq. 6-8 discriminative aggregation plus the local
+    sync.  Split out of ``safa_round`` so the sparse-schedule round can
+    scatter its trained rows into the dense stacks and then run the exact
+    same trace — that is what makes sparse==dense a bit-identity, not an
+    allclose.  Returns (new_global, new_local, new_cache)."""
+    if wire == 'int8':
+        from repro.kernels import ops as kops
+        return kops.safa_compressed_update(
+            base, trained, cache, global_w, picked=picked,
+            undrafted=undrafted, deprecated=deprecated, completed=completed,
+            weights=weights)
+    # crashed clients make no visible progress this round
+    trained = masked_select(completed, trained, base)
+    res = discriminative_aggregation(
+        cache, trained, global_w, picked=picked, undrafted=undrafted,
+        deprecated=deprecated, weights=weights, use_kernel=use_kernel)
+    # committed clients now hold their own trained model locally
+    new_local = masked_select(completed, trained, base)
+    return res.new_global, new_local, res.new_cache
+
+
 def safa_round(global_w, local_w, cache, *, sync_mask, completed, picked,
                undrafted, deprecated, weights, local_train_fn, train_args=(),
                use_kernel: bool = False, wire: str = 'f32'):
@@ -155,20 +180,10 @@ def safa_round(global_w, local_w, cache, *, sync_mask, completed, picked,
     check_wire(wire)
     base = distribute(global_w, local_w, sync_mask)
     trained = local_train_fn(base, *train_args)
-    if wire == 'int8':
-        from repro.kernels import ops as kops
-        return kops.safa_compressed_update(
-            base, trained, cache, global_w, picked=picked,
-            undrafted=undrafted, deprecated=deprecated, completed=completed,
-            weights=weights)
-    # crashed clients make no visible progress this round
-    trained = masked_select(completed, trained, base)
-    res = discriminative_aggregation(
-        cache, trained, global_w, picked=picked, undrafted=undrafted,
-        deprecated=deprecated, weights=weights, use_kernel=use_kernel)
-    # committed clients now hold their own trained model locally
-    new_local = masked_select(completed, trained, base)
-    return res.new_global, new_local, res.new_cache
+    return safa_server_step(
+        base, trained, cache, global_w, completed=completed, picked=picked,
+        undrafted=undrafted, deprecated=deprecated, weights=weights,
+        use_kernel=use_kernel, wire=wire)
 
 
 # ---------------------------------------------------------------------------
@@ -434,6 +449,16 @@ def fedavg_round(global_w, local_w, *, selected, completed, weights,
     check_wire(wire)
     base = distribute(global_w, local_w, selected)
     trained = local_train_fn(base, *train_args)
+    return fedavg_server_step(base, trained, global_w, selected=selected,
+                              completed=completed, weights=weights, wire=wire)
+
+
+def fedavg_server_step(base, trained, global_w, *, selected, completed,
+                       weights, wire: str = 'f32'):
+    """FedAvg's post-train server math (wire transfer + renormalised
+    aggregation + local sync), shared by the dense and sparse-schedule
+    rounds so the two are trace-identical.  Returns (new_global,
+    new_local)."""
     if wire == 'int8':
         from repro.kernels import ops as kops
         trained = kops.wire_roundtrip_packed(trained, like=global_w)
@@ -477,6 +502,465 @@ def fedasync_merge(global_w, trained, *, order, alphas):
 
     new_global, _ = jax.lax.scan(merge, global_w, order)
     return new_global
+
+
+# ---------------------------------------------------------------------------
+# Sparse (active-set) schedules: [k, K] index + role tensors instead of
+# [k, m] masks
+# ---------------------------------------------------------------------------
+#
+# At production scale only O(quota) of the m clients touch a round: the
+# sync/committed/deprecated sets.  A sparse schedule stores, per round, the
+# indices of that active set (padded to a fixed capacity K with the sentinel
+# index m) plus a per-slot role bitmask.  Every numeric state change of the
+# dense round is covered — picked and undrafted are subsets of committed,
+# and rows outside sync|committed|deprecated keep their local/cache entries
+# bit-for-bit — so the dense masks are exactly reconstructible.
+#
+# Two execution modes consume the same schedule:
+#   * 'sparse' (exact): train only the K active rows, scatter them into the
+#     dense stacks, then run the *identical* dense server trace
+#     (``safa_server_step``/``fedavg_server_step``).  FLOPs of local
+#     training — the dominant cost — drop from O(m·train) to O(K·train);
+#     memory stays O(m·N) for the carried state.  Bit-identical to dense.
+#   * 'sparse_delta': update a carried running aggregate
+#     ``agg = sum_k w_k cache_k`` from the K active rows only —
+#     O(K·N) FLOPs per round, and for stateless protocols (FedAvg/FedCS)
+#     no [m, N] buffer at all.  Equivalent to dense up to float summation
+#     order (allclose, not bitwise).
+
+# SAFA per-slot role bits (a slot may carry several: picked implies
+# committed, deprecated clients are also synced, ...)
+ROLE_SYNC = 1
+ROLE_COMMITTED = 2
+ROLE_PICKED = 4
+ROLE_UNDRAFTED = 8
+ROLE_DEPRECATED = 16
+
+# synchronous-protocol (FedAvg/FedCS) role bits
+SROLE_SELECTED = 1
+SROLE_COMPLETED = 2
+
+
+class SparseRoundSchedule(NamedTuple):
+    """SAFA sparse per-round schedule: ``idx`` [k, K] int32 active-set row
+    indices (sentinel m pads unused slots), ``roles`` [k, K] uint8 ROLE_*
+    bitmasks, ``round_idx`` [k]."""
+    idx: Any
+    roles: Any
+    round_idx: Any
+
+
+class SparseSyncSchedule(NamedTuple):
+    """FedAvg/FedCS sparse per-round schedule: ``idx`` [k, K] int32 selected
+    row indices (sentinel m), ``roles`` [k, K] uint8 SROLE_* bitmasks,
+    ``round_idx`` [k]."""
+    idx: Any
+    roles: Any
+    round_idx: Any
+
+
+def has_role(roles, bit):
+    """Per-slot bool mask for one ROLE_*/SROLE_* bit."""
+    return (roles & bit) != 0
+
+
+def scatter_masks(idx, roles, m: int, bits):
+    """Reconstruct dense [m] bool masks from one round's (idx, roles).
+
+    Sentinel slots (idx == m) are dropped; returns one mask per bit in
+    ``bits``, bit-equal to the dense precompute's masks."""
+    return tuple(
+        jnp.zeros((m,), bool).at[idx].set(has_role(roles, b), mode='drop')
+        for b in bits)
+
+
+def tree_gather(tree, idx):
+    """Gather rows of every [m, ...] leaf.  Out-of-range (sentinel) indices
+    clamp under jit — gathered padding rows are garbage by contract and
+    must be masked by the caller's role bits."""
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def tree_scatter(tree, idx, rows):
+    """Scatter [K, ...] rows back into [m, ...] leaves; sentinel slots
+    (idx == m) are dropped, all other rows are overwritten."""
+    return jax.tree.map(lambda a, r: a.at[idx].set(r, mode='drop'),
+                        tree, rows)
+
+
+def _slot_weights(idx, weights):
+    """Aggregation weight per slot, 0 at sentinel slots."""
+    valid = idx < weights.shape[0]
+    return jnp.where(valid, weights[idx], 0.0).astype(jnp.float32)
+
+
+def init_aggregate(cache, weights):
+    """The running aggregate carried by sparse_delta engines:
+    ``agg = sum_k w_k cache_k`` as an f32 tree of global-shaped leaves.
+    Computed once at run start from the dense cache; each round then
+    adjusts it from the active rows only."""
+    def red(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(leaf.astype(jnp.float32) * w, axis=0)
+    return jax.tree.map(red, cache)
+
+
+def safa_round_sparse(global_w, local_w, cache, *, idx, roles, weights,
+                      local_train_fn, train_args=(), use_kernel=False,
+                      wire: str = 'f32'):
+    """One SAFA round from a sparse schedule, bit-identical to
+    ``safa_round`` on the dense masks that (idx, roles) encode.
+
+    Only the K active rows are trained —
+    ``local_train_fn(base_rows, rows, *train_args)`` is the rows-train
+    contract (``Task.local_train_rows``) — then the raw trained rows are
+    scattered over the dense base stack and the identical dense server
+    trace runs.  Returns (new_global, new_local, new_cache)."""
+    check_wire(wire)
+    m = weights.shape[0]
+    sync_mask, completed, picked, undrafted, deprecated = scatter_masks(
+        idx, roles, m, (ROLE_SYNC, ROLE_COMMITTED, ROLE_PICKED,
+                        ROLE_UNDRAFTED, ROLE_DEPRECATED))
+    base = distribute(global_w, local_w, sync_mask)
+    base_rows = tree_gather(base, idx)
+    trained_rows = local_train_fn(base_rows, idx, *train_args)
+    trained = tree_scatter(base, idx, trained_rows)
+    return safa_server_step(
+        base, trained, cache, global_w, completed=completed, picked=picked,
+        undrafted=undrafted, deprecated=deprecated, weights=weights,
+        use_kernel=use_kernel, wire=wire)
+
+
+def safa_round_sparse_delta(global_w, local_w, cache, agg, *, idx, roles,
+                            weights, local_train_fn, train_args=(),
+                            wire: str = 'f32'):
+    """One SAFA round in O(K·N): Eq. 6-8 as deltas on the carried running
+    aggregate ``agg = sum_k w_k cache_k``.
+
+        new_global = agg + sum_slots w (c1 - c_old)      (Eq. 6+7)
+        new_agg    = new_global + sum_slots w (c2 - c1)  (Eq. 8)
+
+    Only active cache/local rows are gathered, trained, and scattered
+    back; no [m, N] intermediate is formed.  Equivalent to the dense round
+    up to float summation order.  Returns (new_global, new_local,
+    new_cache, new_agg)."""
+    check_wire(wire)
+    k = idx.shape[0]
+    sync_r = has_role(roles, ROLE_SYNC)
+    com_r = has_role(roles, ROLE_COMMITTED)
+    pick_r = has_role(roles, ROLE_PICKED)
+    und_r = has_role(roles, ROLE_UNDRAFTED)
+    dep_r = has_role(roles, ROLE_DEPRECATED)
+    g_rows = broadcast_global(global_w, k)
+    base_rows = masked_select(sync_r, g_rows, tree_gather(local_w, idx))
+    trained_rows = local_train_fn(base_rows, idx, *train_args)
+    if wire == 'int8':
+        from repro.kernels import ops as kops
+        trained_rows = kops.wire_roundtrip_packed(trained_rows, like=global_w)
+    trained_rows = masked_select(com_r, trained_rows, base_rows)
+    c_rows = tree_gather(cache, idx)
+    w_rows = _slot_weights(idx, weights)
+
+    def delta(a, new, old):
+        w = w_rows.reshape((-1,) + (1,) * (new.ndim - 1))
+        return a + jnp.sum(
+            (new.astype(jnp.float32) - old.astype(jnp.float32)) * w, axis=0)
+
+    # Eq. 6 on the active rows only
+    c1_rows = masked_select(dep_r & ~pick_r, g_rows, c_rows)
+    c1_rows = masked_select(pick_r, trained_rows, c1_rows)
+    # Eq. 7: the full weighted sum moves by the rows that changed
+    agg1 = jax.tree.map(delta, agg, c1_rows, c_rows)
+    new_global = jax.tree.map(lambda a, g: a.astype(g.dtype), agg1, global_w)
+    # Eq. 8: undrafted arrivals enter the cache for the next round
+    c2_rows = masked_select(und_r, trained_rows, c1_rows)
+    new_agg = jax.tree.map(delta, agg1, c2_rows, c1_rows)
+    new_cache = tree_scatter(cache, idx, c2_rows)
+    new_local = tree_scatter(local_w, idx, trained_rows)
+    return new_global, new_local, new_cache, new_agg
+
+
+def fedavg_round_sparse(global_w, local_w, *, idx, roles, weights,
+                        local_train_fn, train_args=(), wire: str = 'f32'):
+    """FedAvg round from a sparse schedule, bit-identical to
+    ``fedavg_round``: train the selected rows only, scatter, then run the
+    dense server trace.  Returns (new_global, new_local)."""
+    check_wire(wire)
+    m = weights.shape[0]
+    selected, completed = scatter_masks(
+        idx, roles, m, (SROLE_SELECTED, SROLE_COMPLETED))
+    base = distribute(global_w, local_w, selected)
+    base_rows = tree_gather(base, idx)
+    trained_rows = local_train_fn(base_rows, idx, *train_args)
+    trained = tree_scatter(base, idx, trained_rows)
+    return fedavg_server_step(base, trained, global_w, selected=selected,
+                              completed=completed, weights=weights, wire=wire)
+
+
+def fedavg_round_sparse_delta(global_w, *, idx, roles, weights,
+                              local_train_fn, train_args=(),
+                              wire: str = 'f32'):
+    """Stateless O(K·N) FedAvg round: selected clients always sync to the
+    global model, and a client's local model never feeds back into the
+    aggregate (it is overwritten by the sync on its next selection), so no
+    [m, N] local stack needs to exist at all — the only carried state is
+    the global model.  Equivalent to the dense round up to float summation
+    order.  Returns new_global."""
+    check_wire(wire)
+    k = idx.shape[0]
+    com_r = has_role(roles, SROLE_COMPLETED) & (idx < weights.shape[0])
+    base_rows = broadcast_global(global_w, k)
+    trained_rows = local_train_fn(base_rows, idx, *train_args)
+    if wire == 'int8':
+        from repro.kernels import ops as kops
+        trained_rows = kops.wire_roundtrip_packed(trained_rows, like=global_w)
+    w_rows = jnp.where(com_r, _slot_weights(idx, weights), 0.0)
+    wsum = jnp.maximum(jnp.sum(w_rows), 1e-12)
+    eff_w = w_rows / wsum
+    any_ok = jnp.sum(com_r) > 0
+
+    def red(t, g):
+        w = eff_w.reshape((-1,) + (1,) * (t.ndim - 1))
+        agg = jnp.sum(t.astype(jnp.float32) * w, axis=0)
+        return jnp.where(any_ok, agg, g.astype(jnp.float32)).astype(g.dtype)
+
+    return jax.tree.map(red, trained_rows, global_w)
+
+
+# -- sparse scan/fleet engines ----------------------------------------------
+
+def _safa_sparse_scan(global_w, local_w, cache, schedule, weights,
+                      local_train_fn, use_kernel, wire='f32'):
+    def step(carry, sched):
+        g, l, c = carry
+        out = safa_round_sparse(
+            g, l, c, idx=sched.idx, roles=sched.roles, weights=weights,
+            local_train_fn=local_train_fn, train_args=(sched.round_idx,),
+            use_kernel=use_kernel, wire=wire)
+        return out, None
+
+    carry, _ = jax.lax.scan(step, (global_w, local_w, cache), schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=('local_train_fn', 'use_kernel', 'wire'))
+def safa_run_scan_sparse(global_w, local_w, cache,
+                         schedule: SparseRoundSchedule, weights, *,
+                         local_train_fn, use_kernel=False, wire='f32'):
+    """Sparse-schedule counterpart of ``safa_run_scan``.  Bit-identical to
+    the dense scan on the masks the schedule encodes; local training runs
+    over the K active rows only.  ``local_train_fn`` follows the
+    rows-train contract (``Task.local_train_rows``)."""
+    return _safa_sparse_scan(global_w, local_w, cache, schedule, weights,
+                             local_train_fn, use_kernel, wire)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=('local_train_fn', 'use_kernel', 'wire'))
+def safa_run_fleet_sparse(global_w, local_w, cache,
+                          schedule: SparseRoundSchedule, weights, *,
+                          local_train_fn, use_kernel=False, wire='f32'):
+    """S sparse SAFA simulations in one vmapped scan (schedule fields
+    [S, k, K], carry fleet-stacked and donated), per-member bit-identical
+    to ``safa_run_scan_sparse``."""
+    run = lambda g, l, c, s, w: _safa_sparse_scan(
+        g, l, c, s, w, local_train_fn, use_kernel, wire)
+    return jax.vmap(run)(global_w, local_w, cache, schedule, weights)
+
+
+def _safa_sparse_delta_scan(global_w, local_w, cache, agg, schedule, weights,
+                            local_train_fn, wire='f32'):
+    def step(carry, sched):
+        out = safa_round_sparse_delta(
+            *carry, idx=sched.idx, roles=sched.roles, weights=weights,
+            local_train_fn=local_train_fn, train_args=(sched.round_idx,),
+            wire=wire)
+        return out, None
+
+    carry, _ = jax.lax.scan(step, (global_w, local_w, cache, agg), schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=('local_train_fn', 'wire'))
+def safa_run_scan_sparse_delta(global_w, local_w, cache, agg,
+                               schedule: SparseRoundSchedule, weights, *,
+                               local_train_fn, wire='f32'):
+    """O(K·N)-per-round SAFA scan: carries (global, local, cache, agg) with
+    ``agg = init_aggregate(cache, weights)`` at entry.  Allclose- (not
+    bit-) equivalent to the dense scan."""
+    return _safa_sparse_delta_scan(global_w, local_w, cache, agg, schedule,
+                                   weights, local_train_fn, wire)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=('local_train_fn', 'wire'))
+def safa_run_fleet_sparse_delta(global_w, local_w, cache, agg,
+                                schedule: SparseRoundSchedule, weights, *,
+                                local_train_fn, wire='f32'):
+    """Fleet counterpart of ``safa_run_scan_sparse_delta`` (one vmapped
+    scan, [S, ...] carry donated)."""
+    run = lambda g, l, c, a, s, w: _safa_sparse_delta_scan(
+        g, l, c, a, s, w, local_train_fn, wire)
+    return jax.vmap(run)(global_w, local_w, cache, agg, schedule, weights)
+
+
+def _fedavg_sparse_scan(global_w, local_w, schedule, weights, local_train_fn,
+                        wire='f32'):
+    def step(carry, sched):
+        g, l = carry
+        ng, nl = fedavg_round_sparse(
+            g, l, idx=sched.idx, roles=sched.roles, weights=weights,
+            local_train_fn=local_train_fn, train_args=(sched.round_idx,),
+            wire=wire)
+        return (ng, nl), None
+
+    carry, _ = jax.lax.scan(step, (global_w, local_w), schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=('local_train_fn', 'wire'))
+def fedavg_run_scan_sparse(global_w, local_w, schedule: SparseSyncSchedule,
+                           weights, *, local_train_fn, wire='f32'):
+    """Sparse-schedule counterpart of ``fedavg_run_scan`` (bit-identical to
+    the dense scan; trains the selected rows only)."""
+    return _fedavg_sparse_scan(global_w, local_w, schedule, weights,
+                               local_train_fn, wire)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=('local_train_fn', 'wire'))
+def fedavg_run_fleet_sparse(global_w, local_w, schedule: SparseSyncSchedule,
+                            weights, *, local_train_fn, wire='f32'):
+    """S sparse FedAvg/FedCS simulations in one vmapped scan."""
+    run = lambda g, l, s, w: _fedavg_sparse_scan(g, l, s, w, local_train_fn,
+                                                 wire)
+    return jax.vmap(run)(global_w, local_w, schedule, weights)
+
+
+def _fedavg_sparse_delta_scan(global_w, schedule, weights, local_train_fn,
+                              wire='f32'):
+    def step(g, sched):
+        ng = fedavg_round_sparse_delta(
+            g, idx=sched.idx, roles=sched.roles, weights=weights,
+            local_train_fn=local_train_fn, train_args=(sched.round_idx,),
+            wire=wire)
+        return ng, None
+
+    carry, _ = jax.lax.scan(step, global_w, schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=('local_train_fn', 'wire'))
+def fedavg_run_scan_sparse_delta(global_w, schedule: SparseSyncSchedule,
+                                 weights, *, local_train_fn, wire='f32'):
+    """Stateless FedAvg/FedCS scan: the global model is the whole carry —
+    peak device memory is O(N + K·N), independent of m."""
+    return _fedavg_sparse_delta_scan(global_w, schedule, weights,
+                                     local_train_fn, wire)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=('local_train_fn', 'wire'))
+def fedavg_run_fleet_sparse_delta(global_w, schedule: SparseSyncSchedule,
+                                  weights, *, local_train_fn, wire='f32'):
+    """Fleet counterpart of ``fedavg_run_scan_sparse_delta``."""
+    run = lambda g, s, w: _fedavg_sparse_delta_scan(g, s, w, local_train_fn,
+                                                    wire)
+    return jax.vmap(run)(global_w, schedule, weights)
+
+
+# -- packed sparse-delta engine: rows kernels on resident pack buffers ------
+
+def safa_round_sparse_delta_packed(gbuf, lbuf, cbuf, abuf, *, idx, roles,
+                                   weights, local_train_fn, train_args=(),
+                                   spec, wire: str = 'f32'):
+    """One O(K·N) SAFA round entirely on pack buffers, aggregation fused.
+
+    gbuf [N] f32 global pack; lbuf/cbuf [m+1, N] local/cache packs (the
+    trailing scratch row absorbs sentinel slots); abuf [N] f32 running
+    aggregate.  Active rows move through ``ops.gather_rows`` -> unpack ->
+    rows-train -> repack -> one ``safa_aggregate_packed_rows`` dispatch
+    (Eq. 6-8 + both delta sums fused) -> ``ops.scatter_rows`` writes the
+    cache/local rows back in place.  Under ``wire='int8'`` the repacked
+    rows are block-quantised and the q8 rows kernel dequantises
+    in-register (``spec`` must then be the QBLOCK-aligned ``wire_spec``).
+    Allclose- (not bit-) equivalent to ``safa_round_sparse_delta`` — the
+    kernel accumulates slot-by-slot over tiles instead of one tree-wide
+    sum.  Returns (gbuf', lbuf', cbuf', abuf')."""
+    check_wire(wire)
+    from repro.kernels import ops as kops
+    com_r = has_role(roles, ROLE_COMMITTED)
+    pick_r = has_role(roles, ROLE_PICKED)
+    und_r = has_role(roles, ROLE_UNDRAFTED)
+    dep_r = has_role(roles, ROLE_DEPRECATED)
+    sync_r = has_role(roles, ROLE_SYNC)
+    w_rows = _slot_weights(idx, weights)
+    l_rows = kops.gather_rows(lbuf, idx)
+    base_rows = jnp.where(sync_r[:, None], gbuf[None].astype(lbuf.dtype),
+                          l_rows)
+    trained = kops.pack_stacked(
+        local_train_fn(kops.unpack_stacked(base_rows, spec), idx,
+                       *train_args), spec)
+    if wire == 'int8':
+        q, scales = kops.quantize_packed(trained)
+        ng, na, c2_rows, local_rows = kops.safa_aggregate_packed_q8_rows(
+            q, scales, base_rows, cbuf, gbuf, abuf, idx, pick_r, und_r,
+            dep_r, com_r, w_rows)
+    else:
+        local_rows = jnp.where(com_r[:, None], trained, base_rows)
+        ng, na, c2_rows = kops.safa_aggregate_packed_rows(
+            cbuf, local_rows, gbuf, abuf, idx, pick_r, und_r, dep_r, w_rows)
+    new_c = kops.scatter_rows(cbuf, idx, c2_rows.astype(cbuf.dtype))
+    new_l = kops.scatter_rows(lbuf, idx, local_rows.astype(lbuf.dtype))
+    return ng.astype(gbuf.dtype), new_l, new_c, na
+
+
+def _safa_sparse_delta_packed_scan(gbuf, lbuf, cbuf, abuf, schedule, weights,
+                                   local_train_fn, spec, wire='f32'):
+    def step(carry, sched):
+        out = safa_round_sparse_delta_packed(
+            *carry, idx=sched.idx, roles=sched.roles, weights=weights,
+            local_train_fn=local_train_fn, train_args=(sched.round_idx,),
+            spec=spec, wire=wire)
+        return out, None
+
+    carry, _ = jax.lax.scan(step, (gbuf, lbuf, cbuf, abuf), schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=('local_train_fn', 'spec', 'wire'))
+def safa_run_scan_sparse_delta_packed(gbuf, lbuf, cbuf, abuf,
+                                      schedule: SparseRoundSchedule,
+                                      weights, *, local_train_fn, spec,
+                                      wire='f32'):
+    """Packed-buffer counterpart of ``safa_run_scan_sparse_delta``: the
+    carry is (global [N], local [m+1, N], cache [m+1, N], agg [N]) pack
+    buffers and every round is gather + train + ONE fused rows dispatch +
+    two in-place scatters.  ``spec`` is the (static) pack layout —
+    ``ops.wire_spec`` under ``wire='int8'``, ``ops.pack_spec`` otherwise;
+    callers pack once before and unpack once after the whole run."""
+    return _safa_sparse_delta_packed_scan(gbuf, lbuf, cbuf, abuf, schedule,
+                                          weights, local_train_fn, spec, wire)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=('local_train_fn', 'spec', 'wire'))
+def safa_run_fleet_sparse_delta_packed(gbuf, lbuf, cbuf, abuf,
+                                       schedule: SparseRoundSchedule,
+                                       weights, *, local_train_fn, spec,
+                                       wire='f32'):
+    """Fleet counterpart of ``safa_run_scan_sparse_delta_packed`` (one
+    vmapped scan over [S, ...] pack buffers; the rows kernels batch under
+    vmap into the same launches as their explicit ``*_fleet`` forms)."""
+    run = lambda g, l, c, a, s, w: _safa_sparse_delta_packed_scan(
+        g, l, c, a, s, w, local_train_fn, spec, wire)
+    return jax.vmap(run)(gbuf, lbuf, cbuf, abuf, schedule, weights)
 
 
 def fedasync_round(global_w, local_w, *, committed, order, alphas,

@@ -104,6 +104,18 @@ class SafaSchedule:
             deprecated=jnp.asarray(self.deprecated),
             round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
 
+    def to_sparse(self, capacity: Optional[int] = None) -> 'SparseSchedule':
+        """Compact [rounds, K] form of the same event stream (see the
+        sparse-schedule section below)."""
+        m = self.sync.shape[1]
+        rows = [safa_sparse_row(self.sync[t], self.committed[t],
+                                self.picked[t], self.undrafted[t],
+                                self.deprecated[t], bootstrap=(t == 0))
+                for t in range(self.rounds)]
+        idx, roles = pack_sparse_rows(rows, m, capacity)
+        return SparseSchedule(m=m, idx=idx, roles=roles,
+                              records=self.records, futility=self.futility)
+
 
 @dataclasses.dataclass
 class SyncSchedule:
@@ -124,6 +136,16 @@ class SyncSchedule:
             selected=jnp.asarray(self.selected),
             completed=jnp.asarray(self.completed),
             round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+    def to_sparse(self, capacity: Optional[int] = None) -> 'SparseSyncSchedule':
+        """Compact [rounds, K] form of the same event stream."""
+        m = self.selected.shape[1]
+        rows = [sync_sparse_row(self.selected[t], self.completed[t])
+                for t in range(self.rounds)]
+        idx, roles = pack_sparse_rows(rows, m, capacity)
+        return SparseSyncSchedule(m=m, idx=idx, roles=roles,
+                                  records=self.records,
+                                  futility=self.futility)
 
 
 @dataclasses.dataclass
@@ -168,6 +190,144 @@ class FedasyncSchedule:
             committed=jnp.asarray(self.committed),
             order=jnp.asarray(self.order),
             alphas=jnp.asarray(self.alphas, jnp.float32),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Sparse (active-set) schedules: [rounds, K] index + role tensors
+# ---------------------------------------------------------------------------
+#
+# A dense schedule stores five [rounds, m] masks; at m = 1e6 that is the
+# population, not the event process.  The sparse form stores only the
+# per-round *active set* — the clients whose state a round can touch
+# (SAFA: sync|committed|deprecated; sync protocols: selected) — as a
+# [rounds, K] int32 index tensor padded with the sentinel index m, plus a
+# [rounds, K] uint8 role bitmask per slot (protocol.ROLE_*/SROLE_*).  The
+# dense masks are exactly reconstructible (every mask is a subset of the
+# active set), so dense and sparse replay the same event stream.
+
+
+def safa_sparse_row(sync, committed, picked, undrafted, deprecated, *,
+                    bootstrap: bool = False):
+    """One round's compact (idx, roles) from its dense [m] bool masks.
+
+    ``bootstrap=True`` marks round 1, where every client trivially holds
+    the current version and the dense sync mask covers the whole
+    population.  A sync-only client's transition there — ``local :=
+    global`` — is the identity, because every engine initialises
+    ``local_w = cache = broadcast(global)``; those clients are elided so
+    the active set stays quota-bounded instead of O(m) for one row.
+    Clients holding any other role keep their sync bit."""
+    role = (sync * protocol.ROLE_SYNC
+            + committed * protocol.ROLE_COMMITTED
+            + picked * protocol.ROLE_PICKED
+            + undrafted * protocol.ROLE_UNDRAFTED
+            + deprecated * protocol.ROLE_DEPRECATED).astype(np.uint8)
+    if bootstrap:
+        role = np.where(role == protocol.ROLE_SYNC, 0, role).astype(np.uint8)
+    active = np.flatnonzero(role)
+    return active.astype(np.int32), role[active]
+
+
+def sync_sparse_row(selected, completed):
+    """One round's compact (idx, roles) for a synchronous protocol.  The
+    active set is the selected set; the survivor bit is stored per slot
+    (the dense ``completed`` mask outside the selection never reaches the
+    numeric round, which intersects the two)."""
+    role = (selected * protocol.SROLE_SELECTED
+            + (selected & completed) * protocol.SROLE_COMPLETED
+            ).astype(np.uint8)
+    active = np.flatnonzero(role)
+    return active.astype(np.int32), role[active]
+
+
+def pack_sparse_rows(rows, m: int, capacity: Optional[int] = None):
+    """Pad per-round (idx, roles) pairs to [rounds, capacity] tensors.
+
+    ``capacity`` defaults to the largest active set observed; an explicit
+    capacity smaller than some round's active set is a hard error naming
+    the round — silent truncation would drop events."""
+    need = max([len(i) for i, _ in rows] or [0])
+    cap = max(need, 1) if capacity is None else capacity
+    idx = np.full((len(rows), cap), m, np.int32)
+    roles = np.zeros((len(rows), cap), np.uint8)
+    for t, (i, r) in enumerate(rows):
+        if len(i) > cap:
+            raise ValueError(
+                f'sparse schedule capacity {cap} < active-set size '
+                f'{len(i)} at round {t}: raise capacity (or the t_lim/'
+                f'lag_tolerance knobs bounding the active set)')
+        idx[t, :len(i)] = i
+        roles[t, :len(i)] = r
+    return idx, roles
+
+
+@dataclasses.dataclass
+class SparseSchedule:
+    """Compact SAFA event process: [rounds, K] active-set indices + role
+    bitmasks (see module section above).  ``records``/``futility`` are the
+    same host-side timing stats the dense schedule carries."""
+    m: int
+    idx: np.ndarray             # [rounds, K] int32, sentinel == m
+    roles: np.ndarray           # [rounds, K] uint8 of protocol.ROLE_* bits
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.idx.nbytes + self.roles.nbytes
+
+    def to_device(self) -> protocol.SparseRoundSchedule:
+        return protocol.SparseRoundSchedule(
+            idx=jnp.asarray(self.idx), roles=jnp.asarray(self.roles),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+    def to_dense(self) -> SafaSchedule:
+        """Reconstruct the dense [rounds, m] masks — exact, except that
+        round 1's sync mask recovers only the active clients: the
+        population-wide bootstrap sync is elided at emission time (see
+        ``safa_sparse_row``) because it is a state no-op.  Engine results
+        are bit-identical either way."""
+        bits = {'sync': protocol.ROLE_SYNC,
+                'committed': protocol.ROLE_COMMITTED,
+                'picked': protocol.ROLE_PICKED,
+                'undrafted': protocol.ROLE_UNDRAFTED,
+                'deprecated': protocol.ROLE_DEPRECATED}
+        masks = {k: np.zeros((self.rounds, self.m), bool) for k in bits}
+        for t in range(self.rounds):
+            valid = self.idx[t] < self.m
+            i, r = self.idx[t][valid], self.roles[t][valid]
+            for k, b in bits.items():
+                masks[k][t, i] = (r & b) != 0
+        return SafaSchedule(records=self.records, futility=self.futility,
+                            **masks)
+
+
+@dataclasses.dataclass
+class SparseSyncSchedule:
+    """Compact FedAvg/FedCS event process ([rounds, K] indices + SROLE_*
+    bitmasks over the selected set)."""
+    m: int
+    idx: np.ndarray
+    roles: np.ndarray
+    records: list
+    futility: float
+
+    rounds = SparseSchedule.rounds
+    capacity = SparseSchedule.capacity
+    nbytes = SparseSchedule.nbytes
+
+    def to_device(self) -> protocol.SparseSyncSchedule:
+        return protocol.SparseSyncSchedule(
+            idx=jnp.asarray(self.idx), roles=jnp.asarray(self.roles),
             round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
 
 
@@ -241,6 +401,13 @@ class FleetSchedule(_FleetStack):
             deprecated=jnp.asarray(self.deprecated),
             round_idx=self._round_idx())
 
+    def to_sparse(self, capacity: Optional[int] = None) -> 'SparseFleetSchedule':
+        """Compact [S, rounds, K] form (K = the fleet-wide max active set
+        unless an explicit capacity is given)."""
+        return SparseFleetSchedule.from_members(
+            [self.member(s).to_sparse() for s in range(self.size)],
+            capacity=capacity)
+
 
 @dataclasses.dataclass
 class SyncFleetSchedule(_FleetStack):
@@ -258,6 +425,11 @@ class SyncFleetSchedule(_FleetStack):
             selected=jnp.asarray(self.selected),
             completed=jnp.asarray(self.completed),
             round_idx=self._round_idx())
+
+    def to_sparse(self, capacity: Optional[int] = None) -> 'SparseSyncFleetSchedule':
+        return SparseSyncFleetSchedule.from_members(
+            [self.member(s).to_sparse() for s in range(self.size)],
+            capacity=capacity)
 
 
 @dataclasses.dataclass
@@ -296,3 +468,91 @@ class AsyncFleetSchedule(_FleetStack):
             order=jnp.asarray(self.order),
             alphas=jnp.asarray(self.alphas, jnp.float32),
             round_idx=self._round_idx())
+
+
+# ---------------------------------------------------------------------------
+# Sparse fleet stacking: [S, rounds, K] index/role tensors
+# ---------------------------------------------------------------------------
+
+class _SparseFleetStack:
+    """Fleet-major stacking for sparse schedules.  Members may have grown
+    different capacities; stacking re-pads everyone to the fleet max (or an
+    explicit capacity) so the tensors batch."""
+    _MEMBER_CLS = None
+    _SCHEDULE_CLS = None
+
+    @classmethod
+    def from_members(cls, members: list, capacity: Optional[int] = None):
+        if len({(s.m, s.rounds) for s in members}) != 1:
+            raise ValueError('fleet members must share (m, rounds)')
+        m = members[0].m
+        cap = max(s.capacity for s in members) if capacity is None else capacity
+        need = max(s.capacity for s in members)
+        if cap < need:
+            raise ValueError(
+                f'sparse fleet capacity {cap} < member active-set max {need}')
+
+        def pad(a, fill):
+            out = np.full(a.shape[:-1] + (cap,), fill, a.dtype)
+            out[..., :a.shape[-1]] = a
+            return out
+
+        return cls(m=m,
+                   idx=np.stack([pad(s.idx, m) for s in members]),
+                   roles=np.stack([pad(s.roles, 0) for s in members]),
+                   records=[s.records for s in members],
+                   futility=np.array([s.futility for s in members]))
+
+    @property
+    def size(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def rounds(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[2]
+
+    @property
+    def nbytes(self) -> int:
+        return self.idx.nbytes + self.roles.nbytes
+
+    def member(self, s: int):
+        return self._MEMBER_CLS(m=self.m, idx=self.idx[s], roles=self.roles[s],
+                                records=self.records[s],
+                                futility=float(self.futility[s]))
+
+    def to_device(self):
+        return self._SCHEDULE_CLS(
+            idx=jnp.asarray(self.idx), roles=jnp.asarray(self.roles),
+            round_idx=jnp.asarray(np.broadcast_to(
+                np.arange(1, self.rounds + 1, dtype=np.int32),
+                (self.size, self.rounds))))
+
+
+@dataclasses.dataclass
+class SparseFleetSchedule(_SparseFleetStack):
+    """S compact SAFA event processes, fleet-major ([S, rounds, K])."""
+    m: int
+    idx: np.ndarray
+    roles: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    _MEMBER_CLS = SparseSchedule
+    _SCHEDULE_CLS = protocol.SparseRoundSchedule
+
+
+@dataclasses.dataclass
+class SparseSyncFleetSchedule(_SparseFleetStack):
+    """S compact FedAvg/FedCS event processes ([S, rounds, K])."""
+    m: int
+    idx: np.ndarray
+    roles: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    _MEMBER_CLS = SparseSyncSchedule
+    _SCHEDULE_CLS = protocol.SparseSyncSchedule

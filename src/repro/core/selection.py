@@ -129,17 +129,51 @@ def fedavg_select(rng: np.random.Generator, m: int, fraction: float) -> np.ndarr
     return sel
 
 
-def fedavg_select_batch(rngs, m: int, fraction,
-                        rounds: int = 1) -> np.ndarray:
+def fedavg_select_topk(rng: np.random.Generator, m: int, fraction: float,
+                       rounds: int = 1) -> np.ndarray:
+    """Vectorised without-replacement uniform selection: [rounds, quota]
+    sorted client indices.
+
+    One bulk ``rng.random((rounds, m))`` draw; per round the quota clients
+    with the smallest uniforms win — distributionally a uniform
+    without-replacement sample, with no per-round ``Generator.choice``
+    loop.  This is the sparse stream contract (``sampler='topk'``): it
+    emits index lists directly, so sparse schedules never materialise a
+    [rounds, m] mask.  The draw order is row-major, so chunking over
+    rounds consumes the stream identically — which is how this is
+    implemented: rounds are drawn in bounded chunks so peak host memory
+    is O(chunk * m), not O(rounds * m), at million-client populations."""
+    quota = quota_of(fraction, m)
+    chunk = max(1, min(rounds, int(4e6) // max(m, 1) + 1))
+    out = np.empty((rounds, quota), np.int32)
+    for lo in range(0, rounds, chunk):
+        u = rng.random((min(chunk, rounds - lo), m))
+        idx = np.argpartition(u, quota - 1, axis=-1)[:, :quota]
+        out[lo:lo + len(u)] = np.sort(idx, axis=-1)
+    return out
+
+
+def fedavg_select_batch(rngs, m: int, fraction, rounds: int = 1,
+                        sampler: str = 'choice') -> np.ndarray:
     """FedAvg selections for a whole fleet: [S, rounds, m] bool.
 
     ``rngs`` is one ``np.random.Generator`` per member; ``fraction`` is [S]
-    (or a scalar).  Row (s, t) is bit-identical to the t-th sequential
-    ``fedavg_select(rngs[s], m, fraction[s])`` call — the without-replacement
-    draw has no batched Generator form that consumes the stream the same
-    way, so the per-round ``choice()`` calls stay the generator's own; only
-    the quota computation and the mask scatter are batched.
+    (or a scalar).
+
+    ``sampler='choice'`` (default, legacy stream): row (s, t) is
+    bit-identical to the t-th sequential ``fedavg_select(rngs[s], m,
+    fraction[s])`` call — the without-replacement draw has no batched
+    Generator form that consumes the stream the same way, so the per-round
+    ``choice()`` calls stay the generator's own; only the quota computation
+    and the mask scatter are batched.
+
+    ``sampler='topk'`` scatters ``fedavg_select_topk`` rows instead: one
+    bulk uniform draw per member, no per-round loop — the fast path for
+    large populations (its stream differs from 'choice' by design).
     """
+    if sampler not in ('choice', 'topk'):
+        raise ValueError(
+            f"unknown sampler {sampler!r} (want 'choice' or 'topk')")
     s = len(rngs)
     fraction = np.broadcast_to(np.asarray(fraction, float), (s,))
     # np.rint rounds half-to-even exactly like the scalar path's round()
@@ -147,8 +181,11 @@ def fedavg_select_batch(rngs, m: int, fraction,
     sel = np.zeros((s, rounds, m), bool)
     rows = np.arange(rounds)
     for i, rng in enumerate(rngs):
-        idx = np.stack([rng.choice(m, size=quota[i], replace=False)
-                        for _ in range(rounds)])
+        if sampler == 'topk':
+            idx = fedavg_select_topk(rng, m, float(fraction[i]), rounds)
+        else:
+            idx = np.stack([rng.choice(m, size=quota[i], replace=False)
+                            for _ in range(rounds)])
         sel[i, rows[:, None], idx] = True
     return sel
 

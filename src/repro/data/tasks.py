@@ -63,6 +63,22 @@ class SupervisedTask(Task):
         del round_idx  # full-pass SGD; order fixed as in the paper
         return self._train_jit(stacked_params)
 
+    def _train_rows(self, params_rows, rows):
+        return jax.vmap(self._train_one)(params_rows, self._x[rows],
+                                         self._y[rows])
+
+    def local_train_rows(self, params_rows, rows, round_idx):
+        """Sparse-schedule rows-train contract: train only the K replicas
+        in ``params_rows`` on clients ``rows``'s data.  Row for row this is
+        the same ``_train_one`` trace ``local_train`` vmaps over all m, so
+        a trained row is bit-identical to its dense counterpart (sentinel
+        rows gather-clamp to real data; the engine discards their output
+        via role masks)."""
+        del round_idx
+        if '_train_rows_jit' not in self.__dict__:
+            self._train_rows_jit = jax.jit(self._train_rows)
+        return self._train_rows_jit(params_rows, rows)
+
     def evaluate(self, global_params) -> dict:
         loss, acc = self._eval_jit(global_params, self._test_x, self._test_y)
         return {'loss': float(loss), 'acc': float(acc)}

@@ -21,12 +21,16 @@ regression-tested against each other.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.protocol import AggregationResult
+from repro.kernels.backend import INTERPRET
 from repro.kernels.comm_quant import (QBLOCK, dequantize, dequantize_packed,
                                       quantize, quantize_packed,
                                       quantize_packed_fleet)
@@ -34,13 +38,22 @@ from repro.kernels.safa_aggregate import (DEFAULT_TILE, safa_aggregate,
                                           safa_aggregate_packed,
                                           safa_aggregate_packed_fleet,
                                           safa_aggregate_packed_q8,
-                                          safa_aggregate_packed_q8_fleet)
+                                          safa_aggregate_packed_q8_fleet,
+                                          safa_aggregate_packed_q8_rows,
+                                          safa_aggregate_packed_q8_rows_fleet,
+                                          safa_aggregate_packed_rows,
+                                          safa_aggregate_packed_rows_fleet)
 from repro.kernels.swa_attention import swa_attention
 
 __all__ = ['safa_aggregate', 'safa_aggregate_packed',
            'safa_aggregate_packed_fleet', 'safa_aggregate_tree',
            'safa_aggregate_tree_packed', 'safa_aggregate_tree_packed_fleet',
            'safa_aggregate_packed_q8', 'safa_aggregate_packed_q8_fleet',
+           'safa_aggregate_packed_rows', 'safa_aggregate_packed_rows_fleet',
+           'safa_aggregate_packed_q8_rows',
+           'safa_aggregate_packed_q8_rows_fleet',
+           'gather_rows', 'scatter_rows', 'gather_rows_fleet',
+           'scatter_rows_fleet',
            'quantize', 'dequantize', 'quantize_packed', 'dequantize_packed',
            'quantize_packed_fleet', 'safa_compressed_update',
            'wire_roundtrip_packed', 'wire_spec',
@@ -126,7 +139,22 @@ def pack_spec(global_tree, *, pad_to: int = DEFAULT_TILE,
     ``align > 1`` rounds every leaf's slot up to an ``align`` multiple so
     leaf boundaries never share a block — the quantized wire format uses
     ``align=QBLOCK`` so packed per-QBLOCK scales match per-leaf
-    quantisation bit for bit (see ``wire_spec``)."""
+    quantisation bit for bit (see ``wire_spec``).
+
+    ``pad_to`` must be a multiple of ``align``: the final tile padding is
+    itself a run of alignment blocks, so a non-multiple would leave the
+    last quantisation block straddling the buffer end (scales row shorter
+    than the data row) and the kernels' ``n_padded // align`` reshapes
+    would silently misalign."""
+    if pad_to < 1 or align < 1:
+        raise ValueError(
+            f'pack_spec needs pad_to >= 1 and align >= 1, got '
+            f'pad_to={pad_to}, align={align}')
+    if pad_to % align:
+        raise ValueError(
+            f'pad_to={pad_to} is not a multiple of align={align}: the tile '
+            'padding must consist of whole alignment blocks (pick pad_to as '
+            'a multiple of align, or drop the alignment)')
     leaves, treedef = jax.tree_util.tree_flatten(global_tree)
     shapes = tuple(l.shape for l in leaves)
     dtypes = tuple(l.dtype for l in leaves)
@@ -205,6 +233,140 @@ def pack_fleet(tree, spec: PackSpec, *, dtype=jnp.float32):
 def unpack_fleet(buf, spec: PackSpec):
     """[S, m, n_padded] buffer -> fleet-stacked pytree."""
     return _unpack(buf, spec, buf.shape[:2])
+
+
+# ---------------------------------------------------------------------------
+# Rows gather/scatter: the train-side pack path of sparse schedules
+# ---------------------------------------------------------------------------
+#
+# Sparse engines keep the per-client state as one resident [m+1, n_padded]
+# pack buffer (the trailing scratch row absorbs sentinel slots, idx == m)
+# and move only the K = O(quota) active rows per round: ``gather_rows``
+# pulls them out for local training, ``scatter_rows`` writes results back
+# in place (the buffer is aliased to the output, so untouched rows are
+# never copied).  Both use the same scalar-prefetch indexing as the
+# rows-aggregation kernels in ``safa_aggregate``.
+
+
+def _copy_kernel(rows_ref, src_ref, dst_ref):
+    del rows_ref  # consumed by the index maps
+    dst_ref[...] = src_ref[...]
+
+
+def _scatter_kernel(rows_ref, vals_ref, buf_ref, out_ref):
+    del rows_ref, buf_ref  # buf only feeds the output via aliasing
+    out_ref[...] = vals_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def gather_rows(buf, rows, *, tile: int = DEFAULT_TILE):
+    """buf [R, N], rows [K] int32 < R -> [K, N] gathered rows (one
+    dispatch; only K·N elements stream through)."""
+    r, n = buf.shape
+    k = rows.shape[0]
+    if n % tile:
+        raise ValueError(
+            f'packed buffer width {n} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k, n // tile),
+        in_specs=[pl.BlockSpec((1, tile), lambda j, i, rows: (rows[j], i))],
+        out_specs=pl.BlockSpec((1, tile), lambda j, i, rows: (j, i)))
+    return pl.pallas_call(
+        _copy_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, n), buf.dtype),
+        interpret=INTERPRET)(rows.astype(jnp.int32), buf)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=('tile',))
+def scatter_rows(buf, rows, vals, *, tile: int = DEFAULT_TILE):
+    """Write vals [K, N] into buf [R, N] at ``rows`` and return the buffer
+    (donated + aliased: untouched rows stay in place, no [R, N] copy).
+
+    Duplicate row indices write in slot order (last wins); sentinel slots
+    should point at a scratch row (R = m + 1, idx = m) so padding writes
+    land harmlessly."""
+    r, n = buf.shape
+    k = rows.shape[0]
+    if vals.shape != (k, n):
+        raise ValueError(
+            f'vals shape {vals.shape} does not match (K={k}, N={n})')
+    if n % tile:
+        raise ValueError(
+            f'packed buffer width {n} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k, n // tile),
+        in_specs=[pl.BlockSpec((1, tile), lambda j, i, rows: (j, i)),
+                  pl.BlockSpec((1, tile), lambda j, i, rows: (rows[j], i))],
+        out_specs=pl.BlockSpec((1, tile), lambda j, i, rows: (rows[j], i)))
+    return pl.pallas_call(
+        _scatter_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, n), buf.dtype),
+        # operand 0 is the prefetched rows, so buf is input index 2
+        input_output_aliases={2: 0},
+        interpret=INTERPRET)(rows.astype(jnp.int32), vals, buf)
+
+
+def _copy_fleet_kernel(rows_ref, src_ref, dst_ref):
+    del rows_ref
+    dst_ref[...] = src_ref[...]
+
+
+def _scatter_fleet_kernel(rows_ref, vals_ref, buf_ref, out_ref):
+    del rows_ref, buf_ref
+    out_ref[...] = vals_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def gather_rows_fleet(buf, rows, *, tile: int = DEFAULT_TILE):
+    """Fleet variant: buf [S, R, N], rows [S, K] -> [S, K, N]."""
+    s, r, n = buf.shape
+    k = rows.shape[1]
+    if n % tile:
+        raise ValueError(
+            f'packed buffer width {n} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s, k, n // tile),
+        in_specs=[pl.BlockSpec((1, 1, tile),
+                               lambda b, j, i, rows: (b, rows[b, j], i))],
+        out_specs=pl.BlockSpec((1, 1, tile), lambda b, j, i, rows: (b, j, i)))
+    return pl.pallas_call(
+        _copy_fleet_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, k, n), buf.dtype),
+        interpret=INTERPRET)(rows.astype(jnp.int32), buf)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=('tile',))
+def scatter_rows_fleet(buf, rows, vals, *, tile: int = DEFAULT_TILE):
+    """Fleet variant: write vals [S, K, N] into buf [S, R, N] at per-member
+    ``rows`` [S, K] (donated + aliased, like ``scatter_rows``)."""
+    s, r, n = buf.shape
+    k = rows.shape[1]
+    if vals.shape != (s, k, n):
+        raise ValueError(
+            f'vals shape {vals.shape} does not match (S={s}, K={k}, N={n})')
+    if n % tile:
+        raise ValueError(
+            f'packed buffer width {n} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s, k, n // tile),
+        in_specs=[pl.BlockSpec((1, 1, tile), lambda b, j, i, rows: (b, j, i)),
+                  pl.BlockSpec((1, 1, tile),
+                               lambda b, j, i, rows: (b, rows[b, j], i))],
+        out_specs=pl.BlockSpec((1, 1, tile),
+                               lambda b, j, i, rows: (b, rows[b, j], i)))
+    return pl.pallas_call(
+        _scatter_fleet_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, r, n), buf.dtype),
+        input_output_aliases={2: 0},
+        interpret=INTERPRET)(rows.astype(jnp.int32), vals, buf)
 
 
 def safa_aggregate_tree_packed(cache, trained, global_prev, *, picked,

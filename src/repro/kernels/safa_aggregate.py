@@ -39,6 +39,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # CPU containers run the kernel body in interpret mode; on TPU it compiles.
 from repro.kernels.backend import INTERPRET
@@ -370,3 +371,374 @@ def safa_aggregate_packed_q8_fleet(q, scales, base, cache, global_prev,
       col(deprecated.astype(jnp.int32)), col(completed.astype(jnp.int32)),
       col(weights.astype(jnp.float32)))
     return new_global[:, 0], new_cache, new_local
+
+
+# ---------------------------------------------------------------------------
+# Sparse active-set path: rows-indexed Eq. 6-8 deltas
+# ---------------------------------------------------------------------------
+#
+# At production scale only K = O(quota) of the m cache rows change per
+# round.  The rows kernels take the active rows' indices as a *scalar-
+# prefetched* operand (pltpu.PrefetchScalarGridSpec): the grid runs over
+# (N // tile, K) with the slot dim innermost, each program instance
+# gathers its cache row via the index map ``rows[k]`` — only [K, N] of the
+# [m, N] cache ever streams through the kernel — and the Eq. 7 aggregate
+# is maintained as a *delta* on the carried running sum
+# ``agg = sum_k w_k cache_k``:
+#
+#     new_global = agg + sum_k w_k (c1_k - cache_k)     (Eq. 6+7)
+#     new_agg    = new_global + sum_k w_k (c2_k - c1_k) (Eq. 8)
+#
+# The new-global/new-agg output blocks are revisited across the inner k
+# iterations (initialised from agg at k == 0, accumulated after), which is
+# the TPU-friendly consecutive-revisit pattern.  Sentinel slots point at
+# the scratch row of an [m+1, N] buffer (see ``ops.gather_rows``) and
+# carry zero weight, so padding is numerically inert.
+
+
+def _rows_kernel(rows_ref, cache_ref, trained_ref, global_ref, agg_ref,
+                 picked_ref, undrafted_ref, deprecated_ref, weights_ref,
+                 new_global_ref, new_agg_ref, c2_ref):
+    del rows_ref  # consumed by the index maps
+    k = pl.program_id(1)
+    c0 = cache_ref[...].astype(jnp.float32)     # [1, T] — gathered row
+    tr = trained_ref[...].astype(jnp.float32)
+    g = global_ref[...].astype(jnp.float32)
+    p = picked_ref[...] != 0                    # [1, 1]
+    u = undrafted_ref[...] != 0
+    d = deprecated_ref[...] != 0
+    w = weights_ref[...].astype(jnp.float32)
+    c1 = jnp.where(d & ~p, g, c0)               # Eq. 6
+    c1 = jnp.where(p, tr, c1)
+    c2 = jnp.where(u, tr, c1)                   # Eq. 8
+    c2_ref[...] = c2.astype(c2_ref.dtype)
+
+    @pl.when(k == 0)
+    def _():
+        new_global_ref[...] = agg_ref[...]
+        new_agg_ref[...] = agg_ref[...]
+
+    new_global_ref[...] += w * (c1 - c0)        # Eq. 7 as a delta
+    new_agg_ref[...] += w * (c2 - c0)
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed_rows(cache, trained_rows, global_prev, agg, rows,
+                               picked_r, undrafted_r, deprecated_r, w_rows,
+                               *, tile: int = DEFAULT_TILE):
+    """Rows-indexed Eq. 6-8: one dispatch touching only the K active rows.
+
+    cache: [R, N] pack buffer (R = m, or m+1 with a trailing scratch row
+    when ``rows`` uses the sentinel index m); trained_rows: [K, N] (the
+    committed rows' post-wire uploads, base rows elsewhere); global_prev,
+    agg: [N] (agg = the running Eq. 7 sum, f32); rows: [K] int32 < R;
+    picked_r/undrafted_r/deprecated_r: [K] bool per-slot roles; w_rows:
+    [K] f32 aggregation weights (0 at padding slots).
+
+    Returns (new_global [N] f32, new_agg [N] f32, c2_rows [K, N]) — the
+    caller scatters ``c2_rows`` back with ``ops.scatter_rows`` (the
+    untouched cache rows are untouched by construction).
+    """
+    r, np_ = cache.shape
+    k, _ = trained_rows.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    col = lambda arr: arr.reshape(k, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(np_ // tile, k),      # k innermost: agg blocks revisit
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, rows: (rows[j], i)),  # cache
+            pl.BlockSpec((1, tile), lambda i, j, rows: (j, i)),    # trained
+            pl.BlockSpec((1, tile), lambda i, j, rows: (0, i)),    # global
+            pl.BlockSpec((1, tile), lambda i, j, rows: (0, i)),    # agg
+            pl.BlockSpec((1, 1), lambda i, j, rows: (j, 0)),       # picked
+            pl.BlockSpec((1, 1), lambda i, j, rows: (j, 0)),       # undrafted
+            pl.BlockSpec((1, 1), lambda i, j, rows: (j, 0)),       # deprecated
+            pl.BlockSpec((1, 1), lambda i, j, rows: (j, 0)),       # weights
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, rows: (0, i)),
+            pl.BlockSpec((1, tile), lambda i, j, rows: (0, i)),
+            pl.BlockSpec((1, tile), lambda i, j, rows: (j, i)),
+        ])
+    new_global, new_agg, c2 = pl.pallas_call(
+        _rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((k, np_), cache.dtype),
+        ],
+        interpret=INTERPRET,
+    )(rows.astype(jnp.int32), cache, trained_rows,
+      global_prev.reshape(1, -1).astype(jnp.float32),
+      agg.reshape(1, -1).astype(jnp.float32),
+      col(picked_r.astype(jnp.int32)), col(undrafted_r.astype(jnp.int32)),
+      col(deprecated_r.astype(jnp.int32)), col(w_rows.astype(jnp.float32)))
+    return new_global[0], new_agg[0], c2
+
+
+def _q8_rows_kernel(rows_ref, q_ref, scale_ref, base_ref, cache_ref,
+                    global_ref, agg_ref, picked_ref, undrafted_ref,
+                    deprecated_ref, completed_ref, weights_ref,
+                    new_global_ref, new_agg_ref, c2_ref, local_ref):
+    del rows_ref
+    k = pl.program_id(1)
+    _, t = q_ref.shape
+    deq = (q_ref[...].astype(jnp.float32).reshape(1, t // QBLOCK, QBLOCK)
+           * scale_ref[...][:, :, None]).reshape(1, t)
+    tr = jnp.where(completed_ref[...] != 0, deq,
+                   base_ref[...].astype(jnp.float32))
+    local_ref[...] = tr.astype(local_ref.dtype)
+    c0 = cache_ref[...].astype(jnp.float32)
+    g = global_ref[...].astype(jnp.float32)
+    p = picked_ref[...] != 0
+    u = undrafted_ref[...] != 0
+    d = deprecated_ref[...] != 0
+    w = weights_ref[...].astype(jnp.float32)
+    c1 = jnp.where(d & ~p, g, c0)
+    c1 = jnp.where(p, tr, c1)
+    c2 = jnp.where(u, tr, c1)
+    c2_ref[...] = c2.astype(c2_ref.dtype)
+
+    @pl.when(k == 0)
+    def _():
+        new_global_ref[...] = agg_ref[...]
+        new_agg_ref[...] = agg_ref[...]
+
+    new_global_ref[...] += w * (c1 - c0)
+    new_agg_ref[...] += w * (c2 - c0)
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed_q8_rows(q_rows, scales_rows, base_rows, cache,
+                                  global_prev, agg, rows, picked_r,
+                                  undrafted_r, deprecated_r, completed_r,
+                                  w_rows, *, tile: int = DEFAULT_TILE):
+    """int8-wire variant of ``safa_aggregate_packed_rows``: the K active
+    rows' uploads arrive as the wire format (q_rows [K, N] int8 +
+    scales_rows [K, N/QBLOCK] f32) and are dequantised in-register;
+    crashed slots (completed_r False) fall back to base_rows.  Returns
+    (new_global [N] f32, new_agg [N] f32, c2_rows [K, N], local_rows
+    [K, N]) — local_rows is each active client's post-round local model,
+    for the caller to scatter into the local stack."""
+    r, np_ = cache.shape
+    k, _ = q_rows.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    col = lambda arr: arr.reshape(k, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(np_ // tile, k),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, rows: (j, i)),    # q
+            pl.BlockSpec((1, tile // QBLOCK),
+                         lambda i, j, rows: (j, i)),               # scales
+            pl.BlockSpec((1, tile), lambda i, j, rows: (j, i)),    # base
+            pl.BlockSpec((1, tile), lambda i, j, rows: (rows[j], i)),  # cache
+            pl.BlockSpec((1, tile), lambda i, j, rows: (0, i)),    # global
+            pl.BlockSpec((1, tile), lambda i, j, rows: (0, i)),    # agg
+            pl.BlockSpec((1, 1), lambda i, j, rows: (j, 0)),       # picked
+            pl.BlockSpec((1, 1), lambda i, j, rows: (j, 0)),       # undrafted
+            pl.BlockSpec((1, 1), lambda i, j, rows: (j, 0)),       # deprecated
+            pl.BlockSpec((1, 1), lambda i, j, rows: (j, 0)),       # completed
+            pl.BlockSpec((1, 1), lambda i, j, rows: (j, 0)),       # weights
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, rows: (0, i)),
+            pl.BlockSpec((1, tile), lambda i, j, rows: (0, i)),
+            pl.BlockSpec((1, tile), lambda i, j, rows: (j, i)),
+            pl.BlockSpec((1, tile), lambda i, j, rows: (j, i)),
+        ])
+    new_global, new_agg, c2, local = pl.pallas_call(
+        _q8_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((k, np_), cache.dtype),
+            jax.ShapeDtypeStruct((k, np_), cache.dtype),
+        ],
+        interpret=INTERPRET,
+    )(rows.astype(jnp.int32), q_rows, scales_rows, base_rows, cache,
+      global_prev.reshape(1, -1).astype(jnp.float32),
+      agg.reshape(1, -1).astype(jnp.float32),
+      col(picked_r.astype(jnp.int32)), col(undrafted_r.astype(jnp.int32)),
+      col(deprecated_r.astype(jnp.int32)), col(completed_r.astype(jnp.int32)),
+      col(w_rows.astype(jnp.float32)))
+    return new_global[0], new_agg[0], c2, local
+
+
+def _rows_fleet_kernel(rows_ref, cache_ref, trained_ref, global_ref, agg_ref,
+                       picked_ref, undrafted_ref, deprecated_ref, weights_ref,
+                       new_global_ref, new_agg_ref, c2_ref):
+    del rows_ref
+    k = pl.program_id(2)
+    c0 = cache_ref[...][0].astype(jnp.float32)
+    tr = trained_ref[...][0].astype(jnp.float32)
+    g = global_ref[...][0].astype(jnp.float32)
+    p = picked_ref[...][0] != 0
+    u = undrafted_ref[...][0] != 0
+    d = deprecated_ref[...][0] != 0
+    w = weights_ref[...][0].astype(jnp.float32)
+    c1 = jnp.where(d & ~p, g, c0)
+    c1 = jnp.where(p, tr, c1)
+    c2 = jnp.where(u, tr, c1)
+    c2_ref[...] = c2[None].astype(c2_ref.dtype)
+
+    @pl.when(k == 0)
+    def _():
+        new_global_ref[...] = agg_ref[...]
+        new_agg_ref[...] = agg_ref[...]
+
+    new_global_ref[...] += (w * (c1 - c0))[None]
+    new_agg_ref[...] += (w * (c2 - c0))[None]
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed_rows_fleet(cache, trained_rows, global_prev, agg,
+                                     rows, picked_r, undrafted_r,
+                                     deprecated_r, w_rows, *,
+                                     tile: int = DEFAULT_TILE):
+    """Fleet variant of ``safa_aggregate_packed_rows``: cache [S, R, N],
+    trained_rows [S, K, N], global_prev/agg [S, N], rows [S, K], roles/
+    weights [S, K]; grid (S, N // tile, K).  Returns (new_global [S, N]
+    f32, new_agg [S, N] f32, c2_rows [S, K, N])."""
+    s, r, np_ = cache.shape
+    _, k, _ = trained_rows.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    col = lambda arr: arr.reshape(s, k, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s, np_ // tile, k),
+        in_specs=[
+            pl.BlockSpec((1, 1, tile),
+                         lambda b, i, j, rows: (b, rows[b, j], i)),  # cache
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, j, i)),
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, 0, i)),
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, 0, i)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, rows: (b, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, rows: (b, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, rows: (b, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, rows: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, 0, i)),
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, 0, i)),
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, j, i)),
+        ])
+    new_global, new_agg, c2 = pl.pallas_call(
+        _rows_fleet_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((s, 1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((s, k, np_), cache.dtype),
+        ],
+        interpret=INTERPRET,
+    )(rows.astype(jnp.int32), cache, trained_rows,
+      global_prev.reshape(s, 1, np_).astype(jnp.float32),
+      agg.reshape(s, 1, np_).astype(jnp.float32),
+      col(picked_r.astype(jnp.int32)), col(undrafted_r.astype(jnp.int32)),
+      col(deprecated_r.astype(jnp.int32)), col(w_rows.astype(jnp.float32)))
+    return new_global[:, 0], new_agg[:, 0], c2
+
+
+def _q8_rows_fleet_kernel(rows_ref, q_ref, scale_ref, base_ref, cache_ref,
+                          global_ref, agg_ref, picked_ref, undrafted_ref,
+                          deprecated_ref, completed_ref, weights_ref,
+                          new_global_ref, new_agg_ref, c2_ref, local_ref):
+    del rows_ref
+    k = pl.program_id(2)
+    _, _, t = q_ref.shape
+    deq = (q_ref[...][0].astype(jnp.float32).reshape(1, t // QBLOCK, QBLOCK)
+           * scale_ref[...][0][:, :, None]).reshape(1, t)
+    tr = jnp.where(completed_ref[...][0] != 0, deq,
+                   base_ref[...][0].astype(jnp.float32))
+    local_ref[...] = tr[None].astype(local_ref.dtype)
+    c0 = cache_ref[...][0].astype(jnp.float32)
+    g = global_ref[...][0].astype(jnp.float32)
+    p = picked_ref[...][0] != 0
+    u = undrafted_ref[...][0] != 0
+    d = deprecated_ref[...][0] != 0
+    w = weights_ref[...][0].astype(jnp.float32)
+    c1 = jnp.where(d & ~p, g, c0)
+    c1 = jnp.where(p, tr, c1)
+    c2 = jnp.where(u, tr, c1)
+    c2_ref[...] = c2[None].astype(c2_ref.dtype)
+
+    @pl.when(k == 0)
+    def _():
+        new_global_ref[...] = agg_ref[...]
+        new_agg_ref[...] = agg_ref[...]
+
+    new_global_ref[...] += (w * (c1 - c0))[None]
+    new_agg_ref[...] += (w * (c2 - c0))[None]
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed_q8_rows_fleet(q_rows, scales_rows, base_rows, cache,
+                                        global_prev, agg, rows, picked_r,
+                                        undrafted_r, deprecated_r,
+                                        completed_r, w_rows, *,
+                                        tile: int = DEFAULT_TILE):
+    """Fleet variant of ``safa_aggregate_packed_q8_rows`` (operands gain a
+    leading fleet axis, grid (S, N // tile, K)).  Returns (new_global
+    [S, N] f32, new_agg [S, N] f32, c2_rows [S, K, N], local_rows
+    [S, K, N])."""
+    s, r, np_ = cache.shape
+    _, k, _ = q_rows.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    col = lambda arr: arr.reshape(s, k, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s, np_ // tile, k),
+        in_specs=[
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, j, i)),
+            pl.BlockSpec((1, 1, tile // QBLOCK),
+                         lambda b, i, j, rows: (b, j, i)),
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, j, i)),
+            pl.BlockSpec((1, 1, tile),
+                         lambda b, i, j, rows: (b, rows[b, j], i)),  # cache
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, 0, i)),
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, 0, i)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, rows: (b, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, rows: (b, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, rows: (b, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, rows: (b, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, rows: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, 0, i)),
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, 0, i)),
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, j, i)),
+            pl.BlockSpec((1, 1, tile), lambda b, i, j, rows: (b, j, i)),
+        ])
+    new_global, new_agg, c2, local = pl.pallas_call(
+        _q8_rows_fleet_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((s, 1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((s, k, np_), cache.dtype),
+            jax.ShapeDtypeStruct((s, k, np_), cache.dtype),
+        ],
+        interpret=INTERPRET,
+    )(rows.astype(jnp.int32), q_rows, scales_rows, base_rows, cache,
+      global_prev.reshape(s, 1, np_).astype(jnp.float32),
+      agg.reshape(s, 1, np_).astype(jnp.float32),
+      col(picked_r.astype(jnp.int32)), col(undrafted_r.astype(jnp.int32)),
+      col(deprecated_r.astype(jnp.int32)), col(completed_r.astype(jnp.int32)),
+      col(w_rows.astype(jnp.float32)))
+    return new_global[:, 0], new_agg[:, 0], c2, local

@@ -20,12 +20,12 @@ EXPECTED_ALL = {
 
 SPEC_FIELDS = {
     'SafaSpec': ('fraction', 'lag_tolerance', 'quantize_uploads'),
-    'FedAvgSpec': ('fraction',),
+    'FedAvgSpec': ('fraction', 'sampler'),
     'FedCSSpec': ('fraction',),
     'LocalSpec': ('fraction',),
     'FedAsyncSpec': ('alpha', 'staleness_exp'),
-    'ExecSpec': ('engine', 'wire', 'use_kernel', 'shard', 'eval_every',
-                 'numeric'),
+    'ExecSpec': ('engine', 'wire', 'use_kernel', 'schedule', 'shard',
+                 'eval_every', 'numeric'),
     'SweepSpec': ('members', 'tasks'),
     'SweepMember': ('env', 'fraction', 'lag_tolerance', 'seed', 'alpha',
                     'staleness_exp'),

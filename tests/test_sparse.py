@@ -1,0 +1,408 @@
+"""Sparse active-set schedules: the sparse==dense contracts.
+
+Four layers under test:
+
+* event streams — ``form='sparse'`` precomputes equal the dense
+  precompute's ``.to_sparse()`` exactly; ``to_dense`` round-trips every
+  mask (round 1's population-wide bootstrap sync is elided by design);
+* engines — ``schedule='sparse'`` is *bit-identical* to dense across
+  {safa, fedavg, fedcs} x {scan, loop} x {f32, int8} x {single, fleet};
+  ``schedule='sparse_delta'`` (running-aggregate / stateless forms,
+  including the packed kernels) is allclose;
+* kernels — gather/scatter rows and the fused rows-aggregate kernels
+  against numpy oracles, including sentinel-slot semantics;
+* memory — quota-bounded schedules and stateless carries at m=10_000.
+
+The environments here must be NON-degenerate (clients actually commit):
+a too-small ``t_lim`` silences every mask and turns the identity
+assertions vacuous.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, federation, protocol, selection
+from repro.data import make_regression, partition
+from repro.data.tasks import regression_task
+from repro.fedsim import FLEnv
+from repro.kernels import ops
+
+M = 24
+BASE = dict(m=M, crash_prob=0.3, dataset_size=480, batch_size=10,
+            epochs=1, t_lim=200.0, seed=3)
+
+
+def _env(**kw):
+    base = dict(BASE)
+    base.update(kw)
+    return FLEnv(**base)
+
+
+@pytest.fixture(scope='module')
+def reg_task():
+    x, y = make_regression()
+    data = partition(x, y, _env().partition_sizes, 5, seed=1)
+    return regression_task(data, lr=1e-3, epochs=3)
+
+
+def _run(task, proto, proto_kw, exec_kw, rounds=8):
+    return api.Experiment(task, _env(), api.spec(proto, **proto_kw),
+                          api.ExecSpec(**exec_kw), rounds=rounds,
+                          seed=0).compile().run()
+
+
+def _trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _trees_close(a, b, **kw):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Event-stream equality
+# ---------------------------------------------------------------------------
+
+class TestEventStreams:
+    def test_safa_sparse_form_equals_dense_to_sparse(self):
+        d = federation.precompute_safa_schedule(
+            _env(), fraction=0.3, lag_tolerance=2, rounds=10)
+        s = federation.precompute_safa_schedule(
+            _env(), fraction=0.3, lag_tolerance=2, rounds=10, form='sparse')
+        t = d.to_sparse()
+        np.testing.assert_array_equal(s.idx, t.idx)
+        np.testing.assert_array_equal(s.roles, t.roles)
+        assert s.records[-1].round_len == d.records[-1].round_len
+        assert s.futility == d.futility
+
+    def test_sync_sparse_form_equals_dense_to_sparse(self):
+        for fedcs in (False, True):
+            d = federation.precompute_sync_schedule(
+                _env(), fraction=0.3, rounds=10, seed=0, fedcs=fedcs)
+            s = federation.precompute_sync_schedule(
+                _env(), fraction=0.3, rounds=10, seed=0, fedcs=fedcs,
+                form='sparse')
+            t = d.to_sparse()
+            np.testing.assert_array_equal(s.idx, t.idx)
+            np.testing.assert_array_equal(s.roles, t.roles)
+
+    def test_safa_to_dense_roundtrip(self):
+        d = federation.precompute_safa_schedule(
+            _env(), fraction=0.3, lag_tolerance=2, rounds=10)
+        r = d.to_sparse().to_dense()
+        # round 1's bootstrap sync (everyone holds w(0)) is elided: the
+        # reconstruction recovers the active clients only
+        np.testing.assert_array_equal(r.sync[1:], d.sync[1:])
+        assert not r.sync[0][~(d.committed[0] | d.picked[0]
+                               | d.undrafted[0] | d.deprecated[0])].any()
+        for f in ('committed', 'picked', 'undrafted', 'deprecated'):
+            np.testing.assert_array_equal(getattr(r, f), getattr(d, f))
+
+    def test_bootstrap_round_has_no_sync_only_rows(self):
+        s = federation.precompute_safa_schedule(
+            _env(), fraction=0.3, lag_tolerance=5, rounds=6, form='sparse')
+        r0 = s.roles[0][s.idx[0] < M]
+        assert not np.any(r0 == protocol.ROLE_SYNC)
+
+    def test_explicit_capacity_too_small_raises(self):
+        d = federation.precompute_safa_schedule(
+            _env(), fraction=0.5, lag_tolerance=2, rounds=6)
+        with pytest.raises(ValueError, match='capacity'):
+            d.to_sparse(capacity=1)
+
+
+# ---------------------------------------------------------------------------
+# Engine bit-identity: sparse == dense
+# ---------------------------------------------------------------------------
+
+class TestSparseBitIdentity:
+    CASES = [
+        ('safa', dict(fraction=0.3, lag_tolerance=2), 'scan', 'f32'),
+        ('safa', dict(fraction=0.3, lag_tolerance=2), 'loop', 'f32'),
+        ('safa', dict(fraction=0.3, lag_tolerance=30), 'scan', 'int8'),
+        ('fedavg', dict(fraction=0.3), 'scan', 'f32'),
+        ('fedavg', dict(fraction=0.3, sampler='topk'), 'loop', 'f32'),
+        ('fedavg', dict(fraction=0.3), 'scan', 'int8'),
+        ('fedcs', dict(fraction=0.3), 'scan', 'f32'),
+    ]
+
+    @pytest.mark.parametrize('proto,kw,engine,wire', CASES)
+    def test_single(self, reg_task, proto, kw, engine, wire):
+        ex = dict(engine=engine, wire=wire, eval_every=4)
+        hd = _run(reg_task, proto, kw, dict(ex, schedule='dense'))
+        hs = _run(reg_task, proto, kw, dict(ex, schedule='sparse'))
+        _trees_equal(hd.final_global, hs.final_global)
+        assert hd.best_eval == hs.best_eval
+
+    @pytest.mark.parametrize('proto,kw', [
+        ('safa', dict(lag_tolerance=2)), ('fedavg', {})])
+    def test_fleet(self, reg_task, proto, kw):
+        def members():
+            return [federation.SweepMember(env=_env(), fraction=f, **kw)
+                    for f in (0.3, 0.5)]
+        def sweep(schedule):
+            exp = api.Experiment(
+                reg_task, _env(), api.spec(proto, fraction=0.3, **kw),
+                api.ExecSpec(engine='fleet', schedule=schedule,
+                             eval_every=4), rounds=8, seed=0)
+            return exp.compile().run_sweep(members())
+        hd, hs = sweep('dense'), sweep('sparse')
+        for a, b in zip(hd, hs):
+            _trees_equal(a.final_global, b.final_global)
+            assert a.best_eval == b.best_eval
+
+    def test_sequential_sweep(self, reg_task):
+        def members():
+            return [federation.SweepMember(env=_env(), fraction=0.3,
+                                           lag_tolerance=2)]
+        def sweep(schedule):
+            exp = api.Experiment(
+                reg_task, _env(), api.spec('safa', fraction=0.3),
+                api.ExecSpec(engine='sequential', schedule=schedule,
+                             eval_every=4), rounds=8, seed=0)
+            return exp.compile().run_sweep(members())
+        hd, hs = sweep('dense'), sweep('sparse')
+        _trees_equal(hd[0].final_global, hs[0].final_global)
+
+
+# ---------------------------------------------------------------------------
+# sparse_delta: allclose to dense (running-aggregate / stateless forms)
+# ---------------------------------------------------------------------------
+
+class TestSparseDelta:
+    TOL = dict(rtol=2e-5, atol=2e-6)
+
+    @pytest.mark.parametrize('proto,kw,engine', [
+        ('safa', dict(fraction=0.3, lag_tolerance=2), 'scan'),
+        ('safa', dict(fraction=0.3, lag_tolerance=2), 'loop'),
+        ('fedavg', dict(fraction=0.3), 'scan'),
+        ('fedcs', dict(fraction=0.3), 'scan'),
+    ])
+    def test_tree_engines(self, reg_task, proto, kw, engine):
+        ex = dict(engine=engine, eval_every=4)
+        hd = _run(reg_task, proto, kw, dict(ex, schedule='dense'))
+        hs = _run(reg_task, proto, kw, dict(ex, schedule='sparse_delta'))
+        _trees_close(hd.final_global, hs.final_global, **self.TOL)
+
+    @pytest.mark.parametrize('wire', ['f32', 'int8'])
+    def test_safa_packed(self, reg_task, wire):
+        kw = dict(fraction=0.3, lag_tolerance=2)
+        hd = _run(reg_task, 'safa', kw,
+                  dict(engine='scan', wire=wire, eval_every=4,
+                       schedule='dense'))
+        hp = _run(reg_task, 'safa', kw,
+                  dict(engine='scan', wire=wire, eval_every=4,
+                       schedule='sparse_delta', use_kernel='packed'))
+        tol = dict(rtol=2e-2, atol=2e-2) if wire == 'int8' else self.TOL
+        _trees_close(hd.final_global, hp.final_global, **tol)
+
+    def test_fedavg_stateless_carry(self, reg_task):
+        """The stateless sparse_delta carry never materialises the
+        [m, ...] local stack."""
+        exp = api.Experiment(reg_task, _env(), api.spec('fedavg', fraction=0.3),
+                             api.ExecSpec(schedule='sparse_delta'),
+                             rounds=4, seed=0)
+        r = exp.compile()
+        from repro.core.api import _init_state
+        st = _init_state(exp.task, M, 0, r._pdef.uses_cache,
+                         r._stateless(exp.exec))
+        assert st.local_w is None and st.cache is None
+        h = r.run()
+        assert np.isfinite(h.best_eval['loss'])
+
+
+# ---------------------------------------------------------------------------
+# check_compat gating
+# ---------------------------------------------------------------------------
+
+class TestCompat:
+    def test_unknown_schedule(self):
+        with pytest.raises(ValueError, match='schedule'):
+            api.check_compat(api.SafaSpec(), api.ExecSpec(schedule='csr'))
+
+    def test_sparse_needs_sparse_precompute(self):
+        with pytest.raises(ValueError, match='sparse'):
+            api.check_compat(api.LocalSpec(), api.ExecSpec(schedule='sparse'))
+
+    def test_sparse_rejects_quantize_uploads(self):
+        with pytest.raises(ValueError, match='quantize_uploads'):
+            api.check_compat(api.SafaSpec(quantize_uploads=True),
+                             api.ExecSpec(schedule='sparse'))
+
+    def test_sparse_delta_rejects_plain_kernel(self):
+        with pytest.raises(ValueError, match='use_kernel'):
+            api.check_compat(api.SafaSpec(),
+                             api.ExecSpec(schedule='sparse_delta',
+                                          use_kernel=True))
+
+    def test_bad_sampler(self):
+        with pytest.raises(ValueError, match='sampler'):
+            api.check_compat(api.FedAvgSpec(sampler='bogus'), api.ExecSpec())
+
+
+# ---------------------------------------------------------------------------
+# Samplers
+# ---------------------------------------------------------------------------
+
+class TestTopkSampler:
+    def test_shape_and_uniqueness(self):
+        idx = selection.fedavg_select_topk(
+            np.random.default_rng(0), 1000, 0.05, rounds=7)
+        assert idx.shape == (7, 50) and idx.dtype == np.int32
+        for t in range(7):
+            assert len(set(idx[t].tolist())) == 50
+            assert idx[t].min() >= 0 and idx[t].max() < 1000
+        assert not np.array_equal(idx[0], idx[1])
+
+    def test_chunking_keeps_stream(self):
+        """Row-major draws mean the chunked implementation consumes the
+        generator exactly like one bulk (rounds, m) draw."""
+        rng = np.random.default_rng(7)
+        u = rng.random((9, 40))
+        want = np.sort(np.argpartition(u, 11, axis=-1)[:, :12], axis=-1)
+        got = selection.fedavg_select_topk(
+            np.random.default_rng(7), 40, 0.3, rounds=9)
+        np.testing.assert_array_equal(got, want.astype(np.int32))
+
+    def test_sampler_reaches_schedule(self):
+        a = federation.precompute_sync_schedule(
+            _env(), fraction=0.3, rounds=6, seed=0, fedcs=False,
+            form='sparse', sampler='topk')
+        b = federation.precompute_sync_schedule(
+            _env(), fraction=0.3, rounds=6, seed=0, fedcs=False,
+            form='sparse', sampler='choice')
+        assert not np.array_equal(a.idx, b.idx)
+
+
+# ---------------------------------------------------------------------------
+# Kernels: gather/scatter rows + fused rows-aggregate, vs numpy oracles
+# ---------------------------------------------------------------------------
+
+class TestRowsKernels:
+    def _buf(self, rng, r, n):
+        return jnp.asarray(rng.standard_normal((r, n)).astype(np.float32))
+
+    def test_gather_scatter_roundtrip(self):
+        rng = np.random.default_rng(0)
+        m, n, tile = 37, 512, 256
+        buf = self._buf(rng, m + 1, n)
+        rows = jnp.asarray(np.array([3, 9, 14, m, 2], np.int32))
+        got = ops.gather_rows(buf, rows, tile=tile)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(buf)[np.asarray(rows)])
+        vals = self._buf(rng, 5, n)
+        want = np.asarray(buf).copy()           # snapshot: buf is donated
+        want[np.asarray(rows)] = np.asarray(vals)   # sentinel -> scratch row
+        out = ops.scatter_rows(buf, rows, vals, tile=tile)
+        np.testing.assert_array_equal(np.asarray(out), want)
+
+    def test_gather_scatter_fleet(self):
+        rng = np.random.default_rng(1)
+        s, m, n, k, tile = 3, 21, 256, 4, 256
+        buf = self._buf(rng, s * (m + 1), n).reshape(s, m + 1, n)
+        rows = jnp.asarray(rng.integers(0, m + 1, (s, k)).astype(np.int32))
+        got = ops.gather_rows_fleet(buf, rows, tile=tile)
+        want = np.stack([np.asarray(buf)[b][np.asarray(rows)[b]]
+                         for b in range(s)])
+        np.testing.assert_array_equal(np.asarray(got), want)
+        vals = self._buf(rng, s * k, n).reshape(s, k, n)
+        want = np.asarray(buf).copy()           # snapshot: buf is donated
+        for b in range(s):
+            want[b][np.asarray(rows)[b]] = np.asarray(vals)[b]
+        out = ops.scatter_rows_fleet(buf, rows, vals, tile=tile)
+        np.testing.assert_array_equal(np.asarray(out), want)
+
+    def test_tile_mismatch_raises(self):
+        buf = jnp.zeros((4, 300), jnp.float32)
+        with pytest.raises(ValueError, match='pad_to'):
+            ops.gather_rows(buf, jnp.zeros((2,), jnp.int32), tile=256)
+
+    def test_rows_aggregate_oracle(self):
+        rng = np.random.default_rng(2)
+        m, n, k, tile = 13, 512, 6, 256
+        cache = rng.standard_normal((m + 1, n)).astype(np.float32)
+        trained = rng.standard_normal((k, n)).astype(np.float32)
+        gprev = rng.standard_normal(n).astype(np.float32)
+        agg = rng.standard_normal(n).astype(np.float32)
+        rows = np.array([1, 5, 7, m, 2, 9], np.int32)
+        pick = np.array([1, 0, 1, 0, 0, 1], bool)
+        und = np.array([0, 1, 0, 0, 0, 0], bool)
+        dep = np.array([0, 0, 0, 0, 1, 0], bool)
+        w = np.where(rows < m, rng.random(k).astype(np.float32), 0.0)
+
+        ng, na, c2 = ops.safa_aggregate_packed_rows(
+            jnp.asarray(cache), jnp.asarray(trained), jnp.asarray(gprev),
+            jnp.asarray(agg), jnp.asarray(rows), jnp.asarray(pick),
+            jnp.asarray(und), jnp.asarray(dep), jnp.asarray(w), tile=tile)
+
+        c0 = cache[rows]                       # sentinel gathers scratch row
+        c1 = np.where(pick[:, None], trained,
+                      np.where(dep[:, None], gprev[None], c0))
+        ng_w = agg + (w[:, None] * (c1 - c0)).sum(0)
+        c2_w = np.where(und[:, None], trained, c1)
+        na_w = ng_w + (w[:, None] * (c2_w - c1)).sum(0)
+        np.testing.assert_allclose(np.asarray(ng), ng_w, rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(na), na_w, rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(c2), c2_w, rtol=1e-6,
+                                   atol=0)
+
+
+# ---------------------------------------------------------------------------
+# pack_spec validation
+# ---------------------------------------------------------------------------
+
+class TestPackSpecValidation:
+    def test_rejects_non_positive(self):
+        tree = {'w': jnp.zeros((8,), jnp.float32)}
+        with pytest.raises(ValueError, match='pad_to'):
+            ops.pack_spec(tree, pad_to=0)
+        with pytest.raises(ValueError, match='align'):
+            ops.pack_spec(tree, pad_to=128, align=0)
+
+    def test_rejects_misaligned_pad(self):
+        tree = {'w': jnp.zeros((8,), jnp.float32)}
+        with pytest.raises(ValueError, match='multiple'):
+            ops.pack_spec(tree, pad_to=100, align=64)
+
+
+# ---------------------------------------------------------------------------
+# Memory: quota-bounded schedules at m=10_000
+# ---------------------------------------------------------------------------
+
+class TestMemorySmoke:
+    def test_quota_bounded_schedule_and_state(self):
+        from benchmarks.scale import ScaleTask, make_scale_env
+        m, quota, rounds = 10_000, 20, 6
+        env = make_scale_env(m, quota)
+        s = federation.precompute_safa_schedule(
+            env, fraction=quota / m, lag_tolerance=10 * rounds,
+            rounds=rounds, form='sparse')
+        # active set ~2.5*quota by regime construction, never O(m)
+        assert s.capacity <= 4 * quota
+        assert s.nbytes <= rounds * 4 * quota * 5
+        dense_bytes = rounds * m * 5    # five [rounds, m] bool masks
+        assert s.nbytes < dense_bytes / 50
+
+        # stateless fedavg sparse_delta at m=10_000: O(d) resident state
+        env2 = make_scale_env(m, quota, bound_active=False)
+        exp = api.Experiment(
+            ScaleTask(), env2, api.spec('fedavg', fraction=quota / m,
+                                        sampler='topk'),
+            api.ExecSpec(schedule='sparse_delta', eval_every=rounds),
+            rounds=rounds, seed=0)
+        r = exp.compile()
+        from repro.core.api import _init_state
+        st = _init_state(exp.task, m, 0, r._pdef.uses_cache,
+                         r._stateless(exp.exec))
+        state_bytes = sum(getattr(l, 'nbytes', 0)
+                          for l in jax.tree.leaves(st.tree()))
+        assert state_bytes < 10_000          # D floats, not m*D
+        h = r.run()
+        assert np.isfinite(h.best_eval['loss'])
