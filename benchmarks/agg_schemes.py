@@ -1,0 +1,125 @@
+"""Aggregation-family shoot-out: every staleness-adaptive scheme in ONE
+fleet dispatch.
+
+    PYTHONPATH=src python -m benchmarks.agg_schemes [--smoke] [--json F]
+
+The weighted-merge lowering makes the scheme *data*, not trace: SEAFL
+(plain / loss-term / hinge-discount), CSAFL (2 and 4 clusters), folded
+FedAsync, and a constant-discount ablation all ride one
+``run_sweep(engine='fleet')`` call as members of a single ``SeaflSpec``
+umbrella experiment, differing only in their ``SweepMember.overrides``.
+Every member is built on a same-seed env, so all schemes replay the SAME
+crash/arrival event stream — the comparison isolates the aggregation
+rule from the luck of the draws.
+
+Emits one CSV row per scheme (final eval loss) plus the fleet's
+aggregate rounds/sec, and — with ``--json`` — writes the per-scheme eval
+trajectories to ``BENCH_agg_schemes.json`` for the CI artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from benchmarks.common import Timer, emit
+from repro import api
+from repro.data import make_regression, partition
+from repro.data.tasks import regression_task
+from repro.fedsim import FLEnv
+
+ROUNDS = 60
+BASE = dict(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
+            t_lim=830.0, seed=3)
+
+#: scheme name -> SweepMember overrides on the SeaflSpec umbrella (None ==
+#: the umbrella spec's own defaults).
+SCHEMES = {
+    'seafl': None,
+    'seafl_loss': {'use_loss': True},
+    'seafl_hinge': {'staleness_fn': 'hinge', 'hinge_b': 1},
+    'seafl_constant': {'staleness_fn': 'constant'},
+    'csafl_k2': {'scheme': 'csafl', 'clusters': 2},
+    'csafl_k4': {'scheme': 'csafl', 'clusters': 4},
+    'fedasync_fold': {'scheme': 'fedasync'},
+}
+
+
+def _quickstart_task():
+    env = FLEnv(**BASE)
+    x, y = make_regression()
+    data = partition(x, y, env.partition_sizes, batch_size=5, seed=1)
+    return regression_task(data, lr=1e-3, epochs=3)
+
+
+def _members():
+    """One member per scheme — fresh same-seed envs (the precompute
+    consumes each env's rng), so every scheme sees identical event
+    draws."""
+    return [api.SweepMember(env=FLEnv(**BASE), overrides=ov)
+            for ov in SCHEMES.values()]
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                   # warm the jit caches
+    times = []
+    for _ in range(reps):
+        with Timer() as t:
+            fn()
+        times.append(t.dt)
+    return min(times)
+
+
+def run(rounds: int = ROUNDS, reps: int = 3,
+        json_path: str | None = None) -> dict:
+    task = _quickstart_task()
+    ex = api.ExecSpec(engine='fleet', eval_every=max(1, rounds // 4))
+    exp = api.Experiment(task, FLEnv(**BASE), api.SeaflSpec(), ex,
+                         rounds=rounds)
+
+    def sweep():
+        hists = exp.compile().run_sweep(_members())
+        jax.block_until_ready(hists[-1].final_global)
+        return hists
+
+    sec = _time(sweep, reps)
+    hists = sweep()
+    total_rounds = len(SCHEMES) * rounds
+    emit('agg_schemes/fleet/rounds_per_sec', f'{total_rounds / sec:.1f}',
+         f'sec_per_sweep={sec:.3f};S={len(SCHEMES)};rounds={rounds}')
+
+    out = {'rounds': rounds, 'm': BASE['m'], 'engine': 'fleet',
+           'sec_per_sweep': sec, 'schemes': []}
+    for name, hist in zip(SCHEMES, hists):
+        evals = [(r, e['loss']) for r, e in hist.evals()]
+        emit(f'agg_schemes/{name}/final_loss', f'{evals[-1][1]:.6f}',
+             f'best={hist.best_eval["loss"]:.6f};rounds={rounds}')
+        out['schemes'].append({'name': name,
+                               'overrides': SCHEMES[name],
+                               'final_loss': evals[-1][1],
+                               'best_loss': hist.best_eval['loss'],
+                               'evals': evals})
+    if json_path:
+        with open(json_path, 'w') as f:
+            json.dump(out, f, indent=1)
+        print(f'# wrote {json_path}', flush=True)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--smoke', action='store_true',
+                    help='tiny-parameter CI pass (6 rounds, 1 rep)')
+    ap.add_argument('--json', default=None, metavar='FILE',
+                    help='write per-scheme eval trajectories '
+                         '(e.g. BENCH_agg_schemes.json)')
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run(rounds=6, reps=1, json_path=args.json)
+    else:
+        run(json_path=args.json)
+
+
+if __name__ == '__main__':
+    main()

@@ -15,9 +15,10 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (accuracy, bias_curves, comm_path, eur, kernels_bench,
-                        lag_tolerance, roofline_table, round_engine,
-                        round_length, selection_ablation, sr_futility)
+from benchmarks import (accuracy, agg_schemes, bias_curves, comm_path, eur,
+                        kernels_bench, lag_tolerance, roofline_table,
+                        round_engine, round_length, selection_ablation,
+                        sr_futility)
 
 SECTIONS = {
     'round_length': lambda full: (round_length.run(), round_length.summarize()),
@@ -29,6 +30,8 @@ SECTIONS = {
     'bias': lambda full: bias_curves.run(),
     'eur': lambda full: eur.run(),
     'selection_ablation': lambda full: selection_ablation.run(),
+    'agg_schemes': lambda full: agg_schemes.run(
+        json_path='BENCH_agg_schemes.json'),
     'kernels': lambda full: kernels_bench.run(),
     'roofline': lambda full: roofline_table.run(),
     # imported lazily: fleet_sweep forces one XLA host device per core at
@@ -59,6 +62,10 @@ SMOKE_SECTIONS = {
     # path on every run, so the smoke pass is also a regression guard
     'comm_path': lambda: comm_path.run(rounds=4, reps=1),
     'eur': lambda: eur.run(rounds=3),
+    # one fleet dispatch over the whole aggregation family; the JSON is
+    # the BENCH_agg_schemes.json CI artifact
+    'agg_schemes': lambda: agg_schemes.run(
+        rounds=6, reps=1, json_path='BENCH_agg_schemes.json'),
     'fleet_sweep': lambda: __import__(
         'benchmarks.fleet_sweep', fromlist=['run']).run(rounds=6, s=4,
                                                         reps=1),

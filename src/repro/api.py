@@ -1,13 +1,22 @@
 """Public experiment API — the single entry point for running protocols.
 
 Declarative specs (``SafaSpec``/``FedAvgSpec``/``FedCSSpec``/``LocalSpec``/
-``FedAsyncSpec`` + ``ExecSpec``) feed the ``PROTOCOLS`` registry, and
-``Experiment(...).compile()`` returns a ``CompiledRunner`` with
-checkpoint/resume-capable ``run()`` / ``run_sweep(members)``.  See
-``docs/ARCHITECTURE.md`` ("The API layer") for the full tour; the
-implementation lives in ``repro.core.api``.
+``FedAsyncSpec``/``SeaflSpec``/``CsaflSpec`` + ``ExecSpec``) feed the
+``PROTOCOLS`` registry, and ``Experiment(...).compile()`` returns a
+``CompiledRunner`` with checkpoint/resume-capable ``run()`` /
+``run_sweep(members)``.  See ``docs/ARCHITECTURE.md`` ("The API layer")
+for the full tour; the implementation lives in ``repro.core.api``, with
+the staleness-adaptive aggregation family (SEAFL/CSAFL/FedAsync
+discounts) registered from ``repro.core.agg_schemes``.
 """
 from repro.core import api as _impl
 from repro.core.api import *  # noqa: F401,F403
+# importing the module registers the SEAFL/CSAFL protocol defs
+from repro.core.agg_schemes import (  # noqa: F401
+    CsaflSpec, SeaflSpec, WEIGHTED_SCHEMES, precompute_weighted_schedule,
+    staleness_discount)
 
-__all__ = list(_impl.__all__)
+__all__ = list(_impl.__all__) + [
+    'CsaflSpec', 'SeaflSpec', 'WEIGHTED_SCHEMES',
+    'precompute_weighted_schedule', 'staleness_discount',
+]

@@ -1,0 +1,400 @@
+"""Staleness-adaptive aggregation family: discount functions, weighted
+precomputes, and the SEAFL/CSAFL protocol registrations.
+
+The family generalises FedAsync's merge-per-arrival mixing into *data*:
+every scheme here reduces, on the host, to per-round effective merge
+weights — either the [rounds, m] alpha tensors of the sequential-merge
+engine (``precompute_async_schedule``) or the one-shot weight rows of the
+weighted-merge engine (``precompute_weighted_schedule``) — which the
+existing compiled scan/fleet engines replay unchanged.  ``federation.py``
+is never touched: the new protocols plug in through ``api.register``.
+
+Schemes
+-------
+
+* **FedAsync discounts** (Xie et al., via ``FedAsyncSpec.staleness_fn``):
+  s(dt) in ``api.STALENESS_FNS`` scales the base alpha per commit;
+  ``'poly'`` reproduces the legacy schedule bit-for-bit.
+* **SEAFL-style adaptive weights** (``SeaflSpec``): one merge per round,
+  each committed client weighted by its data share x staleness discount
+  (optionally x a loss-term proxy), normalised over the committed set and
+  scaled by alpha.
+* **CSAFL-style clustered semi-async** (``CsaflSpec``): clients are
+  clustered host-side by timing profile (``selection.cluster_by_profile``
+  on ``FLEnv.full_train_time()``); each cluster sub-aggregates its commits
+  by data share x per-client discount, and the cluster blends into the
+  global model under its own rounds-since-last-merge discount.  The
+  cluster masks lower to ordinary weight rows, so the packed merge kernel
+  executes the per-cluster sub-aggregates as masked sub-sums of one
+  launch.
+* **Folded FedAsync** (``scheme='fedasync'`` via ``SweepMember.overrides``):
+  the sequential arrival-ordered merge chain folded into closed-form
+  effective weights (suffix products in float64), so a FedAsync member can
+  ride in the same weighted fleet as SEAFL/CSAFL members.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import federation, protocol, schedules, selection
+from repro.core.api import (STALENESS_FNS, ProtocolDef, ProtocolSpec,
+                            register)
+from repro.core.schedules import RoundRecord
+
+__all__ = [
+    'CsaflSpec', 'SeaflSpec', 'WEIGHTED_SCHEMES', 'async_kwargs',
+    'precompute_async_schedule', 'precompute_weighted_schedule',
+    'staleness_discount', 'weighted_kwargs',
+]
+
+#: weight-row builders of ``precompute_weighted_schedule``.  The scheme is
+#: data, not trace: members of one fleet sweep may mix schemes via
+#: ``SweepMember.overrides={'scheme': ...}``.
+WEIGHTED_SCHEMES = ('seafl', 'csafl', 'fedasync')
+
+
+# ---------------------------------------------------------------------------
+# Discount functions
+# ---------------------------------------------------------------------------
+
+def staleness_discount(staleness, fn: str = 'poly', *,
+                       staleness_exp: float = 0.5, hinge_a: float = 10.0,
+                       hinge_b: int = 4) -> np.ndarray:
+    """Elementwise staleness discount s(dt) in (0, 1] (host numpy).
+
+    ``'constant'`` -> 1; ``'poly'`` -> (1+dt)^(-staleness_exp);
+    ``'hinge'`` -> 1 while dt <= hinge_b, then 1/(hinge_a*(dt-hinge_b)),
+    clamped to 1 so the discount never *amplifies* an update (the raw
+    hinge exceeds 1 for dt just past the knee when hinge_a < 1/(dt-b))."""
+    s = np.asarray(staleness, dtype=float)
+    if fn == 'constant':
+        return np.ones_like(s)
+    if fn == 'poly':
+        return (1.0 + s) ** (-staleness_exp)
+    if fn == 'hinge':
+        with np.errstate(divide='ignore'):
+            tail = 1.0 / (hinge_a * (s - hinge_b))
+        return np.where(s <= hinge_b, 1.0, np.minimum(1.0, tail))
+    raise ValueError(
+        f'unknown staleness_fn {fn!r} (want one of {STALENESS_FNS})')
+
+
+def _apply_member(kw: dict, mem) -> dict:
+    """Member hyper columns, then ``mem.overrides``, on top of the spec
+    defaults.  Unknown override keys are rejected here — at precompute
+    time — so a typo'd sweep fails before any device work."""
+    kw['alpha'] = mem.alpha
+    kw['staleness_exp'] = mem.staleness_exp
+    if mem.overrides:
+        unknown = sorted(set(mem.overrides) - set(kw))
+        if unknown:
+            raise ValueError(
+                f'unknown member override keys {unknown}; this precompute '
+                f'takes {sorted(kw)}')
+        kw.update(mem.overrides)
+    return kw
+
+
+def async_kwargs(sp, mem=None) -> dict:
+    """``precompute_async_schedule`` kwargs from a ``FedAsyncSpec`` (and
+    optionally a ``SweepMember`` whose hyper columns/overrides win)."""
+    kw = dict(alpha=sp.alpha, staleness_exp=sp.staleness_exp,
+              staleness_fn=sp.staleness_fn, hinge_a=sp.hinge_a,
+              hinge_b=sp.hinge_b)
+    return kw if mem is None else _apply_member(kw, mem)
+
+
+def weighted_kwargs(sp, mem=None) -> dict:
+    """``precompute_weighted_schedule`` kwargs from a ``SeaflSpec`` /
+    ``CsaflSpec`` (and optionally a ``SweepMember``).  ``overrides`` may
+    switch ``scheme`` per member — including to ``'fedasync'``, whose
+    sequential merge folds into weight rows — so one fleet dispatch can
+    shoot out the whole family."""
+    kw = dict(scheme='csafl' if isinstance(sp, CsaflSpec) else 'seafl',
+              alpha=sp.alpha, staleness_fn=sp.staleness_fn,
+              staleness_exp=sp.staleness_exp, hinge_a=sp.hinge_a,
+              hinge_b=sp.hinge_b,
+              use_loss=getattr(sp, 'use_loss', False),
+              loss_coef=getattr(sp, 'loss_coef', 0.5),
+              clusters=getattr(sp, 'clusters', 1))
+    return kw if mem is None else _apply_member(kw, mem)
+
+
+# ---------------------------------------------------------------------------
+# Host precomputes
+# ---------------------------------------------------------------------------
+
+def precompute_async_schedule(env, *, rounds: int, alpha: float = 0.6,
+                              staleness_fn: str = 'poly',
+                              staleness_exp: float = 0.5,
+                              hinge_a: float = 10.0, hinge_b: int = 4
+                              ) -> schedules.FedasyncSchedule:
+    """FedAsync event pass with a pluggable staleness discount.
+
+    Same bookkeeping as ``federation.precompute_fedasync_schedule``
+    (global-version counter, per-client staleness, bulk crash draws from
+    the same rng stream); only the per-commit mixing weight generalises to
+    ``alpha * s(staleness)``.  With ``staleness_fn='poly'`` the emitted
+    schedule is bit-identical to the legacy one — the discount is the
+    same float expression (1+dt)^(-exp) — which is how the upgraded
+    ``FedAsyncSpec`` keeps its historical results (regression-tested)."""
+    m = env.m
+    full_tt = env.full_train_time()
+    crashed_all, _ = env.draw_rounds(rounds)
+    arrival_base = env.t_dist(m) + 2 * env.t_updown + full_tt
+    versions = np.zeros(m, dtype=float)   # global version at last pull
+    global_version = 0
+    committed_s = np.zeros((rounds, m), bool)
+    order_s = np.zeros((rounds, m), np.int64)
+    alphas_s = np.zeros((rounds, m))
+    records = []
+
+    for t in range(1, rounds + 1):
+        crashed = crashed_all[t - 1]
+        arrival = np.where(~crashed, arrival_base, np.inf)
+        too_slow = arrival > env.t_lim
+        committed = ~crashed & ~too_slow
+        staleness = np.maximum(0.0, global_version - versions)
+        i = t - 1
+        committed_s[i] = committed
+        order_s[i] = np.argsort(arrival, kind='stable')
+        disc = staleness_discount(staleness, staleness_fn,
+                                  staleness_exp=staleness_exp,
+                                  hinge_a=hinge_a, hinge_b=hinge_b)
+        alphas_s[i] = np.where(committed, alpha * disc, 0.0)
+        global_version += int(committed.sum())
+        versions[committed] = global_version
+        records.append(_async_record(t, arrival, committed, crashed,
+                                     staleness, env))
+
+    return schedules.FedasyncSchedule(committed=committed_s, order=order_s,
+                                      alphas=alphas_s, records=records,
+                                      futility=0.0)
+
+
+def _async_record(t, arrival, committed, crashed, staleness,
+                  env) -> RoundRecord:
+    """The per-round timing record every merge-per-arrival scheme shares
+    (identical to the legacy FedAsync precompute's)."""
+    return RoundRecord(
+        round=t,
+        round_len=federation._capped_round_len(arrival, committed, env.t_lim),
+        t_dist=env.t_dist(int(committed.sum())),
+        eur=float(committed.sum()) / arrival.shape[0],
+        sr=1.0,  # every client syncs every round: max downlink pressure
+        vv=float(np.var(staleness[committed])) if committed.any() else 0.0,
+        n_picked=int(committed.sum()),
+        n_committed=int(committed.sum()),
+        n_crashed=int(crashed.sum()))
+
+
+def _fold_sequential(a: np.ndarray, order: np.ndarray) -> np.ndarray:
+    """Closed-form weights of the arrival-ordered sequential merge chain
+    G := (1-a_k) G + a_k T_k: eff[k] = a_k * prod over later merges of
+    (1 - a_l), computed as float64 suffix products.  The residual global
+    weight 1 - sum(eff) equals prod(1 - a) by telescoping, so the fold is
+    exactly the chain up to float rounding (allclose-, not bit-,
+    equivalent to the sequential engine)."""
+    m = a.shape[0]
+    a_ord = a[order].astype(np.float64)
+    suffix = np.ones(m, dtype=np.float64)
+    if m > 1:
+        suffix[:-1] = np.cumprod((1.0 - a_ord)[::-1])[::-1][1:]
+    eff = np.zeros(m, dtype=np.float64)
+    eff[order] = a_ord * suffix
+    return eff
+
+
+def precompute_weighted_schedule(env, *, rounds: int, scheme: str = 'seafl',
+                                 alpha: float = 0.6,
+                                 staleness_fn: str = 'poly',
+                                 staleness_exp: float = 0.5,
+                                 hinge_a: float = 10.0, hinge_b: int = 4,
+                                 use_loss: bool = False,
+                                 loss_coef: float = 0.5,
+                                 clusters: int = 1
+                                 ) -> schedules.WeightedSchedule:
+    """One host pass emitting [rounds, m] one-shot merge weight rows.
+
+    The event process (crash draws, arrivals, commits, version/staleness
+    bookkeeping) is exactly FedAsync's — so staleness means the same thing
+    across the family — and the scheme only decides how a round's commits
+    turn into ``wrow``:
+
+    * ``'seafl'``: wrow = alpha * normalise(data_w * s(staleness)
+      [* (1 + loss_coef/(1 + commits))]) over the committed set.  The
+      optional loss term uses the commit-count deficit as a
+      model-independent proxy for the under-trained-client loss signal
+      (clients that merged rarely get boosted), keeping the precompute
+      free of model weights.
+    * ``'csafl'``: clients are bucketed by ``cluster_by_profile``; within
+      cluster g the commits sub-aggregate by data_w * s(staleness), and
+      the cluster merges at weight alpha * s(rounds since g last merged)
+      * W_g (its total data share).  Rows sum to <= alpha by construction
+      (sum_g W_g = 1, discounts <= 1).
+    * ``'fedasync'``: the per-arrival chain folded via
+      ``_fold_sequential`` — FedAsync as a member of the weighted fleet.
+
+    Every row is zero off the committed set and sums to at most alpha
+    <= 1, so the merge's residual global weight stays non-negative
+    (property-tested)."""
+    if scheme not in WEIGHTED_SCHEMES:
+        raise ValueError(
+            f'unknown scheme {scheme!r} (want one of {WEIGHTED_SCHEMES})')
+    m = env.m
+    full_tt = env.full_train_time()
+    crashed_all, _ = env.draw_rounds(rounds)
+    arrival_base = env.t_dist(m) + 2 * env.t_updown + full_tt
+    data_w = np.asarray(env.weights, dtype=float)
+    versions = np.zeros(m, dtype=float)
+    global_version = 0
+    commits = np.zeros(m, dtype=float)        # seafl loss-proxy counter
+    labels = selection.cluster_by_profile(full_tt, clusters)
+    k = int(labels.max()) + 1
+    cluster_w = np.bincount(labels, weights=data_w, minlength=k)
+    last_merge = np.zeros(k, dtype=float)     # csafl per-cluster bookkeeping
+    committed_s = np.zeros((rounds, m), bool)
+    wrow_s = np.zeros((rounds, m))
+    records = []
+
+    def disc_of(x):
+        return staleness_discount(x, staleness_fn,
+                                  staleness_exp=staleness_exp,
+                                  hinge_a=hinge_a, hinge_b=hinge_b)
+
+    for t in range(1, rounds + 1):
+        crashed = crashed_all[t - 1]
+        arrival = np.where(~crashed, arrival_base, np.inf)
+        too_slow = arrival > env.t_lim
+        committed = ~crashed & ~too_slow
+        staleness = np.maximum(0.0, global_version - versions)
+        disc = disc_of(staleness)
+        i = t - 1
+        committed_s[i] = committed
+
+        if scheme == 'fedasync':
+            a = np.where(committed, alpha * disc, 0.0)
+            wrow_s[i] = _fold_sequential(a, np.argsort(arrival, kind='stable'))
+        elif scheme == 'seafl':
+            base = data_w * disc
+            if use_loss:
+                base = base * (1.0 + loss_coef / (1.0 + commits))
+            base = np.where(committed, base, 0.0)
+            tot = base.sum()
+            if tot > 0:
+                wrow_s[i] = alpha * base / tot
+        else:  # csafl
+            base = np.where(committed, data_w * disc, 0.0)
+            intra_tot = np.bincount(labels, weights=base, minlength=k)
+            cdisc = disc_of(np.maximum(0.0, (t - 1) - last_merge))
+            scale = np.where(intra_tot > 0,
+                             alpha * cdisc * cluster_w
+                             / np.where(intra_tot > 0, intra_tot, 1.0), 0.0)
+            wrow_s[i] = base * scale[labels]
+            merged = np.unique(labels[committed])
+            last_merge[merged] = t
+
+        commits += committed
+        global_version += int(committed.sum())
+        versions[committed] = global_version
+        records.append(_async_record(t, arrival, committed, crashed,
+                                     staleness, env))
+
+    return schedules.WeightedSchedule(committed=committed_s, wrow=wrow_s,
+                                      records=records, futility=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Protocol specs + registration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SeaflSpec(ProtocolSpec):
+    """SEAFL-style adaptive weighted aggregation: one merge per round,
+    committed clients weighted by data share x staleness discount,
+    normalised over the committed set and scaled by ``alpha`` (the
+    residual 1 - alpha stays on the previous global model).
+
+    ``use_loss=True`` adds the loss-term boost 1 + loss_coef/(1 +
+    commits), a model-independent proxy that favours clients whose
+    updates rarely landed (see ``precompute_weighted_schedule``)."""
+    alpha: float = 0.6
+    staleness_fn: str = 'poly'
+    staleness_exp: float = 0.5
+    hinge_a: float = 10.0
+    hinge_b: int = 4
+    use_loss: bool = False
+    loss_coef: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class CsaflSpec(ProtocolSpec):
+    """CSAFL-style clustered semi-async aggregation: clients are grouped
+    host-side by timing profile (quantile buckets of
+    ``FLEnv.full_train_time()``), each cluster sub-aggregates its own
+    commits, and clusters blend into the global model under their own
+    rounds-since-last-merge discount.  ``clusters=1`` degenerates to
+    plain adaptive weighting."""
+    clusters: int = 2
+    alpha: float = 0.6
+    staleness_fn: str = 'poly'
+    staleness_exp: float = 0.5
+    hinge_a: float = 10.0
+    hinge_b: int = 4
+
+
+def _weighted_precompute(env, sp, *, rounds, seed):
+    del seed  # the family's event process draws only from the env rng
+    return precompute_weighted_schedule(env, rounds=rounds,
+                                        **weighted_kwargs(sp))
+
+
+def _weighted_fleet_precompute(members, sp, *, rounds):
+    return schedules.WeightedFleetSchedule.stack([
+        precompute_weighted_schedule(mem.env, rounds=rounds,
+                                     **weighted_kwargs(sp, mem))
+        for mem in members])
+
+
+def _weighted_scan_segment(st, seg, weights, train_fn, ex):
+    del weights  # merge weights live in the schedule
+    st.global_w, st.local_w = protocol.weighted_run_scan(
+        st.global_w, st.local_w, seg, local_train_fn=train_fn,
+        use_kernel=ex.use_kernel, wire=ex.wire)
+
+
+def _weighted_loop_round(st, sched, i, weights, train_fn, ex):
+    del weights
+    st.global_w, st.local_w = protocol.weighted_round(
+        st.global_w, st.local_w,
+        committed=jnp.asarray(sched.committed[i]),
+        wrow=jnp.asarray(sched.wrow[i], jnp.float32),
+        local_train_fn=train_fn, train_args=(i + 1,),
+        use_kernel=ex.use_kernel, wire=ex.wire)
+
+
+def _weighted_fleet_segment(st, seg, weights, train_fn, ex, ctx):
+    del weights
+    st.global_w, st.local_w = protocol.weighted_run_fleet(
+        st.global_w, st.local_w, seg, local_train_fn=train_fn,
+        use_kernel=ex.use_kernel, wire=ex.wire, train_ctx=ctx)
+
+
+register(ProtocolDef(
+    name='seafl', spec_cls=SeaflSpec,
+    precompute=_weighted_precompute,
+    fleet_precompute=_weighted_fleet_precompute,
+    scan_segment=_weighted_scan_segment, loop_round=_weighted_loop_round,
+    fleet_segment=_weighted_fleet_segment,
+    supports_wire=True, supports_kernel='packed'))
+
+register(ProtocolDef(
+    name='csafl', spec_cls=CsaflSpec,
+    precompute=_weighted_precompute,
+    fleet_precompute=_weighted_fleet_precompute,
+    scan_segment=_weighted_scan_segment, loop_round=_weighted_loop_round,
+    fleet_segment=_weighted_fleet_segment,
+    supports_wire=True, supports_kernel='packed'))

@@ -56,8 +56,9 @@ from repro.core.schedules import History, RoundRecord, SweepMember
 __all__ = [
     'CompiledRunner', 'ExecSpec', 'Experiment', 'FedAsyncSpec', 'FedAvgSpec',
     'FedCSSpec', 'History', 'LocalSpec', 'PROTOCOLS', 'ProtocolDef',
-    'ProtocolSpec', 'RoundRecord', 'SafaSpec', 'SweepMember', 'SweepSpec',
-    'Task', 'check_compat', 'register', 'spec',
+    'ProtocolSpec', 'RoundRecord', 'STALENESS_FNS', 'SafaSpec', 'SweepMember',
+    'SweepSpec', 'Task', 'check_compat', 'init_fleet_global', 'register',
+    'spec',
 ]
 
 
@@ -107,12 +108,28 @@ class LocalSpec(ProtocolSpec):
     fraction: float = 0.5
 
 
+#: staleness-discount functions s(dt) of the FedAsync family (Xie et al.):
+#: ``'constant'`` -> 1; ``'hinge'`` -> 1 if dt <= b else 1/(a*(dt-b)),
+#: clamped to (0, 1]; ``'poly'`` -> (1+dt)^(-a).  The discount scales the
+#: base mixing weight alpha, so every variant replays through the same
+#: precomputed per-round alpha tensors.
+STALENESS_FNS = ('constant', 'hinge', 'poly')
+
+
 @dataclasses.dataclass(frozen=True)
 class FedAsyncSpec(ProtocolSpec):
     """FedAsync baseline: every client, every round; merge-per-arrival
-    with staleness-polynomial mixing alpha*(1+staleness)^(-exp)."""
+    with staleness-discounted mixing alpha * s(staleness).
+
+    ``staleness_fn`` picks s(dt) from ``STALENESS_FNS``; the default
+    ``'poly'`` is the legacy alpha*(1+staleness)^(-staleness_exp) form,
+    bit-identical to the pre-``staleness_fn`` schedules.  ``hinge_a`` /
+    ``hinge_b`` parameterise the hinge discount (ignored otherwise)."""
     alpha: float = 0.6
     staleness_exp: float = 0.5
+    staleness_fn: str = 'poly'
+    hinge_a: float = 10.0
+    hinge_b: int = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,7 +206,12 @@ class ProtocolDef:
     finish_segment: Optional[Callable] = None
     uses_cache: bool = False
     supports_wire: bool = False
-    supports_kernel: bool = False
+    #: fused-aggregation kernel support: ``False`` (no kernel), ``True``
+    #: (both the per-leaf kernel and the packed one), or ``'packed'`` —
+    #: the protocol's merge only exists on pack buffers, so ``use_kernel``
+    #: takes ``False`` or ``'packed'`` but never ``True`` (the weighted
+    #: aggregation family has no leaf-wise kernel form).
+    supports_kernel: Any = False
     #: sparse-schedule support (``ExecSpec.schedule != 'dense'``):
     #: ``sparse_precompute(env, spec, *, rounds, seed)`` emits the native
     #: [rounds, quota] schedule (None -> protocol rejects sparse);
@@ -254,13 +276,36 @@ def check_compat(protocol_spec: ProtocolSpec,
             f'unknown use_kernel {ex.use_kernel!r} (want False, True, or '
             f'"packed")')
     if ex.wire != 'f32' and not pdef.supports_wire:
+        wired = '/'.join(sorted(p.name for p in PROTOCOLS.values()
+                                if p.supports_wire))
         raise ValueError(
             f"protocol {pdef.name!r} has no upload-aggregate wire; "
-            f"wire='int8' applies to safa/fedavg/fedcs only")
+            f"wire='int8' applies to {wired} only")
     if ex.use_kernel and not pdef.supports_kernel:
+        kerneled = '/'.join(sorted(p.name for p in PROTOCOLS.values()
+                                   if p.supports_kernel))
         raise ValueError(
             f'protocol {pdef.name!r} has no fused aggregation kernel; '
-            f'use_kernel applies to safa only')
+            f'use_kernel applies to {kerneled} only')
+    if ex.use_kernel is True and pdef.supports_kernel == 'packed':
+        raise ValueError(
+            f'protocol {pdef.name!r} aggregates on pack buffers only (no '
+            f"leaf-wise kernel form); use_kernel takes False or 'packed'")
+    fn = getattr(protocol_spec, 'staleness_fn', None)
+    if fn is not None and fn not in STALENESS_FNS:
+        raise ValueError(
+            f'unknown staleness_fn {fn!r} (want one of {STALENESS_FNS})')
+    alpha = getattr(protocol_spec, 'alpha', None)
+    if alpha is not None and not 0.0 < alpha <= 1.0:
+        raise ValueError(
+            f'alpha must be in (0, 1] (the residual global weight '
+            f'1 - sum(wrow) must stay non-negative), got {alpha}')
+    if getattr(protocol_spec, 'hinge_a', 1.0) <= 0:
+        raise ValueError(
+            f'hinge_a must be > 0, got {protocol_spec.hinge_a}')
+    if getattr(protocol_spec, 'clusters', 1) < 1:
+        raise ValueError(
+            f'clusters must be >= 1, got {protocol_spec.clusters}')
     if getattr(protocol_spec, 'quantize_uploads', False) and ex.wire != 'f32':
         raise ValueError(
             "quantize_uploads=True is the per-leaf reference for the packed "
@@ -395,6 +440,27 @@ def _fresh_records(records: list) -> list:
     cached on the Experiment, so Histories from repeated run() calls
     must not alias (and thereby leak evals into) each other's records."""
     return [dataclasses.replace(r, eval=None) for r in records]
+
+
+def init_fleet_global(task, seeds):
+    """Per-member initial globals for a shared-task fleet, stacked [S, ...].
+
+    This codifies the fleet-init contract: ``task.init_global`` is called
+    host-side once per *distinct* seed and the results are stacked — it is
+    deliberately NOT vmapped over a key batch, because vmapping a
+    PRNG-keyed init lowers ``jax.random`` differently than the scalar call
+    and is not bit-stable against the single-run path.  Members sharing a
+    seed therefore share one init computation, and every member's row is
+    bit-identical to its own ``task.init_global(PRNGKey(seed))`` — which is
+    what keeps ``engine='fleet'`` == ``engine='sequential'`` == single
+    ``run()`` exact.  The relaxed part of the contract is only *where* the
+    init runs (host loop, outside the compiled fleet program), never its
+    values."""
+    init = {}
+    for seed in seeds:
+        if seed not in init:
+            init[seed] = task.init_global(jax.random.PRNGKey(seed))
+    return _stack_trees([init[seed] for seed in seeds])
 
 
 def _stacked_task(tasks):
@@ -659,16 +725,16 @@ def _local_finish_segment(st, weights, fleet: bool):
 
 def _fedasync_precompute(env, sp, *, rounds, seed):
     del seed  # FedAsync's event process draws only from the env rng
-    return federation.precompute_fedasync_schedule(
-        env, rounds=rounds, alpha=sp.alpha, staleness_exp=sp.staleness_exp)
+    from repro.core import agg_schemes
+    return agg_schemes.precompute_async_schedule(
+        env, rounds=rounds, **agg_schemes.async_kwargs(sp))
 
 
 def _fedasync_fleet_precompute(members, sp, *, rounds):
-    del sp
+    from repro.core import agg_schemes
     return schedules.AsyncFleetSchedule.stack([
-        federation.precompute_fedasync_schedule(
-            mem.env, rounds=rounds, alpha=mem.alpha,
-            staleness_exp=mem.staleness_exp)
+        agg_schemes.precompute_async_schedule(
+            mem.env, rounds=rounds, **agg_schemes.async_kwargs(sp, mem))
         for mem in members])
 
 
@@ -796,7 +862,7 @@ class Experiment:
         else:
             parts += ['member=' + _env_fp(mem.env) + repr(
                 (mem.fraction, mem.lag_tolerance, mem.seed, mem.alpha,
-                 mem.staleness_exp)) for mem in members]
+                 mem.staleness_exp, mem.overrides)) for mem in members]
             if tasks is not None:
                 parts += ['task=' + _task_fp(t) for t in tasks]
             else:
@@ -1004,12 +1070,7 @@ class CompiledRunner:
         else:
             ctx = None
             train_fn = self._train_fn(shared_task)
-            init = {}
-            for mem in members:
-                if mem.seed not in init:
-                    init[mem.seed] = shared_task.init_global(
-                        jax.random.PRNGKey(mem.seed))
-            g = _stack_trees([init[mem.seed] for mem in members])
+            g = init_fleet_global(shared_task, [mem.seed for mem in members])
 
         def bcast():
             return jax.tree.map(

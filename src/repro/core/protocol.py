@@ -978,3 +978,141 @@ def fedasync_round(global_w, local_w, *, committed, order, alphas,
     new_local = masked_select(committed, broadcast_global(new_global, m),
                               masked_select(committed, trained, local_w))
     return new_global, new_local
+
+
+# ---------------------------------------------------------------------------
+# Weighted-merge engine: the staleness-adaptive aggregation family
+# ---------------------------------------------------------------------------
+#
+# SEAFL-style adaptive weighting, CSAFL-style per-cluster semi-async
+# aggregation, and (via an exact host-side fold of the sequential merge
+# recursion) the FedAsync s(dt) discount family all lower to one schedule
+# representation: a precomputed [rounds, m] weight row ``wrow`` with
+#
+#     new_global = (1 - sum(wrow)) * global + sum_k wrow[k] * trained_k
+#
+# The row is zero off the committed set, so one round body — and therefore
+# one scan/fleet engine — replays every scheme in the family.  Cluster
+# structure (CSAFL) folds in host-side: wrow[k] = alpha_g * what_k where
+# alpha_g is cluster g's mixing coefficient and what_k the intra-cluster
+# weight, so the kernel path below computes the masked per-cluster
+# sub-aggregates implicitly through the weight operand.
+
+class WeightedSchedule(NamedTuple):
+    """Weighted-merge per-round schedule, stacked [k, m]: the commit mask
+    and the precomputed per-client merge weights (0 for non-commits)."""
+    committed: Any
+    wrow: Any
+    round_idx: Any
+
+
+def weighted_merge(global_w, trained, *, wrow, use_kernel=False):
+    """One-shot weighted server merge:
+
+        w <- (1 - sum_k wrow_k) w + sum_k wrow_k w'_k
+
+    trained: stacked [m, ...]; wrow: [m] f32 effective merge weight per
+    client (0 for non-commits; sum(wrow) <= 1).  ``use_kernel='packed'``
+    routes the fused single-dispatch Pallas path
+    (``ops.weighted_merge_tree_packed``).  Returns the post-merge global
+    model."""
+    if use_kernel == 'packed':
+        from repro.kernels import ops as kops
+        return kops.weighted_merge_tree_packed(trained, global_w, wrow=wrow)
+    residual = (1.0 - jnp.sum(wrow)).astype(jnp.float32)
+
+    def mix(g, t):
+        w = wrow.reshape((-1,) + (1,) * (t.ndim - 1)).astype(jnp.float32)
+        agg = jnp.sum(t.astype(jnp.float32) * w, axis=0)
+        return (residual * g.astype(jnp.float32) + agg).astype(g.dtype)
+
+    return jax.tree.map(mix, global_w, trained)
+
+
+@functools.partial(jax.jit, static_argnames=('local_train_fn', 'use_kernel',
+                                             'wire'))
+def weighted_round(global_w, local_w, *, committed, wrow, local_train_fn,
+                   train_args=(), use_kernel=False, wire: str = 'f32'):
+    """One full numeric weighted-merge round: every client trains from its
+    local model, crashed/late clients are masked out, the server applies
+    the precomputed weight row in ONE batched merge, and committed clients
+    pull the fresh global model (non-commits keep training on their stale
+    copy — that is what makes the precomputed staleness meaningful).
+
+    Jitted (unlike the sequential-merge rounds, whose float math all sits
+    inside an inner ``lax.scan`` and therefore always compiles): the
+    one-shot merge is plain elementwise math, and the loop engine must
+    execute the same compiled expressions as the scan body or the two
+    drift by an fma contraction.
+
+    ``wire='int8'`` round-trips the uploads through the packed int8 wire
+    (``ops.wire_roundtrip_packed``) before the merge — the server merges
+    what a compressed transfer actually delivers; non-committed clients
+    never upload, so their local state stays un-quantised.  Returns
+    (new_global, new_local)."""
+    check_wire(wire)
+    m = committed.shape[0]
+    trained = local_train_fn(local_w, *train_args)
+    trained = masked_select(committed, trained, local_w)
+    uploads = trained
+    if wire == 'int8':
+        from repro.kernels import ops as kops
+        uploads = kops.wire_roundtrip_packed(trained, like=global_w)
+    new_global = weighted_merge(global_w, uploads, wrow=wrow,
+                                use_kernel=use_kernel)
+    new_local = masked_select(committed, broadcast_global(new_global, m),
+                              trained)
+    return new_global, new_local
+
+
+def _weighted_scan(global_w, local_w, schedule, local_train_fn, use_kernel,
+                   wire='f32', train_extra=()):
+    def step(carry, sched):
+        g, l = carry
+        return weighted_round(
+            g, l, committed=sched.committed, wrow=sched.wrow,
+            local_train_fn=local_train_fn,
+            train_args=(sched.round_idx,) + tuple(train_extra),
+            use_kernel=use_kernel, wire=wire), None
+
+    carry, _ = jax.lax.scan(step, (global_w, local_w), schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=('local_train_fn', 'use_kernel', 'wire'))
+def weighted_run_scan(global_w, local_w, schedule: WeightedSchedule,
+                      weights=None, *, local_train_fn, use_kernel=False,
+                      wire='f32'):
+    """Weighted-merge counterpart of ``safa_run_scan``: k rounds in one
+    dispatch with the (global, local) carry donated.  The whole
+    aggregation scheme lives in the schedule's [k, m] weight rows, so
+    every scheme in the staleness-adaptive family compiles to this same
+    program.  ``weights`` is accepted for signature parity and ignored
+    (the merge weights live in the schedule)."""
+    del weights
+    return _weighted_scan(global_w, local_w, schedule, local_train_fn,
+                          use_kernel, wire)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=('local_train_fn', 'use_kernel', 'wire'))
+def weighted_run_fleet(global_w, local_w, schedule: WeightedSchedule,
+                       weights=None, *, local_train_fn, use_kernel=False,
+                       wire='f32', train_ctx=None):
+    """S weighted-merge simulations (schedule fields [S, k, m]) in one
+    vmapped scan with the fleet-stacked (global, local) carry donated.
+    Members may replay *different* schemes of the family (SEAFL, CSAFL,
+    folded FedAsync discounts) — the scheme is data, not trace.  Under
+    ``use_kernel='packed'`` the per-round merge kernel vmaps into a
+    batched-grid launch.  ``train_ctx``: per-member train context, as in
+    ``safa_run_fleet``."""
+    del weights
+    if train_ctx is None:
+        run = lambda g, l, s: _weighted_scan(g, l, s, local_train_fn,
+                                             use_kernel, wire)
+        return jax.vmap(run)(global_w, local_w, schedule)
+    run = lambda g, l, s, ctx: _weighted_scan(g, l, s, local_train_fn,
+                                              use_kernel, wire,
+                                              train_extra=(ctx,))
+    return jax.vmap(run)(global_w, local_w, schedule, train_ctx)

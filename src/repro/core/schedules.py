@@ -75,8 +75,14 @@ class SweepMember:
     fraction: float = 0.5       # ignored by fedasync (fully asynchronous)
     lag_tolerance: int = 5      # SAFA only
     seed: int = 0               # numeric-init (and sync/local-selection) seed
-    alpha: float = 0.6          # FedAsync only: base mixing weight
-    staleness_exp: float = 0.5  # FedAsync only: staleness polynomial
+    alpha: float = 0.6          # fedasync/seafl/csafl: base mixing weight
+    staleness_exp: float = 0.5  # fedasync/seafl/csafl: poly discount exponent
+    #: per-member protocol-spec field overrides for precomputes that
+    #: support them (the staleness-adaptive family: ``staleness_fn``,
+    #: ``hinge_a``/``hinge_b``, ``use_loss``/``loss_coef``, ``clusters``,
+    #: and — weighted family only — ``scheme``).  ``None`` == no overrides;
+    #: unknown keys are rejected at precompute time.
+    overrides: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -190,6 +196,33 @@ class FedasyncSchedule:
             committed=jnp.asarray(self.committed),
             order=jnp.asarray(self.order),
             alphas=jnp.asarray(self.alphas, jnp.float32),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+
+@dataclasses.dataclass
+class WeightedSchedule:
+    """Precomputed weighted-merge event process: [rounds, m] commit masks
+    plus the per-client effective merge weights the one-shot server merge
+    applies each round (``protocol.weighted_round``).
+
+    This is the common lowering of the staleness-adaptive aggregation
+    family (SEAFL adaptive weights, CSAFL per-cluster semi-async
+    aggregation, folded FedAsync discounts): the scheme lives entirely in
+    how ``wrow`` was computed, so every scheme replays through one
+    engine.  Rows are zero off the committed set and sum to at most 1."""
+    committed: np.ndarray       # [rounds, m] bool
+    wrow: np.ndarray            # [rounds, m] float — 0 for non-commits
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.committed.shape[0]
+
+    def to_device(self) -> protocol.WeightedSchedule:
+        return protocol.WeightedSchedule(
+            committed=jnp.asarray(self.committed),
+            wrow=jnp.asarray(self.wrow, jnp.float32),
             round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
 
 
@@ -467,6 +500,28 @@ class AsyncFleetSchedule(_FleetStack):
             committed=jnp.asarray(self.committed),
             order=jnp.asarray(self.order),
             alphas=jnp.asarray(self.alphas, jnp.float32),
+            round_idx=self._round_idx())
+
+
+@dataclasses.dataclass
+class WeightedFleetSchedule(_FleetStack):
+    """Weighted-merge counterpart of ``FleetSchedule``: [S, rounds, m]
+    commit masks + effective merge-weight rows.  Because the scheme is
+    data (the precomputed ``wrow``), members of one fleet may replay
+    *different* schemes of the staleness-adaptive family in a single
+    vmapped dispatch."""
+    committed: np.ndarray
+    wrow: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    MASKS = ('committed', 'wrow')
+    _MEMBER_CLS = WeightedSchedule
+
+    def to_device(self) -> protocol.WeightedSchedule:
+        return protocol.WeightedSchedule(
+            committed=jnp.asarray(self.committed),
+            wrow=jnp.asarray(self.wrow, jnp.float32),
             round_idx=self._round_idx())
 
 

@@ -211,6 +211,29 @@ def fedcs_select(est_round_time: np.ndarray, fraction: float,
     return sel
 
 
+def cluster_by_profile(profile: np.ndarray, clusters: int) -> np.ndarray:
+    """CSAFL-style host-side client clustering: [m] int labels in
+    [0, clusters) from a per-client timing/crash profile (e.g.
+    ``FLEnv.full_train_time()`` — slow clients land together, so each
+    cluster's semi-async sub-aggregation mixes updates of similar
+    staleness).
+
+    Quantile bucketing on the stable profile rank: label k holds the
+    clients between the k/clusters and (k+1)/clusters rank quantiles, so
+    clusters are balanced to within one client and the labels are a
+    partition by construction (deterministic, no iterative k-means
+    state).  ``clusters`` is capped at m; with ``clusters=1`` every
+    client shares one group and the scheme degenerates to plain adaptive
+    weighting."""
+    m = profile.shape[0]
+    if clusters < 1:
+        raise ValueError(f'clusters must be >= 1, got {clusters}')
+    k = min(int(clusters), m)
+    order = np.argsort(profile, kind='stable')
+    rank = np.argsort(order, kind='stable')     # inverse perm
+    return (rank * k) // m
+
+
 def fedcs_select_batch(est_round_time: np.ndarray, fraction,
                        deadline) -> np.ndarray:
     """FedCS for a whole fleet in one vectorised pass: [S, m] bool.

@@ -56,6 +56,7 @@ __all__ = ['safa_aggregate', 'safa_aggregate_packed',
            'scatter_rows_fleet',
            'quantize', 'dequantize', 'quantize_packed', 'dequantize_packed',
            'quantize_packed_fleet', 'safa_compressed_update',
+           'weighted_merge_packed', 'weighted_merge_tree_packed',
            'wire_roundtrip_packed', 'wire_spec',
            'swa_attention', 'quantize_tree', 'dequantize_tree',
            'PackSpec', 'pack_spec', 'pack_stacked', 'pack_global',
@@ -424,6 +425,77 @@ def safa_aggregate_tree_packed_fleet(cache, trained, global_prev, *, picked,
     ng, nc = safa_aggregate_packed_fleet(pc, pt, pg, picked, undrafted,
                                          deprecated, weights)
     return AggregationResult(unpack_stacked(ng, spec), unpack_fleet(nc, spec))
+
+
+# ---------------------------------------------------------------------------
+# Weighted-merge kernel: the staleness-adaptive aggregation family's
+# server step as one fused dispatch
+# ---------------------------------------------------------------------------
+
+def _weighted_merge_kernel(trained_ref, global_ref, w_ref, out_ref):
+    """One [m, T] tile of  (1 - sum(w)) * g + sum_k w_k * t_k.
+
+    ``w`` carries the whole aggregation scheme: SEAFL's adaptive
+    staleness weights arrive pre-normalised, and CSAFL's per-cluster
+    sub-aggregates arrive pre-folded (w_k = alpha_g * what_k, zero off
+    the cluster's committed set) — the masked cluster reduction happens
+    implicitly through the zeros, so one operand serves every scheme."""
+    g = global_ref[...]                               # [1, T]
+    w = w_ref[...].astype(jnp.float32)                # [m, 1]
+    residual = 1.0 - jnp.sum(w)
+    agg = jnp.sum(trained_ref[...].astype(jnp.float32) * w, axis=0,
+                  keepdims=True)
+    out_ref[...] = (residual * g.astype(jnp.float32) + agg).astype(g.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def weighted_merge_packed(trained, global_prev, wrow, *,
+                          tile: int = DEFAULT_TILE):
+    """Single fused weighted-merge dispatch on pre-padded pack buffers.
+
+    trained: [m, N] packed client uploads (N % tile == 0, see
+    ``pack_stacked``); global_prev: [N]; wrow: [m] f32 effective merge
+    weights (0 for non-commits, sum <= 1).  One ``pallas_call`` over the
+    N // tile grid computes ``(1 - sum(wrow)) * global + wrow @ trained``
+    regardless of model depth; under the fleet engine's vmap the launch
+    batches into an (S, tiles) grid.  Returns the new global row [N]."""
+    m, np_ = trained.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    out = pl.pallas_call(
+        _weighted_merge_kernel,
+        grid=(np_ // tile,),
+        in_specs=[
+            pl.BlockSpec((m, tile), lambda i: (0, i)),      # trained
+            pl.BlockSpec((1, tile), lambda i: (0, i)),      # global
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),         # wrow
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), trained.dtype),
+        interpret=INTERPRET,
+    )(trained, global_prev.reshape(1, -1),
+      wrow.astype(jnp.float32).reshape(m, 1))
+    return out[0]
+
+
+def weighted_merge_tree_packed(trained, global_prev, *, wrow,
+                               spec: PackSpec = None):
+    """Single-dispatch weighted merge over a whole model pytree.
+
+    Flattens the trained stack and the global tree into pack buffers (a
+    fusion-friendly concat, no kernel launches), runs
+    ``weighted_merge_packed`` exactly once, and unpacks the new global.
+    ``spec`` may be precomputed by callers that merge every round (the
+    layout only depends on the model).  Float32-only, like the other
+    packed paths."""
+    if spec is None:
+        spec = pack_spec(global_prev)
+    _require_f32(spec)
+    pt = pack_stacked(trained, spec)
+    pg = pack_global(global_prev, spec)
+    return unpack_global(weighted_merge_packed(pt, pg, wrow), spec)
 
 
 def quantize_tree(tree):

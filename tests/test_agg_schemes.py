@@ -1,0 +1,296 @@
+"""The staleness-adaptive aggregation family: discount goldens, legacy
+bit-identity, the fedasync fold, the packed merge kernel, member
+overrides, every ``check_compat`` rejection's golden message, and the
+``init_fleet_global`` contract (the carried batched-init roadmap item).
+
+Engine-identity invariants (scan==loop, fleet==sequential==single, int8
+wire parity, resume) live in ``test_conformance.py`` — this module covers
+what the registry-wide matrix can't: exact values and exact messages.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import conformance as C
+from repro import api
+from repro.core import agg_schemes, federation
+from repro.fedsim import FLEnv
+
+
+def fresh_env(seed=3, **kw):
+    base = dict(C.BASE_ENV)
+    base.update(kw)
+    return FLEnv(seed=seed, **base)
+
+
+def assert_tree_close(a, b, rtol, context=''):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), f'{context}: tree structures differ'
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol,
+                                   atol=1e-7, err_msg=f'{context}: leaf {i}')
+
+
+# ---------------------------------------------------------------------------
+# Surface: the family is reachable from the facade and the registry
+# ---------------------------------------------------------------------------
+
+class TestSurface:
+    def test_facade_exports(self):
+        for name in ('CsaflSpec', 'SeaflSpec', 'WEIGHTED_SCHEMES',
+                     'STALENESS_FNS', 'precompute_weighted_schedule',
+                     'staleness_discount', 'init_fleet_global'):
+            assert hasattr(api, name), name
+
+    def test_registered_through_api_register(self):
+        by_name = {p.name: p for p in api.PROTOCOLS.values()}
+        for name, cls in (('seafl', api.SeaflSpec), ('csafl', api.CsaflSpec)):
+            pdef = by_name[name]
+            assert pdef.spec_cls is cls
+            assert pdef.supports_wire
+            assert pdef.supports_kernel == 'packed'
+            assert pdef.sparse_precompute is None
+
+    def test_spec_by_name(self):
+        sp = api.spec('csafl', clusters=4, alpha=0.5)
+        assert isinstance(sp, api.CsaflSpec)
+        assert (sp.clusters, sp.alpha) == (4, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Discount goldens
+# ---------------------------------------------------------------------------
+
+class TestDiscountGoldens:
+    def test_constant(self):
+        np.testing.assert_array_equal(
+            agg_schemes.staleness_discount([0, 1, 50], 'constant'),
+            [1.0, 1.0, 1.0])
+
+    def test_poly(self):
+        got = agg_schemes.staleness_discount([0, 3, 8], 'poly',
+                                             staleness_exp=0.5)
+        np.testing.assert_allclose(got, [1.0, 0.5, 1.0 / 3.0], rtol=1e-15)
+        np.testing.assert_allclose(
+            agg_schemes.staleness_discount([4], 'poly', staleness_exp=1.0),
+            [0.2], rtol=1e-15)
+
+    def test_poly_matches_legacy_expression(self):
+        # bit-for-bit the engine's legacy alpha scaling: (1+s)**-exp
+        s = np.arange(0, 20, dtype=float)
+        np.testing.assert_array_equal(
+            agg_schemes.staleness_discount(s, 'poly', staleness_exp=0.5),
+            (1.0 + s) ** -0.5)
+
+    def test_hinge(self):
+        got = agg_schemes.staleness_discount([0, 4, 5, 6], 'hinge',
+                                             hinge_a=10.0, hinge_b=4)
+        np.testing.assert_allclose(got, [1.0, 1.0, 0.1, 0.05], rtol=1e-15)
+
+    def test_hinge_clamps_to_one(self):
+        # raw hinge 1/(a*(s-b)) > 1 when a < 1/(s-b): must clamp, never
+        # amplify
+        got = agg_schemes.staleness_discount([1], 'hinge', hinge_a=0.1,
+                                             hinge_b=0)
+        np.testing.assert_array_equal(got, [1.0])
+
+    def test_unknown_fn(self):
+        with pytest.raises(ValueError, match='staleness_fn'):
+            agg_schemes.staleness_discount([1], 'exp')
+
+
+# ---------------------------------------------------------------------------
+# Legacy bit-identity + the fedasync fold
+# ---------------------------------------------------------------------------
+
+class TestAsyncSchedule:
+    def test_poly_bit_identical_to_legacy_precompute(self):
+        new = agg_schemes.precompute_async_schedule(
+            fresh_env(), rounds=8, alpha=0.6, staleness_fn='poly',
+            staleness_exp=0.5)
+        old = federation.precompute_fedasync_schedule(
+            fresh_env(), rounds=8, alpha=0.6, staleness_exp=0.5)
+        np.testing.assert_array_equal(new.alphas, old.alphas)
+        np.testing.assert_array_equal(new.order, old.order)
+        np.testing.assert_array_equal(new.committed, old.committed)
+        assert [dataclasses.asdict(r) for r in new.records] == \
+            [dataclasses.asdict(r) for r in old.records]
+        assert new.futility == old.futility
+
+    def test_fold_matches_sequential_engine(self):
+        """A FedAsync member folded into the weighted engine
+        (overrides={'scheme': 'fedasync'}) reproduces the sequential
+        arrival-ordered merge chain to float tolerance."""
+        ref = C.run_single(api.FedAsyncSpec())
+        mem = api.SweepMember(env=C.fresh_env(), seed=0, alpha=0.6,
+                              staleness_exp=0.5,
+                              overrides={'scheme': 'fedasync'})
+        folded = C.run_sweep(api.SeaflSpec(), [mem])[0]
+        assert_tree_close(folded.final_global, ref.final_global, rtol=2e-5,
+                          context='fold vs sequential')
+        # identical event stream; evals differ in final ulps (the fold is
+        # allclose to the sequential chain, not bit-identical)
+        def without_eval(h):
+            return [{k: v for k, v in dataclasses.asdict(r).items()
+                     if k != 'eval'} for r in h.records]
+        assert without_eval(folded) == without_eval(ref)
+        np.testing.assert_allclose([e['loss'] for _, e in folded.evals()],
+                                   [e['loss'] for _, e in ref.evals()],
+                                   rtol=2e-5)
+
+    def test_mixed_scheme_fleet_matches_sequential(self):
+        """One fleet dispatch mixing all three weighted schemes equals the
+        per-member sequential runs bit-for-bit."""
+        def members():
+            return [
+                api.SweepMember(env=C.fresh_env(3), seed=0),
+                api.SweepMember(env=C.fresh_env(4), seed=1,
+                                overrides={'scheme': 'csafl', 'clusters': 2}),
+                api.SweepMember(env=C.fresh_env(5), seed=2,
+                                overrides={'scheme': 'fedasync'}),
+            ]
+        h_fleet = C.run_sweep(api.SeaflSpec(), members(), engine='fleet')
+        h_seq = C.run_sweep(api.SeaflSpec(), members(), engine='sequential')
+        for s in range(3):
+            C.assert_history_equal(h_fleet[s], h_seq[s], f'member {s}')
+
+
+# ---------------------------------------------------------------------------
+# Packed merge kernel
+# ---------------------------------------------------------------------------
+
+class TestPackedKernel:
+    @pytest.mark.parametrize('spec', [api.SeaflSpec(),
+                                      api.CsaflSpec(clusters=3)],
+                             ids=['seafl', 'csafl'])
+    def test_packed_close_to_default(self, spec):
+        ref = C.run_single(spec)
+        h = C.run_single(spec, exec_kw={'use_kernel': 'packed'})
+        assert_tree_close(h.final_global, ref.final_global, rtol=1e-5,
+                          context='packed vs default')
+
+    def test_packed_scan_equals_loop(self):
+        kw = {'use_kernel': 'packed'}
+        h_scan = C.run_single(api.SeaflSpec(), exec_kw=kw)
+        h_loop = C.run_single(api.SeaflSpec(), engine='loop', exec_kw=kw)
+        C.assert_history_equal(h_scan, h_loop, 'packed: scan vs loop')
+
+
+# ---------------------------------------------------------------------------
+# Member overrides
+# ---------------------------------------------------------------------------
+
+class TestOverrides:
+    def test_member_columns_win(self):
+        mem = api.SweepMember(env=None, alpha=0.3, staleness_exp=1.5)
+        kw = agg_schemes.weighted_kwargs(api.SeaflSpec(), mem)
+        assert (kw['alpha'], kw['staleness_exp']) == (0.3, 1.5)
+        assert kw['scheme'] == 'seafl'
+
+    def test_override_switches_scheme(self):
+        mem = api.SweepMember(env=None, overrides={'scheme': 'fedasync'})
+        assert agg_schemes.weighted_kwargs(api.SeaflSpec(),
+                                           mem)['scheme'] == 'fedasync'
+
+    def test_unknown_override_key_rejected(self):
+        mem = api.SweepMember(env=None, overrides={'bogus': 1})
+        with pytest.raises(ValueError, match='bogus'):
+            agg_schemes.weighted_kwargs(api.SeaflSpec(), mem)
+
+    def test_async_precompute_rejects_weighted_only_keys(self):
+        # 'scheme'/'clusters' belong to the weighted family, not fedasync's
+        # sequential-merge precompute
+        mem = api.SweepMember(env=None, overrides={'clusters': 3})
+        with pytest.raises(ValueError, match='clusters'):
+            agg_schemes.async_kwargs(api.FedAsyncSpec(), mem)
+
+
+# ---------------------------------------------------------------------------
+# check_compat: every rejection, one golden fragment each
+# ---------------------------------------------------------------------------
+
+GOLDENS = [
+    ('wire-value', api.SafaSpec(), dict(wire='int4'), 'wire'),
+    ('engine-name', api.SafaSpec(), dict(engine='warp'), 'unknown engine'),
+    ('use-kernel-value', api.SafaSpec(), dict(use_kernel='Packed'),
+     'unknown use_kernel'),
+    ('wire-protocol', api.LocalSpec(), dict(wire='int8'),
+     'upload-aggregate wire'),
+    ('kernel-protocol', api.LocalSpec(), dict(use_kernel='packed'),
+     'fused aggregation kernel'),
+    ('kernel-packed-only', api.SeaflSpec(), dict(use_kernel=True),
+     'pack buffers only'),
+    ('staleness-fn', api.FedAsyncSpec(staleness_fn='exp'), {},
+     'unknown staleness_fn'),
+    ('alpha-zero', api.FedAsyncSpec(alpha=0.0), {}, 'alpha must be in'),
+    ('alpha-above-one', api.SeaflSpec(alpha=1.5), {}, 'alpha must be in'),
+    ('hinge-a', api.CsaflSpec(hinge_a=0.0), {}, 'hinge_a must be'),
+    ('clusters', api.CsaflSpec(clusters=0), {}, 'clusters must be'),
+    ('quantize-vs-wire', api.SafaSpec(quantize_uploads=True),
+     dict(wire='int8'), 'one or the other'),
+    ('sampler', api.FedAvgSpec(sampler='bogus'), {}, 'unknown sampler'),
+    ('schedule-value', api.SafaSpec(), dict(schedule='csr'),
+     'unknown schedule'),
+    ('sparse-protocol', api.SeaflSpec(), dict(schedule='sparse'),
+     'no sparse schedule form'),
+    ('sparse-quantize', api.SafaSpec(quantize_uploads=True),
+     dict(schedule='sparse'), 'dense per-leaf reference knob'),
+    ('sparse-delta-kernel', api.SafaSpec(),
+     dict(schedule='sparse_delta', use_kernel=True), 'no rows form'),
+]
+
+
+class TestCheckCompatGoldens:
+    @pytest.mark.parametrize('spec,exec_kw,fragment',
+                             [g[1:] for g in GOLDENS],
+                             ids=[g[0] for g in GOLDENS])
+    def test_rejection_message(self, spec, exec_kw, fragment):
+        with pytest.raises(ValueError, match=fragment):
+            api.check_compat(spec, api.ExecSpec(**exec_kw))
+
+    def test_unregistered_spec_is_type_error(self):
+        @dataclasses.dataclass(frozen=True)
+        class GossipSpec(api.ProtocolSpec):
+            fanout: int = 2
+        with pytest.raises(TypeError, match='register'):
+            api.check_compat(GossipSpec())
+
+    def test_valid_pairs_pass(self):
+        # the matrix's accepted corners return the ProtocolDef
+        assert api.check_compat(api.SeaflSpec(),
+                                api.ExecSpec(use_kernel='packed',
+                                             wire='int8')).name == 'seafl'
+        assert api.check_compat(api.CsaflSpec(clusters=5)).name == 'csafl'
+        assert api.check_compat(
+            api.FedAsyncSpec(staleness_fn='hinge', hinge_b=0)
+        ).name == 'fedasync'
+
+
+# ---------------------------------------------------------------------------
+# init_fleet_global: the codified fleet-init contract
+# ---------------------------------------------------------------------------
+
+class TestInitFleetGlobal:
+    def test_rows_bit_identical_to_scalar_init(self):
+        """Each member's stacked row equals its own scalar
+        ``task.init_global(PRNGKey(seed))`` — the contract that keeps
+        fleet == sequential == single-run init exact (vmapping the
+        PRNG-keyed init is NOT bit-stable; the fleet path must never do
+        that)."""
+        task = C.shared_task()
+        seeds = [0, 1, 0]
+        g = api.init_fleet_global(task, seeds)
+        for s, seed in enumerate(seeds):
+            ref = task.init_global(jax.random.PRNGKey(seed))
+            for got, want in zip(jax.tree.leaves(g), jax.tree.leaves(ref)):
+                np.testing.assert_array_equal(np.asarray(got)[s],
+                                              np.asarray(want),
+                                              err_msg=f'member {s}')
+
+    def test_duplicate_seeds_share_rows(self):
+        g = api.init_fleet_global(C.shared_task(), [7, 7])
+        for leaf in jax.tree.leaves(g):
+            np.testing.assert_array_equal(np.asarray(leaf)[0],
+                                          np.asarray(leaf)[1])

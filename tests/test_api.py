@@ -411,8 +411,10 @@ class TestPerMemberTasks:
 
 class TestRegistry:
     def test_builtin_registry_contents(self):
+        import repro.api  # noqa: F401 — registers the aggregation family
         assert {d.name for d in api.PROTOCOLS.values()} == \
-            {'safa', 'fedavg', 'fedcs', 'local', 'fedasync'}
+            {'safa', 'fedavg', 'fedcs', 'local', 'fedasync', 'seafl',
+             'csafl'}
         assert api.PROTOCOLS[api.SafaSpec].uses_cache
         assert not api.PROTOCOLS[api.LocalSpec].supports_wire
 

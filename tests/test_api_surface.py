@@ -12,10 +12,13 @@ import pytest
 from repro import api
 
 EXPECTED_ALL = {
-    'CompiledRunner', 'ExecSpec', 'Experiment', 'FedAsyncSpec', 'FedAvgSpec',
-    'FedCSSpec', 'History', 'LocalSpec', 'PROTOCOLS', 'ProtocolDef',
-    'ProtocolSpec', 'RoundRecord', 'SafaSpec', 'SweepMember', 'SweepSpec',
-    'Task', 'check_compat', 'register', 'spec',
+    'CompiledRunner', 'CsaflSpec', 'ExecSpec', 'Experiment', 'FedAsyncSpec',
+    'FedAvgSpec', 'FedCSSpec', 'History', 'LocalSpec', 'PROTOCOLS',
+    'ProtocolDef', 'ProtocolSpec', 'RoundRecord', 'STALENESS_FNS',
+    'SafaSpec', 'SeaflSpec', 'SweepMember', 'SweepSpec', 'Task',
+    'WEIGHTED_SCHEMES', 'check_compat', 'init_fleet_global',
+    'precompute_weighted_schedule', 'register', 'spec',
+    'staleness_discount',
 }
 
 SPEC_FIELDS = {
@@ -23,12 +26,17 @@ SPEC_FIELDS = {
     'FedAvgSpec': ('fraction', 'sampler'),
     'FedCSSpec': ('fraction',),
     'LocalSpec': ('fraction',),
-    'FedAsyncSpec': ('alpha', 'staleness_exp'),
+    'FedAsyncSpec': ('alpha', 'staleness_exp', 'staleness_fn', 'hinge_a',
+                     'hinge_b'),
+    'SeaflSpec': ('alpha', 'staleness_fn', 'staleness_exp', 'hinge_a',
+                  'hinge_b', 'use_loss', 'loss_coef'),
+    'CsaflSpec': ('clusters', 'alpha', 'staleness_fn', 'staleness_exp',
+                  'hinge_a', 'hinge_b'),
     'ExecSpec': ('engine', 'wire', 'use_kernel', 'schedule', 'shard',
                  'eval_every', 'numeric'),
     'SweepSpec': ('members', 'tasks'),
     'SweepMember': ('env', 'fraction', 'lag_tolerance', 'seed', 'alpha',
-                    'staleness_exp'),
+                    'staleness_exp', 'overrides'),
 }
 
 
@@ -47,7 +55,8 @@ def test_spec_field_snapshot():
 
 def test_protocol_specs_are_frozen():
     for cls_name in ('SafaSpec', 'FedAvgSpec', 'FedCSSpec', 'LocalSpec',
-                     'FedAsyncSpec', 'ExecSpec', 'SweepSpec'):
+                     'FedAsyncSpec', 'SeaflSpec', 'CsaflSpec', 'ExecSpec',
+                     'SweepSpec'):
         inst = getattr(api, cls_name)() if cls_name != 'SweepSpec' \
             else api.SweepSpec(members=())
         with pytest.raises(dataclasses.FrozenInstanceError):
@@ -56,10 +65,11 @@ def test_protocol_specs_are_frozen():
 
 def test_registry_snapshot():
     assert {d.name for d in api.PROTOCOLS.values()} == \
-        {'safa', 'fedavg', 'fedcs', 'local', 'fedasync'}
+        {'safa', 'fedavg', 'fedcs', 'local', 'fedasync', 'seafl', 'csafl'}
     assert set(api.PROTOCOLS) == {api.SafaSpec, api.FedAvgSpec,
                                   api.FedCSSpec, api.LocalSpec,
-                                  api.FedAsyncSpec}
+                                  api.FedAsyncSpec, api.SeaflSpec,
+                                  api.CsaflSpec}
     for pdef in api.PROTOCOLS.values():
         for fn in ('precompute', 'fleet_precompute', 'scan_segment',
                    'loop_round', 'fleet_segment'):

@@ -1,0 +1,102 @@
+"""Registry-wide protocol conformance: every spec in ``api.PROTOCOLS``
+(plus named field variants) through the engine-identity matrix.  See
+``tests/conformance.py`` for the harness; a failing test names the
+offending spec in its id.
+
+No hypothesis dependency — this module must run in a bare environment.
+"""
+import dataclasses
+
+import pytest
+
+import conformance as C
+from repro import api
+
+CASES = C.cases()
+IDS = sorted(CASES)
+
+_SCAN_REF = {}
+
+
+def scan_ref(cid):
+    """The scan-engine reference run (env seed 3, numeric seed 0), cached
+    per case — the single source every invariant compares against."""
+    if cid not in _SCAN_REF:
+        _SCAN_REF[cid] = C.run_single(CASES[cid]())
+    return _SCAN_REF[cid]
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_scan_equals_loop(cid):
+    h_loop = C.run_single(CASES[cid](), engine='loop')
+    C.assert_history_equal(scan_ref(cid), h_loop, f'{cid}: scan vs loop')
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_fleet_equals_sequential_equals_single(cid):
+    spec = CASES[cid]()
+
+    def members():
+        return [C.member_for(spec, C.fresh_env(3), seed=0),
+                C.member_for(spec, C.fresh_env(4), seed=1)]
+
+    h_fleet = C.run_sweep(spec, members(), engine='fleet')
+    h_seq = C.run_sweep(spec, members(), engine='sequential')
+    for s in range(2):
+        C.assert_history_equal(h_fleet[s], h_seq[s],
+                               f'{cid}: fleet vs sequential member {s}')
+    # member 0 replays the scan reference's exact configuration
+    C.assert_history_equal(h_fleet[0], scan_ref(cid),
+                           f'{cid}: fleet member 0 vs single run')
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_checkpoint_resume_bit_identity(cid, tmp_path):
+    spec = CASES[cid]()
+    path = str(tmp_path / 'ck')
+    partial = C.run_single(spec, checkpoint=path, max_segments=1)
+    assert partial.final_global is not None
+    resumed = C.run_single(spec, checkpoint=path)
+    C.assert_history_equal(resumed, scan_ref(cid),
+                           f'{cid}: resumed vs uninterrupted')
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_history_dict_roundtrip(cid):
+    h = scan_ref(cid)
+    h2 = api.History.from_dict(h.to_dict())
+    assert h2.protocol == h.protocol
+    assert h2.futility == h.futility
+    assert h2.best_eval == h.best_eval
+    assert [dataclasses.asdict(r) for r in h2.records] == \
+        [dataclasses.asdict(r) for r in h.records]
+    assert h2.evals() == h.evals()
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_sparse_matches_dense(cid):
+    spec = CASES[cid]()
+    if C.pdef_of(spec).sparse_precompute is None:
+        pytest.skip(f'{C.pdef_of(spec).name}: no sparse schedule form')
+    h_sparse = C.run_single(spec, exec_kw={'schedule': 'sparse'})
+    C.assert_history_equal(h_sparse, scan_ref(cid),
+                           f'{cid}: sparse vs dense')
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_wire_int8_engine_parity(cid):
+    spec = CASES[cid]()
+    pdef = C.pdef_of(spec)
+    if not pdef.supports_wire:
+        with pytest.raises(ValueError, match='wire'):
+            C.run_single(spec, exec_kw={'wire': 'int8'})
+        return
+    h_scan = C.run_single(spec, exec_kw={'wire': 'int8'})
+    h_loop = C.run_single(spec, engine='loop', exec_kw={'wire': 'int8'})
+    C.assert_history_equal(h_scan, h_loop, f'{cid}: int8 scan vs loop')
+    if any(f.name == 'quantize_uploads' for f in dataclasses.fields(spec)):
+        # the packed wire must equal the per-leaf reference bit-for-bit
+        ref_spec = dataclasses.replace(spec, quantize_uploads=True)
+        h_ref = C.run_single(ref_spec)
+        C.assert_history_equal(h_scan, h_ref,
+                               f'{cid}: int8 wire vs quantize_uploads')

@@ -1,0 +1,169 @@
+"""Property-based invariants of the staleness-adaptive schedule family,
+over randomised ``FLEnv`` configurations (hypothesis).
+
+The weighted-merge engine trusts its precomputed schedules blindly — a
+weight row summing past 1 would flip the residual global weight negative
+inside a compiled scan where nothing checks it.  These properties pin the
+host-side contracts instead: discounts stay in (0, 1], weight rows are
+zero off the committed set and bounded by alpha, cluster labels
+partition the population, sentinel slots carry zero weight, and the
+sparse schedule round-trips through its dense form.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import agg_schemes, federation, protocol, selection
+from repro.fedsim import FLEnv
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+env_configs = st.fixed_dictionaries({
+    'm': st.integers(2, 8),
+    'crash_prob': st.floats(0.0, 0.9),
+    'seed': st.integers(0, 2**16),
+    't_lim': st.sampled_from([200.0, 830.0, 5000.0]),
+})
+
+
+def make_env(cfg) -> FLEnv:
+    return FLEnv(dataset_size=506, batch_size=5, epochs=3, **cfg)
+
+
+discount_args = st.fixed_dictionaries({
+    'fn': st.sampled_from(('constant', 'hinge', 'poly')),
+    'staleness_exp': st.floats(0.0, 3.0),
+    'hinge_a': st.floats(0.01, 50.0),
+    'hinge_b': st.integers(0, 10),
+})
+
+
+@settings(**SETTINGS)
+@given(args=discount_args,
+       staleness=st.lists(st.floats(0.0, 1e4), min_size=1, max_size=32))
+def test_discount_in_unit_interval(args, staleness):
+    fn = args.pop('fn')
+    d = agg_schemes.staleness_discount(np.asarray(staleness), fn, **args)
+    assert np.all(d > 0.0), (fn, d)
+    assert np.all(d <= 1.0), (fn, d)
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 8),
+       alpha=st.floats(0.05, 1.0),
+       fn=st.sampled_from(('constant', 'hinge', 'poly')),
+       use_loss=st.booleans())
+def test_seafl_rows_sum_to_alpha_on_committed(cfg, rounds, alpha, fn,
+                                              use_loss):
+    sched = agg_schemes.precompute_weighted_schedule(
+        make_env(cfg), rounds=rounds, scheme='seafl', alpha=alpha,
+        staleness_fn=fn, use_loss=use_loss)
+    assert np.all(sched.wrow >= 0.0)
+    assert np.all(sched.wrow[~sched.committed] == 0.0)
+    sums = sched.wrow.sum(axis=-1)
+    nonempty = sched.committed.any(axis=-1)
+    np.testing.assert_allclose(sums[nonempty], alpha, rtol=1e-12)
+    assert np.all(sums[~nonempty] == 0.0)
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 8),
+       alpha=st.floats(0.05, 1.0), clusters=st.integers(1, 6),
+       fn=st.sampled_from(('constant', 'hinge', 'poly')))
+def test_csafl_rows_bounded_by_alpha(cfg, rounds, alpha, clusters, fn):
+    sched = agg_schemes.precompute_weighted_schedule(
+        make_env(cfg), rounds=rounds, scheme='csafl', alpha=alpha,
+        staleness_fn=fn, clusters=clusters)
+    assert np.all(sched.wrow >= 0.0)
+    assert np.all(sched.wrow[~sched.committed] == 0.0)
+    # sum_g disc_g * W_g <= sum_g W_g = 1, so rows never exceed alpha:
+    # the residual global weight 1 - sum(wrow) stays non-negative
+    assert np.all(sched.wrow.sum(axis=-1) <= alpha * (1 + 1e-12))
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 8),
+       alpha=st.floats(0.05, 1.0),
+       fn=st.sampled_from(('constant', 'hinge', 'poly')))
+def test_fedasync_fold_matches_sequential_residual(cfg, rounds, alpha, fn):
+    """The folded chain's residual 1 - sum(wrow) must equal
+    prod(1 - a_k) — the telescoping identity the fold relies on."""
+    env = make_env(cfg)
+    async_sched = agg_schemes.precompute_async_schedule(
+        FLEnv(dataset_size=506, batch_size=5, epochs=3, **cfg),
+        rounds=rounds, alpha=alpha, staleness_fn=fn)
+    sched = agg_schemes.precompute_weighted_schedule(
+        env, rounds=rounds, scheme='fedasync', alpha=alpha, staleness_fn=fn)
+    assert np.all(sched.wrow >= 0.0)
+    assert np.all(sched.wrow[~sched.committed] == 0.0)
+    np.testing.assert_allclose(
+        1.0 - sched.wrow.sum(axis=-1),
+        np.prod(1.0 - async_sched.alphas, axis=-1), rtol=1e-9)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 64), clusters=st.integers(1, 10),
+       seed=st.integers(0, 2**16))
+def test_cluster_labels_partition_and_balance(m, clusters, seed):
+    profile = np.random.default_rng(seed).exponential(size=m)
+    labels = selection.cluster_by_profile(profile, clusters)
+    k = min(clusters, m)
+    assert labels.shape == (m,)
+    assert labels.min() >= 0 and labels.max() == k - 1
+    sizes = np.bincount(labels, minlength=k)
+    assert np.all(sizes >= 1)                      # a partition, no empties
+    assert sizes.max() - sizes.min() <= 1          # balanced within one
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 16), cap=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+def test_sentinel_slots_carry_zero_weight(m, cap, seed):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    n_real = rng.integers(0, min(m, cap) + 1)
+    idx = np.full(cap, m, np.int32)                # sentinel index == m
+    idx[:n_real] = rng.choice(m, size=n_real, replace=False)
+    weights = rng.random(m)
+    w = np.asarray(protocol._slot_weights(jnp.asarray(idx),
+                                          jnp.asarray(weights)))
+    assert np.all(w[n_real:] == 0.0)
+    np.testing.assert_allclose(w[:n_real], weights[idx[:n_real]], rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 6),
+       fraction=st.floats(0.2, 1.0), lag=st.integers(1, 6))
+def test_sparse_schedule_dense_roundtrip(cfg, rounds, fraction, lag):
+    dense = federation.precompute_safa_schedule(
+        make_env(cfg), fraction=fraction, lag_tolerance=lag, rounds=rounds)
+    sparse = federation.precompute_safa_schedule(
+        make_env(cfg), fraction=fraction, lag_tolerance=lag, rounds=rounds,
+        form='sparse')
+    back = sparse.to_dense()
+    for field in ('committed', 'picked', 'undrafted', 'deprecated'):
+        np.testing.assert_array_equal(getattr(back, field),
+                                      getattr(dense, field), err_msg=field)
+    # round 1's population-wide bootstrap sync is elided by design
+    np.testing.assert_array_equal(back.sync[1:], dense.sync[1:])
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 6),
+       alpha=st.floats(0.05, 1.0))
+def test_async_commit_masks_match_weighted(cfg, rounds, alpha):
+    """The weighted precompute replays FedAsync's event process exactly:
+    same commits, same records, whatever the scheme."""
+    a = agg_schemes.precompute_async_schedule(make_env(cfg), rounds=rounds,
+                                              alpha=alpha)
+    w = agg_schemes.precompute_weighted_schedule(make_env(cfg),
+                                                 rounds=rounds,
+                                                 scheme='seafl', alpha=alpha)
+    np.testing.assert_array_equal(a.committed, w.committed)
+    import dataclasses
+    assert [dataclasses.asdict(r) for r in a.records] == \
+        [dataclasses.asdict(r) for r in w.records]
+
+
+if __name__ == '__main__':
+    pytest.main([__file__, '-q'])
