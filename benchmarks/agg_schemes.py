@@ -27,11 +27,11 @@ from benchmarks.common import Timer, emit
 from repro import api
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
-from repro.fedsim import FLEnv
+from repro.fedsim import EnvSpec
 
 ROUNDS = 60
-BASE = dict(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
-            t_lim=830.0, seed=3)
+BASE = EnvSpec(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
+               t_lim=830.0, seed=3)
 
 #: scheme name -> SweepMember overrides on the SeaflSpec umbrella (None ==
 #: the umbrella spec's own defaults).
@@ -47,17 +47,17 @@ SCHEMES = {
 
 
 def _quickstart_task():
-    env = FLEnv(**BASE)
+    env = BASE.build()
     x, y = make_regression()
     data = partition(x, y, env.partition_sizes, batch_size=5, seed=1)
     return regression_task(data, lr=1e-3, epochs=3)
 
 
 def _members():
-    """One member per scheme — fresh same-seed envs (the precompute
-    consumes each env's rng), so every scheme sees identical event
+    """One member per scheme — declarative same-seed env specs (the sweep
+    builds each member a fresh env), so every scheme sees identical event
     draws."""
-    return [api.SweepMember(env=FLEnv(**BASE), overrides=ov)
+    return [api.SweepMember(env=BASE, overrides=ov)
             for ov in SCHEMES.values()]
 
 
@@ -75,7 +75,7 @@ def run(rounds: int = ROUNDS, reps: int = 3,
         json_path: str | None = None) -> dict:
     task = _quickstart_task()
     ex = api.ExecSpec(engine='fleet', eval_every=max(1, rounds // 4))
-    exp = api.Experiment(task, FLEnv(**BASE), api.SeaflSpec(), ex,
+    exp = api.Experiment(task, BASE, api.SeaflSpec(), ex,
                          rounds=rounds)
 
     def sweep():
@@ -89,7 +89,7 @@ def run(rounds: int = ROUNDS, reps: int = 3,
     emit('agg_schemes/fleet/rounds_per_sec', f'{total_rounds / sec:.1f}',
          f'sec_per_sweep={sec:.3f};S={len(SCHEMES)};rounds={rounds}')
 
-    out = {'rounds': rounds, 'm': BASE['m'], 'engine': 'fleet',
+    out = {'rounds': rounds, 'm': BASE.m, 'engine': 'fleet',
            'sec_per_sweep': sec, 'schemes': []}
     for name, hist in zip(SCHEMES, hists):
         evals = [(r, e['loss']) for r, e in hist.evals()]

@@ -24,15 +24,15 @@ from benchmarks.common import Timer, emit
 from repro.core import federation, protocol
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
-from repro.fedsim import FLEnv
+from repro.fedsim import EnvSpec
 from repro.kernels.ops import comm_bytes, count_pallas_calls
 
 ROUNDS = 40
 
 
 def _quickstart_setup():
-    env = FLEnv(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
-                epochs=3, t_lim=830.0, seed=3)
+    env = EnvSpec(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
+                  epochs=3, t_lim=830.0, seed=3).build()
     x, y = make_regression()
     data = partition(x, y, env.partition_sizes, batch_size=5, seed=1)
     task = regression_task(data, lr=1e-3, epochs=3)
@@ -48,8 +48,8 @@ _MODES = {
 
 def _time_mode(task, mode: str, reps: int, rounds: int) -> float:
     def once():
-        env = FLEnv(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
-                    epochs=3, t_lim=830.0, seed=3)
+        env = EnvSpec(m=5, crash_prob=0.3, dataset_size=506,
+                      batch_size=5, epochs=3, t_lim=830.0, seed=3).build()
         h = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
                                 rounds=rounds, eval_every=rounds,
                                 engine='scan', **_MODES[mode])

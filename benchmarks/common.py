@@ -12,7 +12,7 @@ import time
 
 from repro import api
 from repro.configs import PAPER_TASKS
-from repro.fedsim import FLEnv
+from repro.fedsim import Env, EnvSpec
 
 CR_GRID = (0.1, 0.3, 0.5, 0.7)
 C_GRID = (0.1, 0.3, 0.5, 0.7, 1.0)
@@ -22,16 +22,17 @@ PROTOCOLS = ('fedavg', 'fedcs', 'safa')
 EXEC_KEYS = tuple(f.name for f in dataclasses.fields(api.ExecSpec))
 
 
-def make_env(task_name: str, cr: float, seed: int = 0, scale: float = 1.0) -> FLEnv:
+def make_env(task_name: str, cr: float, seed: int = 0,
+             scale: float = 1.0) -> Env:
     t = PAPER_TASKS[task_name]
     m = max(2, int(t['m'] * scale))
     n = max(m * t['batch_size'], int(t['dataset_size'] * scale))
-    return FLEnv(m=m, crash_prob=cr, dataset_size=n,
-                 batch_size=t['batch_size'], epochs=t['epochs'],
-                 t_lim=t['t_lim'], seed=seed)
+    return EnvSpec(m=m, crash_prob=cr, dataset_size=n,
+                   batch_size=t['batch_size'], epochs=t['epochs'],
+                   t_lim=t['t_lim'], seed=seed).build()
 
 
-def build_experiment(name: str, env: FLEnv, C: float, rounds: int,
+def build_experiment(name: str, env: Env, C: float, rounds: int,
                      lag_tolerance: int = 5, task=None, seed: int = 0,
                      **kw) -> api.Experiment:
     """A benchmark cell as a declarative spec: protocol fields from the
@@ -49,7 +50,7 @@ def build_experiment(name: str, env: FLEnv, C: float, rounds: int,
                           api.ExecSpec(**exec_kw), rounds=rounds, seed=seed)
 
 
-def run_protocol(name: str, env: FLEnv, C: float, rounds: int,
+def run_protocol(name: str, env: Env, C: float, rounds: int,
                  lag_tolerance: int = 5, task=None, **kw):
     return build_experiment(name, env, C, rounds,
                             lag_tolerance=lag_tolerance, task=task,

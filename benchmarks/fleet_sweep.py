@@ -40,31 +40,31 @@ from benchmarks.common import Timer, emit
 from repro.core import federation
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
-from repro.fedsim import FLEnv, env_grid
+from repro.fedsim import EnvSpec, env_grid
 
 ROUNDS = 60
-BASE = dict(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
-            t_lim=830.0, seed=3)
+BASE = EnvSpec(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
+               t_lim=830.0, seed=3)
 FRACTIONS = (0.5, 0.3, 1.0, 0.1)
 TAUS = (5, 2, 10, 1)
 
 
 def _quickstart_task():
-    env = FLEnv(**BASE)
+    env = BASE.build()
     x, y = make_regression()
     data = partition(x, y, env.partition_sizes, batch_size=5, seed=1)
     return regression_task(data, lr=1e-3, epochs=3)
 
 
 def _members(s: int = 16):
-    """Fresh fleet of ``s`` members (envs carry consumable rng state):
-    crash rate x draw stream, with fraction / lag tolerance cycling per
-    member."""
-    envs = env_grid(BASE, crash_prob=(0.1, 0.3, 0.5, 0.7),
-                    draw_seed=(0, 1, 2, 3))[:s]
+    """Fresh fleet of ``s`` members: crash rate x draw stream, with
+    fraction / lag tolerance cycling per member.  The declarative specs
+    build each call (envs are consumables, specs are values)."""
+    specs = env_grid(BASE, crash_prob=(0.1, 0.3, 0.5, 0.7),
+                     draw_seed=(0, 1, 2, 3))[:s]
     hyper = itertools.cycle(zip(FRACTIONS, TAUS))
     return [federation.SweepMember(env=e, fraction=f, lag_tolerance=tau)
-            for e, (f, tau) in zip(envs, hyper)]
+            for e, (f, tau) in zip(specs, hyper)]
 
 
 def _time(fn, reps: int = 5) -> float:

@@ -1,0 +1,162 @@
+"""Trace-driven heterogeneity shoot-out: scenario grid x protocol x wire.
+
+    PYTHONPATH=src python -m benchmarks.heterogeneity [--smoke] [--json F]
+
+The trace simulator makes a deployment scenario *data* on the env spec:
+day/night availability cycles, Markov on/off churn, and a device-class
+grid are just ``EnvSpec.traces`` values, so all four scenarios ride ONE
+``run_sweep(engine='fleet')`` dispatch per (protocol, wire) cell as
+members of a single experiment, differing only in their
+``SweepMember.overrides={'traces': ...}`` env override.  Every member
+is built on a same-seed spec, so scenarios replay the same uniform
+event draws — only the trace-modulated thresholds and timings differ.
+
+The base spec uses ``comm='wire'``: comm times come from the experiment
+model's measured wire bytes under the active ``ExecSpec.wire``, so the
+f32 and int8 columns see genuinely different uplink times (at this toy
+model size the packed-int8 lane padding dominates, so int8 ships MORE
+bytes than the 56-byte f32 tree — the point is that the event simulator
+feels the real wire, not that int8 wins at 13 weights), which shifts
+round lengths, CFCFM picks and FedCS selections end-to-end.
+
+Emits one CSV row per (protocol, wire, scenario) cell plus per-cell
+fleet rounds/sec, and — with ``--json`` — writes the grid to
+``BENCH_heterogeneity.json`` for the CI artifact, including the
+int8-vs-f32 round-length delta per (protocol, scenario).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from benchmarks.common import Timer, emit
+from repro import api
+from repro.data import make_regression, partition
+from repro.data.tasks import regression_task
+from repro.fedsim import DayNight, DeviceClass, DeviceClasses, EnvSpec, MarkovChurn
+
+ROUNDS = 60
+#: microscopic last-mile bandwidth so the measured wire bytes (tens of
+#: bytes to a few KB for the quickstart model) land in the same ballpark
+#: as the train times — otherwise both wires round to "instant upload".
+BASE = EnvSpec(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
+               t_lim=830.0, seed=3, client_bw_mbps=2e-4, comm='wire')
+
+#: scenario name -> EnvSpec.traces value (None == the paper's static
+#: availability/bandwidth/speed model).
+SCENARIOS = {
+    'stable': None,
+    'daynight': DayNight(period=8, night_availability=0.3,
+                         night_bandwidth=0.5, seed=0),
+    'churn': MarkovChurn(p_off=0.2, p_on=0.6, seed=0),
+    'classes': DeviceClasses((DeviceClass('hi', speed=2.0, bandwidth=4.0),
+                              DeviceClass('lo', speed=0.5, bandwidth=0.25)),
+                             mix=(0.4, 0.6)),
+}
+PROTOCOLS = ('safa', 'fedavg', 'fedcs')
+WIRES = ('f32', 'int8')
+
+
+def _quickstart_task():
+    env = BASE.build()
+    x, y = make_regression()
+    data = partition(x, y, env.partition_sizes, batch_size=5, seed=1)
+    return regression_task(data, lr=1e-3, epochs=3)
+
+
+def _members():
+    """One member per scenario — same-seed declarative specs, differing
+    only in the ``traces`` env override (the sweep resolver splits env
+    fields out of ``overrides`` and rebuilds each member's env)."""
+    return [api.SweepMember(env=BASE, fraction=0.5, lag_tolerance=5,
+                            overrides={'traces': tr})
+            for tr in SCENARIOS.values()]
+
+
+def _pdef(name: str) -> api.ProtocolDef:
+    return next(p for p in api.PROTOCOLS.values() if p.name == name)
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                   # warm the jit caches
+    times = []
+    for _ in range(reps):
+        with Timer() as t:
+            fn()
+        times.append(t.dt)
+    return min(times)
+
+
+def run(rounds: int = ROUNDS, reps: int = 3,
+        json_path: str | None = None) -> dict:
+    task = _quickstart_task()
+    out = {'rounds': rounds, 'm': BASE.m, 'engine': 'fleet',
+           'scenarios': list(SCENARIOS), 'cells': []}
+    round_len = {}
+    for name in PROTOCOLS:
+        pdef = _pdef(name)
+        for wire in WIRES:
+            ex = api.ExecSpec(engine='fleet', wire=wire,
+                              eval_every=max(1, rounds // 4))
+            exp = api.Experiment(task, BASE, pdef.spec_cls(), ex,
+                                 rounds=rounds)
+
+            def sweep():
+                hists = exp.compile().run_sweep(_members())
+                jax.block_until_ready(hists[-1].final_global)
+                return hists
+
+            sec = _time(sweep, reps)
+            hists = sweep()
+            total = len(SCENARIOS) * rounds
+            emit(f'heterogeneity/{name}/{wire}/rounds_per_sec',
+                 f'{total / sec:.1f}',
+                 f'sec_per_sweep={sec:.3f};S={len(SCENARIOS)};rounds={rounds}')
+            for scen, hist in zip(SCENARIOS, hists):
+                rl = hist.mean('round_len')
+                round_len[(name, wire, scen)] = rl
+                emit(f'heterogeneity/{name}/{wire}/{scen}/round_len',
+                     f'{rl:.2f}',
+                     f'eur={hist.mean("eur"):.3f};'
+                     f'final_loss={hist.best_eval["loss"]:.6f}')
+                out['cells'].append({
+                    'protocol': name, 'wire': wire, 'scenario': scen,
+                    'round_len': rl, 'eur': hist.mean('eur'),
+                    'sr': hist.mean('sr'),
+                    'best_loss': hist.best_eval['loss'],
+                    'evals': [(r, e['loss']) for r, e in hist.evals()],
+                })
+    # the headline: wire layout changes the event stream, per scenario
+    out['wire_round_len_delta'] = [
+        {'protocol': name, 'scenario': scen,
+         'f32': round_len[(name, 'f32', scen)],
+         'int8': round_len[(name, 'int8', scen)],
+         'delta': round_len[(name, 'int8', scen)]
+                  - round_len[(name, 'f32', scen)]}
+        for name in PROTOCOLS for scen in SCENARIOS]
+    if json_path:
+        with open(json_path, 'w') as f:
+            json.dump(out, f, indent=1)
+        print(f'# wrote {json_path}', flush=True)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--smoke', action='store_true',
+                    help='tiny-parameter CI pass (6 rounds, 1 rep)')
+    ap.add_argument('--json', default=None, metavar='FILE',
+                    help='write the scenario grid '
+                         '(e.g. BENCH_heterogeneity.json)')
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run(rounds=6, reps=1, json_path=args.json or
+            'BENCH_heterogeneity.json')
+    else:
+        run(json_path=args.json)
+
+
+if __name__ == '__main__':
+    main()

@@ -21,7 +21,7 @@ from benchmarks.common import Timer, emit
 from repro.core import federation, protocol
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
-from repro.fedsim import FLEnv
+from repro.fedsim import EnvSpec
 from repro.kernels.ops import count_pallas_calls
 
 ROUNDS = 60
@@ -29,8 +29,8 @@ ROUNDS = 60
 
 def _quickstart_setup():
     """The quickstart task: m=5 unreliable clients, linear regression."""
-    env = FLEnv(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
-                epochs=3, t_lim=830.0, seed=3)
+    env = EnvSpec(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
+                  epochs=3, t_lim=830.0, seed=3).build()
     x, y = make_regression()
     data = partition(x, y, env.partition_sizes, batch_size=5, seed=1)
     task = regression_task(data, lr=1e-3, epochs=3)
@@ -42,8 +42,8 @@ def _time_engine(task, engine: str, reps: int = 3,
     """Steady-state seconds per numeric SAFA run (fresh env each rep so the
     schedule precompute is included; jit caches are warm after rep 0)."""
     def once():
-        env = FLEnv(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
-                    epochs=3, t_lim=830.0, seed=3)
+        env = EnvSpec(m=5, crash_prob=0.3, dataset_size=506,
+                      batch_size=5, epochs=3, t_lim=830.0, seed=3).build()
         h = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
                                 rounds=rounds, eval_every=rounds,
                                 engine=engine)

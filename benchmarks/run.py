@@ -16,9 +16,9 @@ import argparse
 import time
 
 from benchmarks import (accuracy, agg_schemes, bias_curves, comm_path, eur,
-                        kernels_bench, lag_tolerance, roofline_table,
-                        round_engine, round_length, selection_ablation,
-                        sr_futility)
+                        heterogeneity, kernels_bench, lag_tolerance,
+                        roofline_table, round_engine, round_length,
+                        selection_ablation, sr_futility)
 
 SECTIONS = {
     'round_length': lambda full: (round_length.run(), round_length.summarize()),
@@ -32,6 +32,8 @@ SECTIONS = {
     'selection_ablation': lambda full: selection_ablation.run(),
     'agg_schemes': lambda full: agg_schemes.run(
         json_path='BENCH_agg_schemes.json'),
+    'heterogeneity': lambda full: heterogeneity.run(
+        json_path='BENCH_heterogeneity.json'),
     'kernels': lambda full: kernels_bench.run(),
     'roofline': lambda full: roofline_table.run(),
     # imported lazily: fleet_sweep forces one XLA host device per core at
@@ -66,6 +68,10 @@ SMOKE_SECTIONS = {
     # the BENCH_agg_schemes.json CI artifact
     'agg_schemes': lambda: agg_schemes.run(
         rounds=6, reps=1, json_path='BENCH_agg_schemes.json'),
+    # the trace-scenario grid (scenario x protocol x wire); the JSON is
+    # the BENCH_heterogeneity.json CI artifact
+    'heterogeneity': lambda: heterogeneity.run(
+        rounds=6, reps=1, json_path='BENCH_heterogeneity.json'),
     'fleet_sweep': lambda: __import__(
         'benchmarks.fleet_sweep', fromlist=['run']).run(rounds=6, s=4,
                                                         reps=1),

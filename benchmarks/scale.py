@@ -34,7 +34,6 @@ number of *completing* clients per round — which bounds SAFA's active set
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import subprocess
@@ -103,7 +102,7 @@ class ScaleTask:
 
 def make_scale_env(m: int, quota: int, seed: int = 0, *,
                    bound_active: bool = True):
-    """FLEnv for the quota-bounded regime.
+    """Environment for the quota-bounded regime.
 
     ``bound_active=True`` (SAFA) pins ``t_lim`` at the ~2.5*quota-th
     fastest client's training time, so the number of *completing* clients
@@ -114,19 +113,20 @@ def make_scale_env(m: int, quota: int, seed: int = 0, *,
     completions.  ``bound_active=False`` (FedAvg/FedCS, whose active set
     is the selection quota by construction) keeps a permissive deadline
     so selected clients actually complete."""
-    from repro.fedsim import FLEnv
+    from repro.fedsim import EnvSpec
     # crash_prob=0: a crashed straggler carries partial progress and can
     # slip under next round's deadline, so at crash_prob>0 the completing
     # population grows as O(crash_prob * m) — a protocol-faithful effect,
     # but this benchmark isolates the quota-bounded server path.
-    env = FLEnv(m=m, crash_prob=0.0, dataset_size=20 * m, batch_size=10,
-                epochs=1, t_lim=1e9, seed=seed, model_size_mb=1e-3)
+    spec = EnvSpec(m=m, crash_prob=0.0, dataset_size=20 * m, batch_size=10,
+                   epochs=1, t_lim=1e9, seed=seed, model_size_mb=1e-3)
+    env = spec.build()
     if not bound_active:
         return env
     base = env.t_updown + env.full_train_time()
     k = min(m - 1, int(round(2.5 * quota)))
     t_lim = float(np.partition(base, k)[k])
-    return dataclasses.replace(env, t_lim=t_lim)
+    return spec.replace(t_lim=t_lim).build()
 
 
 def _vm_mb(field: str) -> float:

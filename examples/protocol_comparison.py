@@ -13,22 +13,22 @@ import os
 from repro import api
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
-from repro.fedsim import FLEnv, env_grid
+from repro.fedsim import EnvSpec, env_grid
 
 C, ROUNDS = 0.3, int(os.environ.get('ROUNDS', '80'))
 CRASH_RATES = (0.1, 0.3, 0.5, 0.7)
-BASE = dict(m=5, dataset_size=506, batch_size=5, epochs=3, t_lim=830.0,
-            seed=3)
+BASE = EnvSpec(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
+               t_lim=830.0, seed=3)
 
-env0 = FLEnv(crash_prob=0.3, **BASE)
+env0 = BASE.build()
 x, y = make_regression()
 data = partition(x, y, env0.partition_sizes, 5, seed=1)
 task = regression_task(data, lr=1e-3, epochs=3)
 
 rows = {}
 for pdef in api.PROTOCOLS.values():
-    members = [api.SweepMember(env=e, fraction=C, lag_tolerance=5)
-               for e in env_grid(BASE, crash_prob=CRASH_RATES)]
+    members = [api.SweepMember(env=spec, fraction=C, lag_tolerance=5)
+               for spec in env_grid(BASE, crash_prob=CRASH_RATES)]
     exp = api.Experiment(task, env0, pdef.spec_cls(),
                          api.ExecSpec(eval_every=max(2, ROUNDS // 4)),
                          rounds=ROUNDS)

@@ -5,11 +5,12 @@
 from repro import api
 from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
-from repro.fedsim import FLEnv
+from repro.fedsim import EnvSpec
 
 # 1. An edge environment: 5 unreliable clients (30% crash rate per round).
-env = FLEnv(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
-            t_lim=830.0, seed=3)
+#    EnvSpec is declarative — .build() draws the client population.
+env = EnvSpec(m=5, crash_prob=0.3, dataset_size=506, batch_size=5, epochs=3,
+              t_lim=830.0, seed=3).build()
 
 # 2. A federated task: Boston-housing-like regression, data partitioned
 #    with the paper's N(mu, 0.3mu) imbalance model.

@@ -142,9 +142,9 @@ def precompute_async_schedule(env, *, rounds: int, alpha: float = 0.6,
     same float expression (1+dt)^(-exp) — which is how the upgraded
     ``FedAsyncSpec`` keeps its historical results (regression-tested)."""
     m = env.m
-    full_tt = env.full_train_time()
+    tim = env.round_timing(rounds)        # [rounds, m] trace/wire-aware
     crashed_all, _ = env.draw_rounds(rounds)
-    arrival_base = env.t_dist(m) + 2 * env.t_updown + full_tt
+    t_dist_m = env.t_dist(m)
     versions = np.zeros(m, dtype=float)   # global version at last pull
     global_version = 0
     committed_s = np.zeros((rounds, m), bool)
@@ -154,6 +154,8 @@ def precompute_async_schedule(env, *, rounds: int, alpha: float = 0.6,
 
     for t in range(1, rounds + 1):
         crashed = crashed_all[t - 1]
+        arrival_base = t_dist_m \
+            + (tim.t_down[t - 1] + tim.t_up[t - 1]) + tim.full_tt[t - 1]
         arrival = np.where(~crashed, arrival_base, np.inf)
         too_slow = arrival > env.t_lim
         committed = ~crashed & ~too_slow
@@ -245,9 +247,13 @@ def precompute_weighted_schedule(env, *, rounds: int, scheme: str = 'seafl',
         raise ValueError(
             f'unknown scheme {scheme!r} (want one of {WEIGHTED_SCHEMES})')
     m = env.m
+    # CSAFL clusters on the *base* training profile (round-invariant by
+    # design, so cluster membership is stable even under traces); arrivals
+    # use the per-round trace/wire-aware timing
     full_tt = env.full_train_time()
+    tim = env.round_timing(rounds)
     crashed_all, _ = env.draw_rounds(rounds)
-    arrival_base = env.t_dist(m) + 2 * env.t_updown + full_tt
+    t_dist_m = env.t_dist(m)
     data_w = np.asarray(env.weights, dtype=float)
     versions = np.zeros(m, dtype=float)
     global_version = 0
@@ -267,6 +273,8 @@ def precompute_weighted_schedule(env, *, rounds: int, scheme: str = 'seafl',
 
     for t in range(1, rounds + 1):
         crashed = crashed_all[t - 1]
+        arrival_base = t_dist_m \
+            + (tim.t_down[t - 1] + tim.t_up[t - 1]) + tim.full_tt[t - 1]
         arrival = np.where(~crashed, arrival_base, np.inf)
         too_slow = arrival > env.t_lim
         committed = ~crashed & ~too_slow
@@ -389,7 +397,7 @@ register(ProtocolDef(
     fleet_precompute=_weighted_fleet_precompute,
     scan_segment=_weighted_scan_segment, loop_round=_weighted_loop_round,
     fleet_segment=_weighted_fleet_segment,
-    supports_wire=True, supports_kernel='packed'))
+    supports_wire=True, supports_kernel='packed', spec_overrides=True))
 
 register(ProtocolDef(
     name='csafl', spec_cls=CsaflSpec,
@@ -397,4 +405,4 @@ register(ProtocolDef(
     fleet_precompute=_weighted_fleet_precompute,
     scan_segment=_weighted_scan_segment, loop_round=_weighted_loop_round,
     fleet_segment=_weighted_fleet_segment,
-    supports_wire=True, supports_kernel='packed'))
+    supports_wire=True, supports_kernel='packed', spec_overrides=True))

@@ -42,6 +42,7 @@ over this module and emit ``DeprecationWarning``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable, Optional
 
 import jax
@@ -49,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro import fedsim
 from repro.core import federation, protocol, schedules
 from repro.core.federation import Task
 from repro.core.schedules import History, RoundRecord, SweepMember
@@ -224,6 +226,11 @@ class ProtocolDef:
     #: [m, ...] local/cache stacks): the runners then never materialise
     #: the O(m) state — resident memory stays quota-bounded at any m.
     delta_stateless: bool = False
+    #: the protocol's precompute consumes leftover ``SweepMember.overrides``
+    #: keys as protocol-spec fields (the staleness-adaptive family).  When
+    #: False, override keys that are not ``EnvSpec`` fields are rejected
+    #: at sweep-resolution time with a golden message.
+    spec_overrides: bool = False
 
 
 #: spec type -> ProtocolDef.  The single source of protocol dispatch.
@@ -252,13 +259,17 @@ def spec(name: str, **fields) -> ProtocolSpec:
 
 
 def check_compat(protocol_spec: ProtocolSpec,
-                 exec_spec: Optional[ExecSpec] = None) -> ProtocolDef:
-    """Validate a (protocol, exec) spec pair; returns the ProtocolDef.
+                 exec_spec: Optional[ExecSpec] = None,
+                 env=None) -> ProtocolDef:
+    """Validate a (protocol, exec[, env]) spec triple; returns the
+    ProtocolDef.
 
     This is the single home for every cross-field rule the legacy
     runners enforced ad hoc: wire values, engine names, kernel modes,
     wire x protocol compatibility, and the quantize_uploads-vs-wire
-    exclusivity."""
+    exclusivity.  ``env`` (optional) is an ``fedsim.EnvSpec`` — or a
+    built ``Env``, validated through its spec — checked with the same
+    golden messages ``EnvSpec.build()`` raises."""
     pdef = PROTOCOLS.get(type(protocol_spec))
     if pdef is None:
         raise TypeError(
@@ -266,6 +277,10 @@ def check_compat(protocol_spec: ProtocolSpec,
             f'known specs: {sorted(c.__name__ for c in PROTOCOLS)} '
             f'(register new ones via api.register)')
     ex = exec_spec if exec_spec is not None else ExecSpec()
+    if env is not None:
+        env_spec = getattr(env, 'spec', env)
+        if isinstance(env_spec, fedsim.EnvSpec):
+            fedsim.validate_env_spec(env_spec)
     protocol.check_wire(ex.wire)
     if ex.engine not in (None, 'scan', 'loop', 'fleet', 'sequential'):
         raise ValueError(
@@ -419,9 +434,96 @@ def _apply_saved_history(hist: History, d: dict) -> None:
             rec.eval = rd['eval']
 
 
+def _fp_val(v):
+    """Checkpoint-fingerprint form of one spec field value: recurse into
+    nested dataclasses (trace specs), hash ndarrays (``Replay`` traces)
+    so a fingerprint never embeds megabytes of trace data."""
+    if isinstance(v, np.ndarray):
+        digest = hashlib.sha1(np.ascontiguousarray(v).tobytes()).hexdigest()
+        return f'ndarray{v.shape}:{digest}'
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return (type(v).__name__,
+                [(f.name, _fp_val(getattr(v, f.name)))
+                 for f in dataclasses.fields(v)])
+    return v
+
+
 def _env_fp(env) -> str:
-    return repr([(f.name, getattr(env, f.name))
-                 for f in dataclasses.fields(env)])
+    """Environment identity for checkpoint fingerprints: the declarative
+    spec's fields (a built ``Env`` fingerprints as its spec — same
+    spelling, same fingerprint)."""
+    spec = getattr(env, 'spec', env)
+    return repr(_fp_val(spec))
+
+
+#: declarative env fields a ``SweepMember.overrides`` dict may set
+_ENV_FIELDS = frozenset(f.name for f in dataclasses.fields(fedsim.EnvSpec))
+
+
+def _wire_mb_of(task, wire: str):
+    """Measured (uplink, downlink) megabytes of the task's model under the
+    active wire (``EnvSpec(comm='wire')``): the uplink ships client
+    updates — packed int8 buffers under ``wire='int8'``, plain f32 leaves
+    otherwise — while the server always distributes the uncompressed
+    global.  Memoised on the task (one throwaway ``init_global`` per
+    distinct wire) so sweeps measure once."""
+    from repro.kernels import ops as kops
+    cache = task.__dict__.setdefault('_wire_mb_cache', {})
+    if wire not in cache:
+        g = task.init_global(jax.random.PRNGKey(0))
+        up = kops.comm_bytes(g, wire == 'int8',
+                             layout='packed' if wire == 'int8' else 'tree')
+        down = kops.comm_bytes(g, False, layout='tree')
+        cache[wire] = (up / 1e6, down / 1e6)
+    return cache[wire]
+
+
+def _realize_env(env, *, task, ex):
+    """``EnvSpec`` -> built ``Env``; built envs pass through.  When the
+    spec asks for wire-derived comm (``comm='wire'``), measure the task
+    model's actual bytes under ``ex.wire`` and inject them before any
+    schedule precompute runs."""
+    if env is None:
+        return None
+    if isinstance(env, fedsim.EnvSpec):
+        env = env.build()
+    if getattr(env, 'comm', 'static') == 'wire':
+        if task is None:
+            raise ValueError(
+                "EnvSpec(comm='wire') derives comm times from the "
+                'experiment model; this run has no Task to measure '
+                "(pass a Task, or use comm='static')")
+        env.set_wire_mb(*_wire_mb_of(task, ex.wire))
+    return env
+
+
+def _resolve_member(mem: SweepMember, *, pdef: ProtocolDef, task,
+                    ex: ExecSpec) -> SweepMember:
+    """Split a member's overrides into env fields vs protocol fields,
+    apply the env part declaratively, and realize the env.
+
+    Env-field overrides (``crash_prob``, ``traces``, ...) need a
+    declarative member env — an ``fedsim.EnvSpec`` — so the override is a
+    pure ``dataclasses.replace`` before the population is drawn; leftover
+    keys must be protocol-spec fields of a ``spec_overrides`` protocol
+    (the staleness-adaptive family), rejected here otherwise."""
+    env = mem.env
+    ov = dict(mem.overrides or {})
+    env_ov = {k: ov.pop(k) for k in list(ov) if k in _ENV_FIELDS}
+    if env_ov:
+        if not isinstance(env, fedsim.EnvSpec):
+            raise ValueError(
+                f'member override keys {sorted(env_ov)} are EnvSpec fields; '
+                f'env overrides need a declarative member env '
+                f'(fedsim.EnvSpec), got {type(env).__name__}')
+        env = env.replace(**env_ov)
+    if ov and not pdef.spec_overrides:
+        raise ValueError(
+            f'unknown member override keys {sorted(ov)}; protocol '
+            f'{pdef.name!r} takes env-field overrides only '
+            f'(EnvSpec fields, e.g. crash_prob/traces/draw_seed)')
+    return dataclasses.replace(mem, env=_realize_env(env, task=task, ex=ex),
+                               overrides=(ov or None))
 
 
 def _task_fp(task) -> str:
@@ -802,7 +904,7 @@ register(ProtocolDef(
     precompute=_fedasync_precompute,
     fleet_precompute=_fedasync_fleet_precompute,
     scan_segment=_fedasync_scan_segment, loop_round=_fedasync_loop_round,
-    fleet_segment=_fedasync_fleet_segment))
+    fleet_segment=_fedasync_fleet_segment, spec_overrides=True))
 
 
 # ---------------------------------------------------------------------------
@@ -812,18 +914,23 @@ register(ProtocolDef(
 class Experiment:
     """One declarative experiment: (task, env, protocol spec, exec spec,
     rounds, seed).  ``task`` may be None for timing-only runs
-    (``ExecSpec(numeric=False)``)."""
+    (``ExecSpec(numeric=False)``).
+
+    ``env`` is declarative too: pass an ``fedsim.EnvSpec`` and the
+    experiment builds it (validated in ``check_compat``; wire-derived
+    comm sizes injected under ``comm='wire'``).  A pre-built ``Env`` (or
+    the deprecated ``FLEnv``) is accepted unchanged."""
 
     def __init__(self, task, env, protocol: ProtocolSpec,
                  exec: Optional[ExecSpec] = None, *,  # noqa: A002
                  rounds: int, seed: int = 0):
         self.task = task
-        self.env = env
         self.protocol = protocol
         self.exec = exec if exec is not None else ExecSpec()
         self.rounds = int(rounds)
         self.seed = int(seed)
-        self._pdef = check_compat(self.protocol, self.exec)
+        self._pdef = check_compat(self.protocol, self.exec, env=env)
+        self.env = _realize_env(env, task=task, ex=self.exec)
         self._sched = None
 
     def precompute(self):
@@ -996,6 +1103,14 @@ class CompiledRunner:
             members, tasks = list(members), None
         if not members:
             raise ValueError('empty sweep')
+        # resolve declarative member envs up front: split env-field
+        # overrides from protocol overrides, apply them to the EnvSpec,
+        # and build each member its own Env (one fleet dispatch may then
+        # mix crash rates, traces, device-class grids, ...)
+        members = [
+            _resolve_member(mem, pdef=self._pdef, ex=ex,
+                            task=tasks[s] if tasks is not None else exp.task)
+            for s, mem in enumerate(members)]
         m = members[0].env.m
         if any(mem.env.m != m for mem in members):
             raise ValueError('fleet members must share the client count m')

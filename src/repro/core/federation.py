@@ -138,7 +138,7 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
     committed_prev = np.ones(m, bool)      # round 1: everyone holds w(0)
     picked_prev = np.zeros(m, bool)
     pending = np.zeros(m)                  # straggler partial progress (fraction)
-    full_tt = env.full_train_time()
+    tim = env.round_timing(rounds)         # [rounds, m] trace/wire-aware
     work = env.n_batches * env.epochs      # per-round work units
     wasted = 0.0
     performed = 0.0
@@ -162,9 +162,12 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
 
         crashed, cfrac = crashed_all[t - 1], cfrac_all[t - 1]
         remaining = 1.0 - pending
-        t_train = remaining * full_tt
+        t_train = remaining * tim.full_tt[t - 1]
         t_dist = env.t_dist(int(sync.sum()))
-        arrival = t_dist + env.t_updown * (1 + sync.astype(float)) + t_train
+        # every live client uploads; sync'd ones first download the global
+        # (== t_updown * (1 + sync) bitwise when the traces are constant)
+        arrival = t_dist + (tim.t_up[t - 1] + sync * tim.t_down[t - 1]) \
+            + t_train
         completed = ~crashed
         arrival = np.where(completed, arrival, np.inf)
         performed += float(np.sum(np.where(completed, remaining,
@@ -258,14 +261,19 @@ def _capped_round_len(arrival: np.ndarray, mask: np.ndarray,
     return min(t_lim, float(live.max())) if live.size else t_lim
 
 
-def _sync_round_common(env: FLEnv, selected: np.ndarray, crashed: np.ndarray,
-                       cfrac: np.ndarray, full_tt: np.ndarray):
+def _sync_round_common(env, selected: np.ndarray, crashed: np.ndarray,
+                       cfrac: np.ndarray, t_up: np.ndarray,
+                       t_down: np.ndarray, full_tt: np.ndarray):
     """Shared FedAvg/FedCS timing: server waits for every selected client;
     a crash is detected when the client drops (at its partial-progress
-    point), so the round ends at max(finish/drop times), capped at T_lim."""
+    point), so the round ends at max(finish/drop times), capped at T_lim.
+
+    ``t_up``/``t_down``/``full_tt`` are the round's [m] timing rows
+    (``Env.round_timing``); with constant traces ``t_down + t_up`` equals
+    the legacy ``2 * t_updown`` bitwise."""
     t_dist = env.t_dist(int(selected.sum()))
-    finish = t_dist + 2 * env.t_updown + full_tt
-    drop = t_dist + env.t_updown + cfrac * full_tt
+    finish = t_dist + (t_down + t_up) + full_tt
+    drop = t_dist + t_down + cfrac * full_tt
     per_client = np.where(crashed, drop, finish)
     if selected.any():
         round_len = float(np.max(per_client[selected]))
@@ -275,19 +283,20 @@ def _sync_round_common(env: FLEnv, selected: np.ndarray, crashed: np.ndarray,
 
 
 def _sync_rounds_common(selected, crashed, cfrac, full_tt, *, t_lim,
-                        t_updown, msize, server_bw):
+                        t_up, t_down, msize, server_bw):
     """``_sync_round_common`` vectorised over stacked leading axes.
 
     selected/crashed/cfrac: [..., m] (e.g. [rounds, m] or [S, rounds, m]);
-    the env constants must already broadcast against those shapes (for a
-    fleet: full_tt [S, 1, m], t_updown [S, 1, 1], msize/server_bw/t_lim
-    [S, 1]).  Bit-identical per round to the scalar helper: the masked max
-    equals the compressed max, and every arithmetic expression keeps the
-    scalar path's evaluation order.  Returns (round_len [...], t_dist
-    [...])."""
+    the timing arrays must already broadcast against those shapes (for a
+    fleet: full_tt/t_up/t_down [S, rounds, m] — or [S, 1, m] when no
+    member carries traces — and msize/server_bw/t_lim [S, 1]).
+    Bit-identical per round to the scalar helper: the masked max equals
+    the compressed max, and every arithmetic expression keeps the scalar
+    path's evaluation order ((t_down + t_up) == 2 * t_updown bitwise for
+    constant traces).  Returns (round_len [...], t_dist [...])."""
     t_dist = selected.sum(axis=-1) * msize * 8.0 / server_bw
-    finish = t_dist[..., None] + 2 * t_updown + full_tt
-    drop = t_dist[..., None] + t_updown + cfrac * full_tt
+    finish = t_dist[..., None] + (t_down + t_up) + full_tt
+    drop = t_dist[..., None] + t_down + cfrac * full_tt
     per_client = np.where(crashed, drop, finish)
     live_max = np.max(np.where(selected, per_client, -np.inf), axis=-1)
     round_len = np.where(selected.any(axis=-1), live_max, t_dist)
@@ -310,7 +319,7 @@ def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
         raise ValueError(f"unknown form {form!r} (want 'dense' or 'sparse')")
     m = env.m
     rng = np.random.default_rng(seed + 1)
-    full_tt = env.full_train_time()
+    tim = env.round_timing(rounds)         # [rounds, m] trace/wire-aware
     work = env.n_batches * env.epochs
     wasted = 0.0
     performed = 0.0
@@ -329,8 +338,11 @@ def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
     records = []
 
     for t in range(1, rounds + 1):
+        t_up, t_down = tim.t_up[t - 1], tim.t_down[t - 1]
+        full_tt = tim.full_tt[t - 1]
         if fedcs:
-            est = 2 * env.t_updown + full_tt
+            # per-round estimate: traces move the FedCS pick round to round
+            est = (t_down + t_up) + full_tt
             sel = selection.fedcs_select(est, fraction, env.t_lim)
         elif sel_idx_all is not None:
             sel = np.zeros(m, bool)
@@ -338,9 +350,10 @@ def precompute_sync_schedule(env: FLEnv, *, fraction: float, rounds: int,
         else:
             sel = selection.fedavg_select(rng, m, fraction)
         crashed, cfrac = crashed_all[t - 1], cfrac_all[t - 1]
-        round_len, t_dist = _sync_round_common(env, sel, crashed, cfrac, full_tt)
+        round_len, t_dist = _sync_round_common(env, sel, crashed, cfrac,
+                                               t_up, t_down, full_tt)
         # clients that cannot make the deadline are reckoned crashed (§III-B)
-        too_slow = (t_dist + 2 * env.t_updown + full_tt) > env.t_lim
+        too_slow = (t_dist + (t_down + t_up) + full_tt) > env.t_lim
         crashed = crashed | too_slow
         completed = sel & ~crashed
         performed += float(np.sum(np.where(sel, np.where(crashed, cfrac, 1.0), 0.0) * work))
@@ -377,13 +390,13 @@ def precompute_local_schedule(env: FLEnv, *, fraction: float, rounds: int,
     generators, so bulk-drawing each preserves both streams."""
     m = env.m
     rng = np.random.default_rng(seed + 2)
-    full_tt = env.full_train_time()
+    tim = env.round_timing(rounds)         # [rounds, m] trace/wire-aware
     crashed_all, cfrac_all = env.draw_rounds(rounds)
     selected = selection.fedavg_select_batch([rng], m, fraction, rounds)[0]
     completed = selected & ~crashed_all
     round_len, _ = _sync_rounds_common(
-        selected, crashed_all, cfrac_all, full_tt, t_lim=env.t_lim,
-        t_updown=env.t_updown, msize=env.model_size_mb,
+        selected, crashed_all, cfrac_all, tim.full_tt, t_lim=env.t_lim,
+        t_up=tim.t_up, t_down=tim.t_down, msize=env._dist_mb(),
         server_bw=env.server_bw_mbps)
     round_len = round_len.tolist()
     n_committed = completed.sum(axis=-1).tolist()
@@ -405,9 +418,11 @@ def precompute_fedasync_schedule(env: FLEnv, *, rounds: int,
     vectorised via ``draw_rounds`` (same rng stream as round-by-round
     ``draw_round`` calls)."""
     m = env.m
-    full_tt = env.full_train_time()
+    tim = env.round_timing(rounds)         # [rounds, m] trace/wire-aware
     crashed_all, _ = env.draw_rounds(rounds)
-    arrival_base = env.t_dist(m) + 2 * env.t_updown + full_tt
+    # every client syncs every round, so t_dist(m) is round-invariant; the
+    # per-client leg varies with the round's traces
+    t_dist_m = env.t_dist(m)
     versions = np.zeros(m, dtype=float)   # global version at last pull
     global_version = 0
     committed_s = np.zeros((rounds, m), bool)
@@ -417,6 +432,8 @@ def precompute_fedasync_schedule(env: FLEnv, *, rounds: int,
 
     for t in range(1, rounds + 1):
         crashed = crashed_all[t - 1]
+        arrival_base = t_dist_m \
+            + (tim.t_down[t - 1] + tim.t_up[t - 1]) + tim.full_tt[t - 1]
         arrival = np.where(~crashed, arrival_base, np.inf)
         too_slow = arrival > env.t_lim
         committed = ~crashed & ~too_slow
@@ -472,10 +489,9 @@ def precompute_fleet_schedule(members, *, rounds: int) -> FleetSchedule:
     quota = np.maximum(1, np.rint(fraction * m).astype(int))
     lag = np.array([mem.lag_tolerance for mem in members])[:, None]
     t_lim = np.array([e.t_lim for e in envs])
-    t_updown = np.array([e.t_updown for e in envs])[:, None]
-    msize = np.array([e.model_size_mb for e in envs])
+    msize = np.array([e._dist_mb() for e in envs])
     server_bw = np.array([e.server_bw_mbps for e in envs])
-    full_tt = np.stack([e.full_train_time() for e in envs])
+    tims = [e.round_timing(rounds) for e in envs]
     work = np.stack([e.n_batches * e.epochs for e in envs])
     draws = [e.draw_rounds(rounds) for e in envs]
     crashed_all = np.stack([d[0] for d in draws])     # [S, rounds, m]
@@ -504,9 +520,13 @@ def precompute_fleet_schedule(members, *, rounds: int) -> FleetSchedule:
 
         crashed, cfrac = crashed_all[:, t - 1], cfrac_all[:, t - 1]
         remaining = 1.0 - pending
-        t_train = remaining * full_tt
+        # per-round [S, m] timing rows (trace/wire-aware; bit-identical to
+        # the legacy t_updown * (1 + sync) algebra under constant traces)
+        t_up_r = np.stack([tt.t_up[t - 1] for tt in tims])
+        t_down_r = np.stack([tt.t_down[t - 1] for tt in tims])
+        t_train = remaining * np.stack([tt.full_tt[t - 1] for tt in tims])
         t_dist = sync.sum(axis=-1) * msize * 8.0 / server_bw
-        arrival = t_dist[:, None] + t_updown * (1 + sync.astype(float)) \
+        arrival = t_dist[:, None] + (t_up_r + sync * t_down_r) \
             + t_train
         completed = ~crashed
         arrival = np.where(completed, arrival, np.inf)
@@ -569,8 +589,10 @@ def precompute_sync_fleet_schedule(members, *, rounds: int, fedcs: bool,
     Bit-identical to stacking S ``precompute_sync_schedule`` calls
     (regression-tested) with the per-member Python state loop eliminated:
     FedCS selection is one ``selection.fedcs_select_batch`` rank
-    comparison (the time estimates are round-invariant, so one [S, m]
-    selection broadcasts over rounds), FedAvg selections consume each
+    comparison (when no member carries traces the time estimates are
+    round-invariant and one [S, m] selection broadcasts over rounds; with
+    traces the rounds axis folds into the batch axis — one
+    [S*rounds, m] call), FedAvg selections consume each
     member's own rng stream (``selection.fedavg_select_batch``), and the
     timing/crash algebra plus record stats vectorise over the full
     [S, rounds, m] block.  Synchronous protocols carry no cross-round
@@ -584,32 +606,48 @@ def precompute_sync_fleet_schedule(members, *, rounds: int, fedcs: bool,
         raise ValueError('fleet members must share the client count m')
     fraction = np.array([mem.fraction for mem in members], float)
     t_lim = np.array([e.t_lim for e in envs])
-    t_updown = np.array([e.t_updown for e in envs])
-    msize = np.array([e.model_size_mb for e in envs])
+    msize = np.array([e._dist_mb() for e in envs])
     server_bw = np.array([e.server_bw_mbps for e in envs])
-    full_tt = np.stack([e.full_train_time() for e in envs])     # [S, m]
     work = np.stack([e.n_batches * e.epochs for e in envs])     # [S, m]
     draws = [e.draw_rounds(rounds) for e in envs]
     crashed_all = np.stack([d[0] for d in draws])               # [S, rounds, m]
     cfrac_all = np.stack([d[1] for d in draws])
 
-    if fedcs:
-        est = 2 * t_updown[:, None] + full_tt                   # [S, m]
-        sel = selection.fedcs_select_batch(est, fraction, t_lim)
-        selected = np.broadcast_to(sel[:, None],
-                                   (s_count, rounds, m)).copy()
+    tims = [e.round_timing(rounds) for e in envs]
+    if any(e.has_traces for e in envs):
+        # time-varying timing: full [S, rounds, m] stacks, and FedCS picks
+        # per round (estimates move round to round)
+        t_up = np.stack([tt.t_up for tt in tims])
+        t_down = np.stack([tt.t_down for tt in tims])
+        full_tt = np.stack([tt.full_tt for tt in tims])
+        if fedcs:
+            est = ((t_down + t_up) + full_tt).reshape(s_count * rounds, m)
+            sel = selection.fedcs_select_batch(
+                est, np.repeat(fraction, rounds), np.repeat(t_lim, rounds))
+            selected = sel.reshape(s_count, rounds, m)
     else:
+        # round-invariant timing: [S, 1, m] row-0 views broadcast over
+        # rounds (legacy memory shape), one FedCS selection for all rounds
+        t_up = np.stack([tt.t_up[0] for tt in tims])[:, None]
+        t_down = np.stack([tt.t_down[0] for tt in tims])[:, None]
+        full_tt = np.stack([tt.full_tt[0] for tt in tims])[:, None]
+        if fedcs:
+            est = (t_down[:, 0] + t_up[:, 0]) + full_tt[:, 0]   # [S, m]
+            sel = selection.fedcs_select_batch(est, fraction, t_lim)
+            selected = np.broadcast_to(sel[:, None],
+                                       (s_count, rounds, m)).copy()
+    if not fedcs:
         rngs = [np.random.default_rng(mem.seed + 1) for mem in members]
         selected = selection.fedavg_select_batch(rngs, m, fraction, rounds,
                                                  sampler=sampler)
 
     round_len, t_dist = _sync_rounds_common(
-        selected, crashed_all, cfrac_all, full_tt[:, None],
-        t_lim=t_lim[:, None], t_updown=t_updown[:, None, None],
+        selected, crashed_all, cfrac_all, full_tt,
+        t_lim=t_lim[:, None], t_up=t_up, t_down=t_down,
         msize=msize[:, None], server_bw=server_bw[:, None])
     # clients that cannot make the deadline are reckoned crashed (§III-B)
-    too_slow = (t_dist[..., None] + 2 * t_updown[:, None, None]
-                + full_tt[:, None]) > t_lim[:, None, None]
+    too_slow = (t_dist[..., None] + (t_down + t_up)
+                + full_tt) > t_lim[:, None, None]
     crashed = crashed_all | too_slow
     completed = selected & ~crashed
     performed = np.sum(np.where(selected, np.where(crashed, cfrac_all, 1.0),

@@ -71,17 +71,24 @@ class SweepMember:
     hyper-parameters.  All members of a sweep share the client count
     ``m``; they share the Task too unless the sweep carries per-member
     Tasks (``api.SweepSpec(tasks=...)``, padded stacking)."""
-    env: Any                    # fedsim.FLEnv
+    #: the member's environment: an ``fedsim.EnvSpec`` (declarative —
+    #: the sweep builds each member a fresh env, and ``overrides`` may
+    #: then rewrite env fields) or a pre-built ``Env``/``FLEnv``.
+    env: Any
     fraction: float = 0.5       # ignored by fedasync (fully asynchronous)
     lag_tolerance: int = 5      # SAFA only
     seed: int = 0               # numeric-init (and sync/local-selection) seed
     alpha: float = 0.6          # fedasync/seafl/csafl: base mixing weight
     staleness_exp: float = 0.5  # fedasync/seafl/csafl: poly discount exponent
-    #: per-member protocol-spec field overrides for precomputes that
-    #: support them (the staleness-adaptive family: ``staleness_fn``,
+    #: per-member field overrides, split by key at sweep resolution:
+    #: ``EnvSpec`` field names (``crash_prob``, ``traces``, ``draw_seed``,
+    #: device-class mixes via a new ``traces`` value, ...) rewrite the
+    #: member's declarative env — one fleet dispatch then mixes scenarios —
+    #: while the rest must be protocol-spec fields of a protocol that
+    #: takes them (the staleness-adaptive family: ``staleness_fn``,
     #: ``hinge_a``/``hinge_b``, ``use_loss``/``loss_coef``, ``clusters``,
     #: and — weighted family only — ``scheme``).  ``None`` == no overrides;
-    #: unknown keys are rejected at precompute time.
+    #: unknown keys are rejected before any device work.
     overrides: Optional[dict] = None
 
 

@@ -21,7 +21,7 @@ from repro import checkpoint
 from repro.configs import ARCH_IDS, get_config
 from repro.core import protocol, selection
 from repro.data import make_lm_tokens
-from repro.fedsim import FLEnv
+from repro.fedsim import EnvSpec
 from repro.launch import mesh as mesh_lib
 from repro.launch.steps import SiloSetup
 from repro.models.model import build_model
@@ -50,9 +50,9 @@ def run(arch: str, *, rounds: int, n_clients: int, fraction: float,
     # synthetic federated token streams, one shard per client
     toks = make_lm_tokens(n_docs=n_clients * batch * 4, seq_len=seq,
                           vocab=cfg.vocab_size, seed=seed)
-    env = FLEnv(m=n_clients, crash_prob=crash_prob,
-                dataset_size=toks.shape[0], batch_size=batch, epochs=1,
-                t_lim=3600.0, seed=seed)
+    env = EnvSpec(m=n_clients, crash_prob=crash_prob,
+                  dataset_size=toks.shape[0], batch_size=batch, epochs=1,
+                  t_lim=3600.0, seed=seed).build()
     weights = jnp.asarray(env.weights, jnp.float32)
 
     step = jax.jit(setup.train_step, donate_argnums=(0,))

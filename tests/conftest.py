@@ -11,5 +11,6 @@ jax.config.update('jax_enable_x64', False)
 # [test] extra; CI installs it).  In a bare environment skip collecting
 # them instead of erroring out the whole run.
 if importlib.util.find_spec('hypothesis') is None:
-    collect_ignore = ['test_kernels.py', 'test_protocol.py',
-                      'test_schedule_properties.py', 'test_ssm.py']
+    collect_ignore = ['test_env_trace_properties.py', 'test_kernels.py',
+                      'test_protocol.py', 'test_schedule_properties.py',
+                      'test_ssm.py']

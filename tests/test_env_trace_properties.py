@@ -1,0 +1,64 @@
+"""Property-based trace semantics over randomised ``EnvSpec``
+configurations (hypothesis; the deterministic trace/env contracts live
+in ``tests/test_env_traces.py``, which runs in a bare environment).
+
+The schedule precomputes trust the realized trace bundles blindly, so
+the invariants are pinned here at the env layer: availability 0 must
+force a crash (the threshold reaches 1.0 and draws lie in [0, 1)),
+bandwidth scaling must move comm times monotonically without touching
+train times, and speed scaling the reverse.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.fedsim import EnvSpec, Replay
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+env_configs = st.fixed_dictionaries({
+    'm': st.integers(2, 8),
+    'crash_prob': st.floats(0.0, 0.9),
+    'seed': st.integers(0, 2**16),
+})
+
+
+def spec_of(cfg, **kw) -> EnvSpec:
+    return EnvSpec(dataset_size=506, batch_size=5, epochs=3, t_lim=830.0,
+                   **cfg, **kw)
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 8),
+       avail_seed=st.integers(0, 2**16))
+def test_availability_zero_forces_crash(cfg, rounds, avail_seed):
+    a = np.random.default_rng(avail_seed).integers(
+        0, 2, (rounds, cfg['m'])).astype(float)
+    env = spec_of(cfg, traces=Replay(availability=a)).build()
+    crashed, _ = env.draw_rounds(rounds)
+    assert crashed[a == 0.0].all()
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 8),
+       scale=st.floats(1.1, 16.0))
+def test_bandwidth_scaling_monotone_in_comm_time(cfg, rounds, scale):
+    bw = np.random.default_rng(cfg['seed']).uniform(
+        0.25, 4.0, (rounds, cfg['m']))
+    slow = spec_of(cfg, traces=Replay(bandwidth=bw)).build()
+    fast = spec_of(cfg, traces=Replay(bandwidth=bw * scale)).build()
+    ts, tf = slow.round_timing(rounds), fast.round_timing(rounds)
+    assert np.all(tf.t_up < ts.t_up)
+    assert np.all(tf.t_down < ts.t_down)
+    np.testing.assert_array_equal(tf.full_tt, ts.full_tt)
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 8),
+       scale=st.floats(1.1, 16.0))
+def test_speed_scaling_monotone_in_train_time(cfg, rounds, scale):
+    sp = np.random.default_rng(cfg['seed']).uniform(
+        0.25, 4.0, (rounds, cfg['m']))
+    env = spec_of(cfg, traces=Replay(speed=sp)).build()
+    faster = spec_of(cfg, traces=Replay(speed=sp * scale)).build()
+    assert np.all(faster.round_timing(rounds).full_tt
+                  < env.round_timing(rounds).full_tt)

@@ -1,0 +1,315 @@
+"""Trace-driven heterogeneity contracts (``fedsim.EnvSpec`` + traces).
+
+Four families of invariants:
+
+* **Golden shim** — ``FLEnv(...)`` and ``EnvSpec(...).build()`` (and the
+  constant-trace variant) produce bit-identical runs for every protocol
+  in the ``api.PROTOCOLS`` registry, so the deprecation is a spelling
+  change, not a behaviour change.
+* **Stream preservation** — ``draw_rounds`` consumes the rng exactly as
+  sequential ``draw_round`` calls would; availability traces raise the
+  crash *threshold* without touching the uniforms.
+* **Trace semantics** — availability 0 forces a crash, bandwidth
+  scaling moves comm times monotonically, generators are deterministic
+  in their own seeds (the randomised hypothesis forms live in
+  ``tests/test_env_trace_properties.py``; this module must run in a
+  bare environment).
+* **Wire-derived comm** — under ``EnvSpec(comm='wire')`` the int8 and
+  f32 wires ship different byte counts, so round lengths AND FedCS
+  selections genuinely differ end-to-end.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import conformance as C
+from repro import api
+from repro.core import federation
+from repro.fedsim import (
+    ConstantTrace,
+    DayNight,
+    DeviceClass,
+    DeviceClasses,
+    EnvSpec,
+    FLEnv,
+    MarkovChurn,
+    Replay,
+    env_grid,
+)
+
+BASE = EnvSpec(seed=C.ENV_SEED, **C.BASE_ENV)
+
+
+def legacy_env() -> FLEnv:
+    with warnings.catch_warnings():
+        warnings.simplefilter('ignore', DeprecationWarning)
+        return FLEnv(seed=C.ENV_SEED, **C.BASE_ENV)
+
+
+def run_on_env(spec, env):
+    ex = api.ExecSpec(eval_every=C.EVAL_EVERY)
+    exp = api.Experiment(C.shared_task(), env, spec, ex, rounds=C.ROUNDS)
+    return exp.compile().run()
+
+
+# ---------------------------------------------------------------------------
+# golden shim: FLEnv == EnvSpec.build() == constant traces, all protocols
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('name', sorted(p.name for p in api.PROTOCOLS.values()))
+def test_flenv_shim_bit_identical(name):
+    pdef = next(p for p in api.PROTOCOLS.values() if p.name == name)
+    ref = run_on_env(pdef.spec_cls(), legacy_env())
+    new = run_on_env(pdef.spec_cls(), BASE.build())
+    C.assert_history_equal(ref, new, f'{name}: FLEnv vs EnvSpec.build()')
+    # the declarative spelling (api builds the env) is the same run too
+    decl = run_on_env(pdef.spec_cls(), BASE)
+    C.assert_history_equal(ref, decl, f'{name}: FLEnv vs declarative EnvSpec')
+
+
+@pytest.mark.parametrize('name', sorted(p.name for p in api.PROTOCOLS.values()))
+def test_constant_traces_bit_identical(name):
+    """A no-op trace bundle must not perturb anything: the trace-aware
+    precompute path reproduces the static path bit for bit."""
+    pdef = next(p for p in api.PROTOCOLS.values() if p.name == name)
+    ref = run_on_env(pdef.spec_cls(), BASE.build())
+    traced = run_on_env(pdef.spec_cls(),
+                        BASE.replace(traces=ConstantTrace()).build())
+    C.assert_history_equal(ref, traced, f'{name}: constant traces')
+
+
+def test_flenv_warns_deprecation():
+    with pytest.warns(DeprecationWarning, match='FLEnv is deprecated'):
+        FLEnv(seed=C.ENV_SEED, **C.BASE_ENV)
+
+
+# ---------------------------------------------------------------------------
+# rng stream preservation
+# ---------------------------------------------------------------------------
+
+def test_draw_rounds_matches_sequential_draw_round():
+    seq = BASE.build()
+    pairs = [seq.draw_round() for _ in range(C.ROUNDS)]
+    bulk = BASE.build().draw_rounds(C.ROUNDS)
+    np.testing.assert_array_equal(bulk[0], np.stack([p[0] for p in pairs]))
+    np.testing.assert_array_equal(bulk[1], np.stack([p[1] for p in pairs]))
+
+
+def test_constant_traces_preserve_draw_stream():
+    """Traces modulate only the comparison threshold, never the uniform
+    draws — availability 1 everywhere keeps the legacy masks exactly."""
+    ref = BASE.build().draw_rounds(C.ROUNDS)
+    traced = BASE.replace(traces=ConstantTrace()).build().draw_rounds(C.ROUNDS)
+    np.testing.assert_array_equal(ref[0], traced[0])
+    np.testing.assert_array_equal(ref[1], traced[1])
+
+
+def test_draw_seed_gives_independent_crash_histories_same_population():
+    """The fleet contract: a multi-stream sweep shares one population
+    (partitions, perf) while each member sees its own failure history."""
+    envs = [BASE.replace(draw_seed=k).build() for k in range(3)]
+    for e in envs[1:]:
+        np.testing.assert_array_equal(envs[0].partition_sizes,
+                                      e.partition_sizes)
+        np.testing.assert_array_equal(envs[0].perf, e.perf)
+    masks = [e.draw_rounds(C.ROUNDS)[0] for e in envs]
+    for i in range(len(masks)):
+        for j in range(i + 1, len(masks)):
+            assert not np.array_equal(masks[i], masks[j]), (i, j)
+
+
+# ---------------------------------------------------------------------------
+# trace semantics (deterministic forms; randomised hypothesis variants in
+# tests/test_env_trace_properties.py)
+# ---------------------------------------------------------------------------
+
+def test_availability_zero_forces_crash():
+    rounds = 8
+    a = np.random.default_rng(7).integers(0, 2, (rounds, C.M)).astype(float)
+    env = BASE.replace(traces=Replay(availability=a)).build()
+    crashed, _ = env.draw_rounds(rounds)
+    assert crashed[a == 0.0].all()
+
+
+def test_bandwidth_scaling_monotone_in_comm_time():
+    rounds = 8
+    bw = np.random.default_rng(7).uniform(0.25, 4.0, (rounds, C.M))
+    slow = BASE.replace(traces=Replay(bandwidth=bw)).build()
+    fast = BASE.replace(traces=Replay(bandwidth=bw * 3.0)).build()
+    ts, tf = slow.round_timing(rounds), fast.round_timing(rounds)
+    assert np.all(tf.t_up < ts.t_up)
+    assert np.all(tf.t_down < ts.t_down)
+    np.testing.assert_array_equal(tf.full_tt, ts.full_tt)
+
+
+def test_speed_scaling_monotone_in_train_time():
+    rounds = 8
+    sp = np.random.default_rng(7).uniform(0.25, 4.0, (rounds, C.M))
+    env = BASE.replace(traces=Replay(speed=sp)).build()
+    faster = BASE.replace(traces=Replay(speed=sp * 3.0)).build()
+    assert np.all(faster.round_timing(rounds).full_tt
+                  < env.round_timing(rounds).full_tt)
+
+
+def test_generators_deterministic_and_shaped():
+    rounds, m = 12, 7
+    for gen in (DayNight(period=5, seed=4),
+                MarkovChurn(p_off=0.3, p_on=0.5, seed=4),
+                DeviceClasses((DeviceClass('a', speed=2.0),
+                               DeviceClass('b', bandwidth=0.5)))):
+        t1, t2 = gen.realize(rounds, m), gen.realize(rounds, m)
+        for f in ('availability', 'bandwidth', 'speed'):
+            a1, a2 = getattr(t1, f), getattr(t2, f)
+            assert a1.shape == (rounds, m), (gen, f)
+            np.testing.assert_array_equal(a1, a2)
+        assert t1.availability.min() >= 0.0 and t1.availability.max() <= 1.0
+        assert t1.bandwidth.min() > 0.0 and t1.speed.min() > 0.0
+
+
+def test_device_classes_largest_remainder_split():
+    dc = DeviceClasses((DeviceClass('fast', speed=2.0),
+                        DeviceClass('mid'),
+                        DeviceClass('slow', speed=0.5)),
+                       mix=(0.5, 0.3, 0.2))
+    labels = dc.assignments(10)
+    assert labels.tolist() == [0] * 5 + [1] * 3 + [2] * 2
+    # remainders go to the largest fractional parts, population exact
+    assert len(dc.assignments(7)) == 7
+
+
+def test_replay_validation():
+    with pytest.raises(ValueError, match=r'availability trace must lie in'):
+        BASE.replace(traces=Replay(availability=np.full((2, C.M), 1.5))
+                     ).build().draw_rounds(2)
+    with pytest.raises(ValueError):
+        BASE.replace(traces=Replay(bandwidth=np.zeros((2, C.M)))
+                     ).build().round_timing(2)
+
+
+# ---------------------------------------------------------------------------
+# EnvSpec validation (check_compat golden messages)
+# ---------------------------------------------------------------------------
+
+def test_check_compat_validates_env_spec():
+    sp = api.SafaSpec()
+    with pytest.raises(ValueError, match=r'm must be >= 1, got 0'):
+        api.check_compat(sp, env=BASE.replace(m=0))
+    with pytest.raises(ValueError,
+                       match=r'crash_prob must be in \[0, 1\], got 1.5'):
+        api.check_compat(sp, env=BASE.replace(crash_prob=1.5))
+    with pytest.raises(ValueError,
+                       match=r"unknown comm 'carrier-pigeon' \(want "
+                             r"'static' or 'wire'\)"):
+        api.check_compat(sp, env=BASE.replace(comm='carrier-pigeon'))
+    with pytest.raises(TypeError, match=r'traces must be a fedsim TraceSpec'):
+        api.check_compat(sp, env=BASE.replace(traces=123))
+
+
+def test_wire_comm_needs_a_task():
+    with pytest.raises(ValueError, match=r'no Task to measure'):
+        api.Experiment(None, BASE.replace(comm='wire'), api.SafaSpec(),
+                       api.ExecSpec(numeric=False), rounds=C.ROUNDS)
+
+
+# ---------------------------------------------------------------------------
+# env_grid + member env overrides
+# ---------------------------------------------------------------------------
+
+def test_env_grid_on_specs_row_major():
+    specs = env_grid(BASE, crash_prob=(0.1, 0.7), draw_seed=(0, 1, 2))
+    assert [s.crash_prob for s in specs] == [0.1] * 3 + [0.7] * 3
+    assert [s.draw_seed for s in specs] == [0, 1, 2, 0, 1, 2]
+    assert all(isinstance(s, EnvSpec) for s in specs)
+
+
+def test_member_env_overrides_mix_scenarios_in_one_sweep():
+    """One fleet dispatch, members differing only through EnvSpec-field
+    overrides — each member's history matches its own single run."""
+    churn = MarkovChurn(p_off=0.3, p_on=0.5, seed=0)
+    members = [
+        api.SweepMember(env=BASE, fraction=0.5, lag_tolerance=5),
+        api.SweepMember(env=BASE, fraction=0.5, lag_tolerance=5,
+                        overrides={'crash_prob': 0.7}),
+        api.SweepMember(env=BASE, fraction=0.5, lag_tolerance=5,
+                        overrides={'traces': churn}),
+    ]
+    hists = C.run_sweep(api.SafaSpec(), members)
+    singles = [run_on_env(api.SafaSpec(), BASE),
+               run_on_env(api.SafaSpec(), BASE.replace(crash_prob=0.7)),
+               run_on_env(api.SafaSpec(), BASE.replace(traces=churn))]
+    for i, (h, s) in enumerate(zip(hists, singles)):
+        C.assert_history_equal(h, s, f'member {i}')
+
+
+def test_env_override_messages_are_golden():
+    exp = api.Experiment(C.shared_task(), BASE, api.SafaSpec(),
+                         api.ExecSpec(eval_every=C.EVAL_EVERY),
+                         rounds=C.ROUNDS).compile()
+    with pytest.raises(ValueError,
+                       match=r"unknown member override keys \['bogus'\]; "
+                             r"protocol 'safa' takes env-field overrides "
+                             r"only"):
+        exp.run_sweep([api.SweepMember(env=BASE, overrides={'bogus': 1})])
+    with pytest.raises(ValueError,
+                       match=r"member override keys \['crash_prob'\] are "
+                             r"EnvSpec fields; env overrides need a "
+                             r"declarative member env"):
+        exp.run_sweep([api.SweepMember(env=BASE.build(),
+                                       overrides={'crash_prob': 0.5})])
+
+
+# ---------------------------------------------------------------------------
+# wire-derived comm: the int8 wire changes the event stream
+# ---------------------------------------------------------------------------
+
+WIRED = BASE.replace(comm='wire', client_bw_mbps=2e-4,
+                     traces=Replay(bandwidth=np.linspace(0.5, 2.0, C.M)))
+
+
+def _wire_run(spec_cls, wire):
+    ex = api.ExecSpec(eval_every=C.EVAL_EVERY, wire=wire)
+    exp = api.Experiment(C.shared_task(), WIRED, spec_cls, ex,
+                         rounds=C.ROUNDS)
+    return exp.compile().run()
+
+
+def test_wire_layout_changes_round_lengths():
+    """With comm='wire' and a bandwidth trace active, the f32 and int8
+    wires ship different byte counts — round lengths must differ."""
+    for spec in (api.SafaSpec(), api.FedAvgSpec(), api.FedCSSpec()):
+        f32 = _wire_run(spec, 'f32')
+        q8 = _wire_run(spec, 'int8')
+        rl_f32 = [r.round_len for r in f32.records]
+        rl_q8 = [r.round_len for r in q8.records]
+        assert rl_f32 != rl_q8, type(spec).__name__
+
+
+def test_wire_layout_changes_fedcs_selection():
+    """FedCS picks fastest-first under the deadline from wire-derived
+    comm estimates, so the wire layout shifts *who is selected*."""
+    from repro.core.api import _wire_mb_of
+    task = C.shared_task()
+    masks = {}
+    for wire in ('f32', 'int8'):
+        env = WIRED.replace(t_lim=90.0).build()
+        env.set_wire_mb(*_wire_mb_of(task, wire))
+        sched = federation.precompute_sync_schedule(
+            env, fraction=0.5, rounds=C.ROUNDS, seed=0, fedcs=True)
+        masks[wire] = sched.selected
+    assert not np.array_equal(masks['f32'], masks['int8'])
+
+
+def test_wire_static_unaffected_by_exec_wire():
+    """comm='static' keeps the paper's model_size_mb constant: the exec
+    wire changes numerics, never the event process."""
+    sched = {}
+    for wire in ('f32', 'int8'):
+        h = run_on_env(api.SafaSpec(), BASE) if wire == 'f32' else None
+        ex = api.ExecSpec(eval_every=C.EVAL_EVERY, wire=wire)
+        exp = api.Experiment(C.shared_task(), BASE, api.SafaSpec(), ex,
+                             rounds=C.ROUNDS)
+        sched[wire] = [dataclasses.replace(r, eval=None)
+                       for r in exp.compile().run().records]
+    assert sched['f32'] == sched['int8']
