@@ -21,9 +21,14 @@ quota constant and reports, per (protocol, schedule) cell:
     and the column is monotone (still an upper bound per cell).
 
 Acceptance regime (see ISSUE/ROADMAP): ``rounds_per_sec`` flat within
-~20% across m in {1e3, 1e4, 1e5}; ``--xl`` adds a m=1e6 FedAvg
-``sparse_delta`` cell (stateless carry — the only engine whose resident
-state is O(d), not O(m d)).
+~20% across m in {1e3, 1e4, 1e5}; ``--xl`` adds the m=1e6 cells — FedAvg
+``sparse_delta`` (stateless O(d) carry) and SAFA ``sparse_tier`` (the
+lag-tier value buffer: O((tau+quota)·d) resident state, so SAFA's
+stateful protocol also runs at a million clients on one host).
+
+``--guard`` is the CI memory-regression gate: it runs the m=1e5 SAFA
+``sparse_tier`` cell in its own subprocess and fails if its per-cell
+``vm_hwm_mb`` exceeds ``TIER_HWM_BUDGET_MB``.
 
 The environment is tuned so the active set stays O(quota) as m grows:
 ``lag_tolerance >= rounds`` (no mass forced-sync of stale clients) and
@@ -58,7 +63,16 @@ CELLS = (
     ('safa', 'sparse', 100_000),
     ('fedavg', 'sparse_delta', None),       # stateless: O(D) carry
     ('safa', 'sparse_delta', 100_000),
+    ('safa', 'sparse_tier', None),          # lag-tier: O((tau+quota)*D)
 )
+
+#: committed per-cell peak-RSS budget for the m=1e5 SAFA sparse_tier cell
+#: (``--guard``).  The cell's honest subprocess HWM is dominated by the
+#: jax/XLA runtime plus the O(m) host event machine; a reintroduced
+#: [m, D] device stack at m=1e5 adds ~25 MB per copy and the engines keep
+#: several live, so the budget is set with ~2.5x headroom over the
+#: measured ~205 MB — tight enough that an O(m·D) state regression trips.
+TIER_HWM_BUDGET_MB = 512.0
 
 
 class ScaleTask:
@@ -190,7 +204,7 @@ def _timed_segment(runner, reps: int = 5):
                           runner._pdef.uses_cache, runner._stateless(ex))
     weights_j = jnp.asarray(exp.env.weights)
     if runner._pdef.prepare_state is not None:
-        runner._pdef.prepare_state(st, weights_j, ex, False)
+        runner._pdef.prepare_state(st, weights_j, ex, False, exp.precompute())
     state_b = _tree_nbytes(st.tree())
     train_fn = runner._train_fn(exp.task)
     seg = jax.tree.map(lambda a: a[0:exp.rounds], runner._dev)
@@ -266,7 +280,8 @@ def collect(ms, *, quota: int = QUOTA, rounds: int = ROUNDS,
     jobs = [(p, s, m) for m in ms for (p, s, max_m) in CELLS
             if max_m is None or m <= max_m]
     if xl:
-        jobs += [('fedavg', 'sparse_delta', XL_M)]
+        jobs += [('fedavg', 'sparse_delta', XL_M),
+                 ('safa', 'sparse_tier', XL_M)]
     for p, s, m in jobs:
         r = (run_cell(p, s, m, quota=quota, rounds=rounds) if inproc
              else _cell_subprocess(p, s, m, quota, rounds))
@@ -296,12 +311,34 @@ def run(*, smoke: bool = False, xl: bool = False, quota: int = QUOTA,
     return results
 
 
+def guard(*, budget_mb: float = TIER_HWM_BUDGET_MB, quota: int = QUOTA,
+          rounds: int = ROUNDS) -> dict:
+    """CI memory-regression gate: the m=1e5 SAFA ``sparse_tier`` cell in
+    its own subprocess (honest per-cell VmHWM) against the committed
+    budget.  Raises ``SystemExit`` on regression."""
+    r = _cell_subprocess('safa', 'sparse_tier', 100_000, quota, rounds)
+    hwm = r['vm_hwm_mb']
+    print(f'scale-guard/safa/sparse_tier/m=100000,{hwm:.0f},'
+          f'vm_hwm_mb (budget {budget_mb:.0f}MB)', flush=True)
+    if not hwm <= budget_mb:
+        raise SystemExit(
+            f'memory regression: m=1e5 safa sparse_tier VmHWM '
+            f'{hwm:.0f} MB exceeds the committed budget {budget_mb:.0f} MB '
+            f'(benchmarks/scale.py TIER_HWM_BUDGET_MB)')
+    return r
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument('--smoke', action='store_true',
                     help=f'single in-process m={SMOKE_M} pass (CI guard)')
     ap.add_argument('--xl', action='store_true',
-                    help=f'add the m={XL_M} fedavg sparse_delta cell')
+                    help=f'add the m={XL_M} fedavg sparse_delta and '
+                         f'safa sparse_tier cells')
+    ap.add_argument('--guard', action='store_true',
+                    help='memory-regression gate: fail if the m=1e5 safa '
+                         'sparse_tier cell peaks above '
+                         f'{TIER_HWM_BUDGET_MB:.0f} MB RSS')
     ap.add_argument('--inproc', action='store_true',
                     help='no per-cell subprocesses (VmHWM then monotone)')
     ap.add_argument('--quota', type=int, default=QUOTA)
@@ -316,6 +353,9 @@ def main(argv=None) -> None:
                                   rounds=args.rounds)))
         return
     print('name,us_per_call,derived')
+    if args.guard:
+        guard(quota=args.quota, rounds=args.rounds)
+        return
     if args.smoke:
         run(smoke=True, quota=args.quota, json_path=args.json)
     else:

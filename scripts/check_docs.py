@@ -18,7 +18,8 @@ DOCS = ('README.md', 'docs/ARCHITECTURE.md')
 # plain .py sources scanned whole (no fence extraction): the runnable
 # examples the docs point at, kept import-clean alongside them
 PY_DOCS = ('examples/quickstart.py', 'examples/protocol_comparison.py',
-           'benchmarks/agg_schemes.py', 'benchmarks/heterogeneity.py')
+           'benchmarks/agg_schemes.py', 'benchmarks/heterogeneity.py',
+           'benchmarks/scale.py')
 BLOCK = re.compile(r'```python\n(.*?)```', re.DOTALL)
 IMPORT = re.compile(r'^(?:from\s+[\w.]+\s+import\s+.+|import\s+[\w.]+.*)$')
 

@@ -153,7 +153,14 @@ class ExecSpec:
       per round by carrying the running weighted sum as a delta target.
       Allclose- (not bit-) equivalent; with ``use_kernel='packed'``
       (SAFA) the whole round fuses into one rows-indexed dispatch on
-      resident pack buffers."""
+      resident pack buffers.
+    * ``'sparse_tier'`` — (SAFA) replaces the remaining [m, N] cache
+      stack with a lag-tier value buffer of capacity + 1 rows
+      (capacity = peak live version snapshots + commit rows,
+      O(tau+quota)) plus host-precomputed slot maps.  Resident state is
+      O((tau+quota)·N) — independent of m.  Same slot math as
+      ``'sparse_delta'`` (allclose to it and to ``'dense'``); scan==loop
+      and fleet==sequential stay bit-identical within the form."""
     engine: Optional[str] = None
     wire: str = 'f32'
     use_kernel: Any = False
@@ -222,6 +229,11 @@ class ProtocolDef:
     #: buffers, dropping stateless carries) before any round runs.
     sparse_precompute: Optional[Callable] = None
     prepare_state: Optional[Callable] = None
+    #: lag-tier schedule support (``ExecSpec.schedule == 'sparse_tier'``):
+    #: ``tier_precompute(env, spec, *, rounds, seed)`` emits the
+    #: [rounds, quota] (idx, roles) tensors plus the slot maps over the
+    #: O(tau+quota) value buffer (None -> protocol rejects sparse_tier).
+    tier_precompute: Optional[Callable] = None
     #: the protocol's sparse_delta carry is the global model alone (no
     #: [m, ...] local/cache stacks): the runners then never materialise
     #: the O(m) state — resident memory stays quota-bounded at any m.
@@ -329,25 +341,31 @@ def check_compat(protocol_spec: ProtocolSpec,
         raise ValueError(
             f'unknown sampler {protocol_spec.sampler!r} '
             f"(want 'choice' or 'topk')")
-    if ex.schedule not in ('dense', 'sparse', 'sparse_delta'):
+    if ex.schedule not in ('dense', 'sparse', 'sparse_delta', 'sparse_tier'):
         raise ValueError(
-            f'unknown schedule {ex.schedule!r} (want "dense", "sparse", or '
-            f'"sparse_delta")')
+            f'unknown schedule {ex.schedule!r} (want "dense", "sparse", '
+            f'"sparse_delta", or "sparse_tier")')
     if ex.schedule != 'dense':
         if pdef.sparse_precompute is None:
             raise ValueError(
                 f'protocol {pdef.name!r} has no sparse schedule form; '
                 f'sparse schedules apply to safa/fedavg/fedcs only')
+        if ex.schedule == 'sparse_tier' and pdef.tier_precompute is None:
+            raise ValueError(
+                f'protocol {pdef.name!r} has no lag-tier schedule form; '
+                f"schedule='sparse_tier' applies to safa only (the "
+                f'version-ring compression needs SAFA lag-bounded bases)')
         if getattr(protocol_spec, 'quantize_uploads', False):
             raise ValueError(
                 'quantize_uploads is the dense per-leaf reference knob; '
                 "sparse schedules take the packed wire instead "
                 "(wire='int8')")
-        if ex.schedule == 'sparse_delta' and ex.use_kernel is True:
+        if ex.schedule in ('sparse_delta', 'sparse_tier') \
+                and ex.use_kernel is True:
             raise ValueError(
-                "the leaf-wise kernel (use_kernel=True) has no rows form; "
-                "schedule='sparse_delta' takes use_kernel=False or "
-                "'packed'")
+                f'the leaf-wise kernel (use_kernel=True) has no rows form; '
+                f"schedule={ex.schedule!r} takes use_kernel=False or "
+                f"'packed'")
     return pdef
 
 
@@ -598,16 +616,32 @@ def _safa_sparse_precompute(env, sp, *, rounds, seed):
         rounds=rounds, form='sparse')
 
 
+def _safa_tier_precompute(env, sp, *, rounds, seed):
+    del seed
+    return federation.precompute_safa_schedule(
+        env, fraction=sp.fraction, lag_tolerance=sp.lag_tolerance,
+        rounds=rounds, form='sparse_tier')
+
+
 def _pack_layout(global_w, wire):
     from repro.kernels import ops as kops
     return kops.wire_spec(global_w) if wire == 'int8' \
         else kops.pack_spec(global_w)
 
 
-def _safa_prepare_state(st, weights, ex, fleet: bool):
+def _safa_prepare_state(st, weights, ex, fleet: bool, sched=None):
     """Sparse-delta carries: the running aggregate tree, or — under
     ``use_kernel='packed'`` — the whole state as resident pack buffers
-    ([m+1, N] with a trailing scratch row for sentinel slots)."""
+    ([m+1, N] with a trailing scratch row for sentinel slots).
+
+    Lag-tier carries (``schedule='sparse_tier'``): the [m, ...] stacks are
+    never materialised — the cache slot becomes the O(tau+quota) value
+    buffer of ``sched.capacity + 1`` rows (every row starts as the init
+    global, matching the dense cache init bit-for-bit), and the running
+    aggregate starts at ``global * sum(weights)``."""
+    if ex.schedule == 'sparse_tier':
+        _safa_prepare_tier_state(st, weights, ex, fleet, sched)
+        return
     if ex.schedule != 'sparse_delta':
         return
     from repro.kernels import ops as kops
@@ -635,6 +669,37 @@ def _safa_prepare_state(st, weights, ex, fleet: bool):
     st.local_w = st.cache = None
 
 
+def _safa_prepare_tier_state(st, weights, ex, fleet: bool, sched):
+    """Build the lag-tier carry from the global alone: value buffer
+    (capacity + 1 rows of the init global; trailing row is scratch) and
+    the running aggregate ``global * sum(weights)``."""
+    from repro.kernels import ops as kops
+    cap = int(sched.capacity)
+    wsum = jnp.sum(weights, axis=-1) if fleet else jnp.sum(weights)
+
+    def scale(g):
+        w = wsum.reshape((-1,) + (1,) * (g.ndim - 1)) if fleet else wsum
+        return g.astype(jnp.float32) * w
+
+    def rows(g):
+        if fleet:
+            return jnp.broadcast_to(g[:, None],
+                                    (g.shape[0], cap + 1) + g.shape[1:])
+        return jnp.broadcast_to(g[None], (cap + 1,) + g.shape)
+
+    if ex.use_kernel != 'packed':
+        st.cache = jax.tree.map(rows, st.global_w)
+        st.agg = jax.tree.map(scale, st.global_w)
+        return
+    spec = _pack_layout(
+        _tree_member(st.global_w, 0) if fleet else st.global_w, ex.wire)
+    pack_g = kops.pack_stacked if fleet else kops.pack_global
+    gbuf = pack_g(st.global_w, spec)
+    st.packed = (gbuf, rows(gbuf),
+                 pack_g(jax.tree.map(scale, st.global_w), spec))
+    st.spec = spec
+
+
 def _safa_scan_segment(st, seg, weights, train_fn, ex):
     if ex.schedule == 'dense':
         st.global_w, st.local_w, st.cache = protocol.safa_run_scan(
@@ -644,6 +709,18 @@ def _safa_scan_segment(st, seg, weights, train_fn, ex):
         st.global_w, st.local_w, st.cache = protocol.safa_run_scan_sparse(
             st.global_w, st.local_w, st.cache, seg, weights,
             local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire)
+    elif ex.schedule == 'sparse_tier':
+        if st.packed is not None:
+            from repro.kernels import ops as kops
+            st.packed = protocol.safa_run_scan_sparse_tier_packed(
+                *st.packed, seg, weights, local_train_fn=train_fn,
+                spec=st.spec, wire=ex.wire)
+            st.global_w = kops.unpack_global(st.packed[0], st.spec)
+        else:
+            st.global_w, st.cache, st.agg = \
+                protocol.safa_run_scan_sparse_tier(
+                    st.global_w, st.cache, st.agg, seg, weights,
+                    local_train_fn=train_fn, wire=ex.wire)
     elif st.packed is not None:
         from repro.kernels import ops as kops
         st.packed = protocol.safa_run_scan_sparse_delta_packed(
@@ -675,6 +752,22 @@ def _safa_loop_round(st, sched, i, weights, train_fn, ex):
             st.global_w, st.local_w, st.cache, idx=idx, roles=roles,
             weights=weights, local_train_fn=train_fn, train_args=(i + 1,),
             use_kernel=ex.use_kernel, wire=ex.wire)
+    elif ex.schedule == 'sparse_tier':
+        maps = dict(
+            idx=idx, roles=roles, base_src=_to_j(sched.base_src[i]),
+            cache_src=_to_j(sched.cache_src[i]),
+            cache_dst=_to_j(sched.cache_dst[i]),
+            global_dst=jnp.asarray(sched.global_dst[i]))
+        if st.packed is not None:
+            from repro.kernels import ops as kops
+            st.packed = protocol.safa_round_sparse_tier_packed(
+                *st.packed, **maps, weights=weights, local_train_fn=train_fn,
+                train_args=(i + 1,), spec=st.spec, wire=ex.wire)
+            st.global_w = kops.unpack_global(st.packed[0], st.spec)
+        else:
+            st.global_w, st.cache, st.agg = protocol.safa_round_sparse_tier(
+                st.global_w, st.cache, st.agg, **maps, weights=weights,
+                local_train_fn=train_fn, train_args=(i + 1,), wire=ex.wire)
     elif st.packed is not None:
         from repro.kernels import ops as kops
         st.packed = protocol.safa_round_sparse_delta_packed(
@@ -700,6 +793,18 @@ def _safa_fleet_segment(st, seg, weights, train_fn, ex, ctx):
         st.global_w, st.local_w, st.cache = protocol.safa_run_fleet_sparse(
             st.global_w, st.local_w, st.cache, seg, weights,
             local_train_fn=train_fn, use_kernel=ex.use_kernel, wire=ex.wire)
+    elif ex.schedule == 'sparse_tier':
+        if st.packed is not None:
+            from repro.kernels import ops as kops
+            st.packed = protocol.safa_run_fleet_sparse_tier_packed(
+                *st.packed, seg, weights, local_train_fn=train_fn,
+                spec=st.spec, wire=ex.wire)
+            st.global_w = kops.unpack_stacked(st.packed[0], st.spec)
+        else:
+            st.global_w, st.cache, st.agg = \
+                protocol.safa_run_fleet_sparse_tier(
+                    st.global_w, st.cache, st.agg, seg, weights,
+                    local_train_fn=train_fn, wire=ex.wire)
     elif st.packed is not None:
         from repro.kernels import ops as kops
         st.packed = protocol.safa_run_fleet_sparse_delta_packed(
@@ -729,10 +834,10 @@ def _sync_fleet_precompute(fedcs):
     return precompute
 
 
-def _fedavg_prepare_state(st, weights, ex, fleet: bool):
+def _fedavg_prepare_state(st, weights, ex, fleet: bool, sched=None):
     """The stateless sparse-delta FedAvg/FedCS carry is the global model
     alone — drop the [m, ...] local stack before it is ever committed."""
-    del weights, fleet
+    del weights, fleet, sched
     if ex.schedule == 'sparse_delta':
         st.local_w = None
 
@@ -871,7 +976,8 @@ register(ProtocolDef(
     fleet_segment=_safa_fleet_segment,
     uses_cache=True, supports_wire=True, supports_kernel=True,
     sparse_precompute=_safa_sparse_precompute,
-    prepare_state=_safa_prepare_state))
+    prepare_state=_safa_prepare_state,
+    tier_precompute=_safa_tier_precompute))
 
 register(ProtocolDef(
     name='fedavg', spec_cls=FedAvgSpec,
@@ -941,8 +1047,12 @@ class Experiment:
         The env rng is consumed exactly once per Experiment — repeated
         calls (and repeated ``run()``s) replay the same schedule."""
         if self._sched is None:
-            pre = self._pdef.precompute if self.exec.schedule == 'dense' \
-                else self._pdef.sparse_precompute
+            if self.exec.schedule == 'dense':
+                pre = self._pdef.precompute
+            elif self.exec.schedule == 'sparse_tier':
+                pre = self._pdef.tier_precompute
+            else:
+                pre = self._pdef.sparse_precompute
             self._sched = pre(
                 self.env, self.protocol, rounds=self.rounds, seed=self.seed)
         return self._sched
@@ -1005,8 +1115,12 @@ class CompiledRunner:
         return e
 
     def _stateless(self, ex) -> bool:
-        """Global-only carry: skip the [m, ...] local/cache stacks."""
-        return ex.schedule == 'sparse_delta' and self._pdef.delta_stateless
+        """Global-only carry: skip the [m, ...] local/cache stacks.
+
+        Lag-tier runs are always stateless here — ``prepare_state`` then
+        builds the O(tau+quota) value buffer in the cache slot."""
+        return (ex.schedule == 'sparse_delta' and self._pdef.delta_stateless) \
+            or ex.schedule == 'sparse_tier'
 
     def _train_fn(self, task):
         if self.exp.exec.schedule != 'dense':
@@ -1038,7 +1152,7 @@ class CompiledRunner:
                          self._stateless(ex))
         weights_j = jnp.asarray(exp.env.weights)
         if self._pdef.prepare_state is not None:
-            self._pdef.prepare_state(st, weights_j, ex, False)
+            self._pdef.prepare_state(st, weights_j, ex, False, sched)
         start_seg = 0
         fingerprint = exp.fingerprint()
         if checkpoint is not None and ckpt.exists(checkpoint):
@@ -1131,7 +1245,11 @@ class CompiledRunner:
 
         fleet = self._pdef.fleet_precompute(members, exp.protocol,
                                             rounds=exp.rounds)
-        if ex.schedule != 'dense':
+        if ex.schedule == 'sparse_tier':
+            # fleet-major lag-tier form of the SAME event stream: member
+            # slot maps are remapped into the shared fleet-max capacity
+            fleet = fleet.to_tier()
+        elif ex.schedule != 'dense':
             # fleet-major sparse form of the SAME event stream (members
             # re-padded to the fleet-max active-set capacity)
             fleet = fleet.to_sparse()
@@ -1155,12 +1273,13 @@ class CompiledRunner:
                 task_s = tasks[s] if tasks is not None else shared_task
                 st = _init_state(task_s, m, mem.seed, self._pdef.uses_cache,
                                  self._stateless(ex))
-                dev = fleet.member(s).to_device()
+                msched = fleet.member(s)
+                dev = msched.to_device()
                 w_s = jnp.asarray(mem.env.weights)
                 train_fn = task_s.local_train if ex.schedule == 'dense' \
                     else task_s.local_train_rows
                 if self._pdef.prepare_state is not None:
-                    self._pdef.prepare_state(st, w_s, ex, False)
+                    self._pdef.prepare_state(st, w_s, ex, False, msched)
                 start = 0
                 for stop in evals:
                     seg = jax.tree.map(lambda a: a[start:stop], dev)
@@ -1198,7 +1317,7 @@ class CompiledRunner:
             st = _RunState(g, bcast(),
                            bcast() if self._pdef.uses_cache else None)
         if self._pdef.prepare_state is not None:
-            self._pdef.prepare_state(st, weights, ex, True)
+            self._pdef.prepare_state(st, weights, ex, True, fleet)
         start_seg = 0
         fingerprint = exp.fingerprint(members, tasks=tasks, task=shared_task)
         if checkpoint is not None and ckpt.exists(checkpoint):

@@ -130,9 +130,17 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
     O(m + rounds * K) instead of O(rounds * m).  By construction
     ``precompute(form='sparse')`` equals ``precompute(form='dense')
     .to_sparse()`` exactly — one event stream, two encodings.
+
+    ``form='sparse_tier'`` additionally records each active client's base
+    version (the ``v`` counter this loop already maintains) and lowers the
+    event stream to a ``TierSchedule``: sparse rows plus the slot maps
+    that let the numeric engines carry one O(lag_tolerance + quota)-row
+    value buffer instead of [m, N] local/cache stacks.  Equals
+    ``precompute(form='dense').to_tier()`` exactly.
     """
-    if form not in ('dense', 'sparse'):
-        raise ValueError(f"unknown form {form!r} (want 'dense' or 'sparse')")
+    if form not in ('dense', 'sparse', 'sparse_tier'):
+        raise ValueError(f"unknown form {form!r} (want 'dense', 'sparse', "
+                         f"or 'sparse_tier')")
     m = env.m
     v = np.zeros(m, dtype=int)             # base-model versions
     committed_prev = np.ones(m, bool)      # round 1: everyone holds w(0)
@@ -147,6 +155,7 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
              for k in ('sync', 'committed', 'picked', 'undrafted',
                        'deprecated')} if form == 'dense' else None
     sparse_rows = []
+    base_v_rows = []
     records = []
 
     for t in range(1, rounds + 1):
@@ -188,9 +197,12 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
             masks['undrafted'][i] = sel.undrafted
             masks['deprecated'][i] = dep
         else:
-            sparse_rows.append(schedules.safa_sparse_row(
+            row = schedules.safa_sparse_row(
                 sync, sel.committed, sel.picked, sel.undrafted, dep,
-                bootstrap=(t == 1)))
+                bootstrap=(t == 1))
+            sparse_rows.append(row)
+            if form == 'sparse_tier':
+                base_v_rows.append(base_versions[row[0]])
 
         records.append(RoundRecord(
             round=t,
@@ -207,6 +219,9 @@ def precompute_safa_schedule(env: FLEnv, *, fraction: float,
         picked_prev = sel.picked.copy()
 
     futility = wasted / max(performed, 1e-9)
+    if form == 'sparse_tier':
+        return schedules.build_tier_schedule(m, sparse_rows, base_v_rows,
+                                             records, futility)
     if form == 'sparse':
         idx, roles = schedules.pack_sparse_rows(sparse_rows, m)
         return schedules.SparseSchedule(m=m, idx=idx, roles=roles,

@@ -560,6 +560,23 @@ class SparseSyncSchedule(NamedTuple):
     round_idx: Any
 
 
+class TierRoundSchedule(NamedTuple):
+    """SAFA lag-tier per-round schedule: the sparse ``idx``/``roles``
+    tensors plus [k, K] buffer-slot maps into the single value buffer the
+    tier engines carry (``schedules.build_tier_schedule``).  ``base_src``/
+    ``cache_src`` name the slots holding each active client's base model
+    and cache row; ``cache_dst`` the slot its new cache row lands in
+    (scratch == discard); ``global_dst`` [k] the slot the round's output
+    global is recorded in."""
+    idx: Any
+    roles: Any
+    base_src: Any
+    cache_src: Any
+    cache_dst: Any
+    global_dst: Any
+    round_idx: Any
+
+
 def has_role(roles, bit):
     """Per-slot bool mask for one ROLE_*/SROLE_* bit."""
     return (roles & bit) != 0
@@ -961,6 +978,186 @@ def safa_run_fleet_sparse_delta_packed(gbuf, lbuf, cbuf, abuf,
     run = lambda g, l, c, a, s, w: _safa_sparse_delta_packed_scan(
         g, l, c, a, s, w, local_train_fn, spec, wire)
     return jax.vmap(run)(gbuf, lbuf, cbuf, abuf, schedule, weights)
+
+
+# -- lag-tier engine: version ring + active slab instead of [m, N] stacks ---
+#
+# SAFA's lag-tolerant distribution (Eq. 2-3) bounds every client's lag by
+# tau, and a committed client is force-synced the next round it appears —
+# so a trained local row is never read back, and every base model a round
+# reads is a *global version snapshot* (at most tau+2 live at once).  Cache
+# rows are such snapshots or commit rows of recently active clients.  The
+# tier round therefore carries ONE value buffer ``buf`` of
+# ``capacity + 1`` rows (capacity = peak live distinct rows, O(tau+quota);
+# the trailing row is scratch) and replays the host-precomputed slot maps:
+# gather bases at ``base_src``, caches at ``cache_src``, run the exact
+# sparse_delta slot math, scatter the new cache rows to ``cache_dst`` and
+# record the round's output global at ``global_dst``.  Per round the
+# written slots are disjoint from the read slots (a value written in round
+# t is first read strictly later), which lets the packed kernels alias the
+# buffer in place.  Memory: O((tau+quota)·N), independent of m.
+
+def safa_round_sparse_tier(global_w, buf, agg, *, idx, roles, base_src,
+                           cache_src, cache_dst, global_dst, weights,
+                           local_train_fn, train_args=(), wire: str = 'f32'):
+    """One SAFA round in O((tau+quota)·N) via the lag-tier value buffer.
+
+    Identical slot math to ``safa_round_sparse_delta`` — base/cache rows
+    are simply gathered through the slot indirection instead of per-client
+    stacks — so the two agree wherever both run (and both are equivalent
+    to the dense round up to float summation order).  Returns
+    (new_global, new_buf, new_agg)."""
+    check_wire(wire)
+    k = idx.shape[0]
+    sync_r = has_role(roles, ROLE_SYNC)
+    com_r = has_role(roles, ROLE_COMMITTED)
+    pick_r = has_role(roles, ROLE_PICKED)
+    und_r = has_role(roles, ROLE_UNDRAFTED)
+    dep_r = has_role(roles, ROLE_DEPRECATED)
+    g_rows = broadcast_global(global_w, k)
+    base_rows = masked_select(sync_r, g_rows, tree_gather(buf, base_src))
+    trained_rows = local_train_fn(base_rows, idx, *train_args)
+    if wire == 'int8':
+        from repro.kernels import ops as kops
+        trained_rows = kops.wire_roundtrip_packed(trained_rows, like=global_w)
+    trained_rows = masked_select(com_r, trained_rows, base_rows)
+    c_rows = tree_gather(buf, cache_src)
+    w_rows = _slot_weights(idx, weights)
+
+    def delta(a, new, old):
+        w = w_rows.reshape((-1,) + (1,) * (new.ndim - 1))
+        return a + jnp.sum(
+            (new.astype(jnp.float32) - old.astype(jnp.float32)) * w, axis=0)
+
+    c1_rows = masked_select(dep_r & ~pick_r, g_rows, c_rows)
+    c1_rows = masked_select(pick_r, trained_rows, c1_rows)
+    agg1 = jax.tree.map(delta, agg, c1_rows, c_rows)
+    new_global = jax.tree.map(lambda a, g: a.astype(g.dtype), agg1, global_w)
+    c2_rows = masked_select(und_r, trained_rows, c1_rows)
+    new_agg = jax.tree.map(delta, agg1, c2_rows, c1_rows)
+    new_buf = tree_scatter(buf, cache_dst, c2_rows)
+    new_buf = jax.tree.map(
+        lambda b, g: b.at[global_dst].set(g.astype(b.dtype)), new_buf,
+        new_global)
+    return new_global, new_buf, new_agg
+
+
+def _safa_sparse_tier_scan(global_w, buf, agg, schedule, weights,
+                           local_train_fn, wire='f32'):
+    def step(carry, sched):
+        out = safa_round_sparse_tier(
+            *carry, idx=sched.idx, roles=sched.roles,
+            base_src=sched.base_src, cache_src=sched.cache_src,
+            cache_dst=sched.cache_dst, global_dst=sched.global_dst,
+            weights=weights, local_train_fn=local_train_fn,
+            train_args=(sched.round_idx,), wire=wire)
+        return out, None
+
+    carry, _ = jax.lax.scan(step, (global_w, buf, agg), schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=('local_train_fn', 'wire'))
+def safa_run_scan_sparse_tier(global_w, buf, agg,
+                              schedule: TierRoundSchedule, weights, *,
+                              local_train_fn, wire='f32'):
+    """Lag-tier SAFA scan: carries (global, value buffer, agg) with
+    ``buf = broadcast(global)`` over capacity+1 rows and
+    ``agg = global * sum(weights)`` at entry (every cache row starts as
+    the init global).  Peak state is O((tau+quota)·N) — no [m, N] stack
+    exists anywhere in the program."""
+    return _safa_sparse_tier_scan(global_w, buf, agg, schedule, weights,
+                                  local_train_fn, wire)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=('local_train_fn', 'wire'))
+def safa_run_fleet_sparse_tier(global_w, buf, agg,
+                               schedule: TierRoundSchedule, weights, *,
+                               local_train_fn, wire='f32'):
+    """Fleet counterpart of ``safa_run_scan_sparse_tier`` (one vmapped
+    scan; schedule fields [S, k, K], buffer [S, capacity+1, ...])."""
+    run = lambda g, b, a, s, w: _safa_sparse_tier_scan(
+        g, b, a, s, w, local_train_fn, wire)
+    return jax.vmap(run)(global_w, buf, agg, schedule, weights)
+
+
+def safa_round_sparse_tier_packed(gbuf, tbuf, abuf, *, idx, roles, base_src,
+                                  cache_src, cache_dst, global_dst, weights,
+                                  local_train_fn, train_args=(), spec,
+                                  wire: str = 'f32'):
+    """Packed-buffer lag-tier round: gbuf [N] f32, tbuf [capacity+1, N]
+    value buffer, abuf [N] f32 running aggregate.  One fused tier-rows
+    dispatch does Eq. 6-8, both delta sums, and the ``cache_dst`` scatter
+    in place (the buffer aliases through the kernel); only the
+    ``global_dst`` row write remains outside.  Returns
+    (gbuf', tbuf', abuf')."""
+    check_wire(wire)
+    from repro.kernels import ops as kops
+    sync_r = has_role(roles, ROLE_SYNC)
+    com_r = has_role(roles, ROLE_COMMITTED)
+    pick_r = has_role(roles, ROLE_PICKED)
+    und_r = has_role(roles, ROLE_UNDRAFTED)
+    dep_r = has_role(roles, ROLE_DEPRECATED)
+    w_rows = _slot_weights(idx, weights)
+    b_rows = kops.gather_rows(tbuf, base_src)
+    base_rows = jnp.where(sync_r[:, None], gbuf[None].astype(tbuf.dtype),
+                          b_rows)
+    trained = kops.pack_stacked(
+        local_train_fn(kops.unpack_stacked(base_rows, spec), idx,
+                       *train_args), spec)
+    if wire == 'int8':
+        q, scales = kops.quantize_packed(trained)
+        ng, na, new_t = kops.safa_aggregate_packed_q8_tier_rows(
+            q, scales, base_rows, tbuf, gbuf, abuf, cache_src, cache_dst,
+            pick_r, und_r, dep_r, com_r, w_rows)
+    else:
+        local_rows = jnp.where(com_r[:, None], trained, base_rows)
+        ng, na, new_t = kops.safa_aggregate_packed_tier_rows(
+            tbuf, local_rows, gbuf, abuf, cache_src, cache_dst, pick_r,
+            und_r, dep_r, w_rows)
+    new_t = new_t.at[global_dst].set(ng.astype(new_t.dtype))
+    return ng.astype(gbuf.dtype), new_t, na
+
+
+def _safa_sparse_tier_packed_scan(gbuf, tbuf, abuf, schedule, weights,
+                                  local_train_fn, spec, wire='f32'):
+    def step(carry, sched):
+        out = safa_round_sparse_tier_packed(
+            *carry, idx=sched.idx, roles=sched.roles,
+            base_src=sched.base_src, cache_src=sched.cache_src,
+            cache_dst=sched.cache_dst, global_dst=sched.global_dst,
+            weights=weights, local_train_fn=local_train_fn,
+            train_args=(sched.round_idx,), spec=spec, wire=wire)
+        return out, None
+
+    carry, _ = jax.lax.scan(step, (gbuf, tbuf, abuf), schedule)
+    return carry
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=('local_train_fn', 'spec', 'wire'))
+def safa_run_scan_sparse_tier_packed(gbuf, tbuf, abuf,
+                                     schedule: TierRoundSchedule, weights,
+                                     *, local_train_fn, spec, wire='f32'):
+    """Packed counterpart of ``safa_run_scan_sparse_tier``: the whole run
+    is one scanned program whose carry is three pack buffers totalling
+    O((tau+quota)·N) bytes."""
+    return _safa_sparse_tier_packed_scan(gbuf, tbuf, abuf, schedule,
+                                         weights, local_train_fn, spec, wire)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=('local_train_fn', 'spec', 'wire'))
+def safa_run_fleet_sparse_tier_packed(gbuf, tbuf, abuf,
+                                      schedule: TierRoundSchedule, weights,
+                                      *, local_train_fn, spec, wire='f32'):
+    """Fleet counterpart of ``safa_run_scan_sparse_tier_packed`` (one
+    vmapped scan; the tier-rows kernels batch under vmap)."""
+    run = lambda g, t, a, s, w: _safa_sparse_tier_packed_scan(
+        g, t, a, s, w, local_train_fn, spec, wire)
+    return jax.vmap(run)(gbuf, tbuf, abuf, schedule, weights)
 
 
 def fedasync_round(global_w, local_w, *, committed, order, alphas,

@@ -11,6 +11,7 @@ together is ``repro.core.api``.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Any, Optional
 
 import jax.numpy as jnp
@@ -128,6 +129,28 @@ class SafaSchedule:
         idx, roles = pack_sparse_rows(rows, m, capacity)
         return SparseSchedule(m=m, idx=idx, roles=roles,
                               records=self.records, futility=self.futility)
+
+    def to_tier(self, capacity: Optional[int] = None) -> 'TierSchedule':
+        """Lag-tier compressed form: replay the version counters the SAFA
+        state machine maintained (``v[sync] = gv`` before selection,
+        ``v[committed] = t`` after) to recover each active client's base
+        version, then hand the per-round event rows to the slot
+        allocator.  ``federation.precompute_safa_schedule(form=
+        'sparse_tier')`` records the same data inline, so the two paths
+        build identical schedules."""
+        m = self.sync.shape[1]
+        v = np.zeros(m, np.int64)
+        rows, base_rows = [], []
+        for t in range(self.rounds):
+            v[self.sync[t]] = t
+            row = safa_sparse_row(self.sync[t], self.committed[t],
+                                  self.picked[t], self.undrafted[t],
+                                  self.deprecated[t], bootstrap=(t == 0))
+            rows.append(row)
+            base_rows.append(v[row[0]].copy())
+            v[self.committed[t]] = t + 1
+        return build_tier_schedule(m, rows, base_rows, self.records,
+                                   self.futility, capacity=capacity)
 
 
 @dataclasses.dataclass
@@ -372,6 +395,193 @@ class SparseSyncSchedule:
 
 
 # ---------------------------------------------------------------------------
+# Lag-tier compressed schedules: version ring + active slab slot maps
+# ---------------------------------------------------------------------------
+#
+# The sparse form above bounds *schedule* memory but SAFA's numeric state
+# still carries [m, N] local/cache stacks.  The lag-tolerant distribution
+# makes most of that redundant: an inactive client's local row is exactly
+# the global snapshot at its version (lag <= tau, so at most tau+2
+# distinct snapshots are ever live), and its cache row is either such a
+# snapshot or one of the <= quota commit rows from its last active round.
+# The tier form therefore replaces both stacks with ONE value buffer of
+# ``capacity + 1`` rows (a version ring + active-commit slab, flat in one
+# tensor; the trailing row is write-only scratch) plus host-precomputed
+# per-round slot maps:
+#
+#   base_src[t, j]   slot holding slot j's base model (its version's
+#                    global snapshot); scratch for synced slots.
+#   cache_src[t, j]  slot holding slot j's cache row c0.
+#   cache_dst[t, j]  slot that receives slot j's new cache row c2;
+#                    scratch when the value is never read again (or when
+#                    c2 is a global snapshot already resident in the ring).
+#   global_dst[t]    slot that receives the round's output global ("the
+#                    ring advances"); scratch once no later round reads it.
+#
+# Slots are assigned by value lifetime (first-fit free list over exact
+# last-read rounds), so ``capacity`` is the peak number of simultaneously
+# live distinct rows — O(tau + quota), independent of m.  Clients at the
+# same lag share a slot by construction: their base reads name the same
+# version value.  Within a round every read slot differs from every
+# written slot (values written in round t are first read strictly later),
+# which is what lets the fused kernels alias the buffer in place.
+#
+# Local state needs no buffer at all: a committed client is force-synced
+# the next round it appears, so a trained local row is never read back —
+# base rows are always version snapshots.
+
+
+def build_tier_schedule(m: int, rows, base_rows, records, futility,
+                        capacity: Optional[int] = None) -> 'TierSchedule':
+    """Lower per-round sparse event rows + base versions to slot maps.
+
+    ``rows`` are ``safa_sparse_row`` outputs; ``base_rows[t]`` holds the
+    version counter (post sync, pre commit) of each active client, aligned
+    with ``rows[t][0]``.  Two-pass: record every value read/write with
+    exact rounds, then allocate buffer slots by lifetime."""
+    rounds = len(rows)
+    idx, roles = pack_sparse_rows(rows, m, capacity)
+    width = idx.shape[1]
+    R_S, R_P = protocol.ROLE_SYNC, protocol.ROLE_PICKED
+    R_U, R_D = protocol.ROLE_UNDRAFTED, protocol.ROLE_DEPRECATED
+    R_C = protocol.ROLE_COMMITTED
+
+    # Pass A — value ids: version v -> v (0..rounds, ver 0 == init global,
+    # ver t+1 == round t's output); commit events -> rounds+1+eid.
+    n_vals = rounds + 1
+    cache_ref: dict = {}        # client -> value id its cache row holds
+    last_read: dict = {}        # value id -> last round reading it
+    base_val = np.full((rounds, width), -1, np.int64)
+    cache_val = np.full((rounds, width), -1, np.int64)
+    commit_val = np.full((rounds, width), -1, np.int64)
+    for i, ((act, rls), bv) in enumerate(zip(rows, base_rows)):
+        for j in range(len(act)):
+            k, r = int(act[j]), int(rls[j])
+            if (r & R_C) and not (r & R_S):
+                base_val[i, j] = v = int(bv[j])
+                last_read[v] = i
+            if r & (R_P | R_U | R_D):
+                cache_val[i, j] = cv = cache_ref.get(k, 0)
+                last_read[cv] = i
+            if r & (R_P | R_U):
+                commit_val[i, j] = cache_ref[k] = n_vals
+                n_vals += 1
+            elif r & R_D:
+                # cache := current global — ver i is already resident in
+                # the ring (or never read again), so no slot write.
+                cache_ref[k] = i
+
+    # Pass B — slot allocation in write order.  Version v is written at
+    # round v-1 (ver 0 pre-run); commit values at their round.  A slot
+    # frees the round after its value's last read.
+    writes: dict = {wr: [] for wr in range(-1, rounds)}
+    if 0 in last_read:
+        writes[-1].append(0)
+    for i in range(rounds):
+        for j in range(width):
+            v = int(commit_val[i, j])
+            if v >= 0 and v in last_read:
+                writes[i].append(v)
+        if (i + 1) in last_read:
+            writes[i].append(i + 1)
+    slot_of: dict = {}
+    free: list = []
+    pending: dict = {wr: [] for wr in range(rounds + 1)}
+    next_slot = 0
+    for wr in range(-1, rounds):
+        if wr >= 0:
+            for s in pending[wr]:
+                heapq.heappush(free, s)
+        for val in writes[wr]:
+            if free:
+                s = heapq.heappop(free)
+            else:
+                s = next_slot
+                next_slot += 1
+            slot_of[val] = s
+            pending.setdefault(last_read[val] + 1, []).append(s)
+
+    scratch = next_slot
+    base_src = np.full((rounds, width), scratch, np.int32)
+    cache_src = np.full((rounds, width), scratch, np.int32)
+    cache_dst = np.full((rounds, width), scratch, np.int32)
+    global_dst = np.full(rounds, scratch, np.int32)
+    for i in range(rounds):
+        for j in range(width):
+            if base_val[i, j] >= 0:
+                base_src[i, j] = slot_of[int(base_val[i, j])]
+            if cache_val[i, j] >= 0:
+                cache_src[i, j] = slot_of[int(cache_val[i, j])]
+            v = int(commit_val[i, j])
+            if v >= 0 and v in slot_of:
+                cache_dst[i, j] = slot_of[v]
+        if (i + 1) in slot_of:
+            global_dst[i] = slot_of[i + 1]
+    versions_stored = sum(1 for v in slot_of if v <= rounds)
+    return TierSchedule(
+        m=m, idx=idx, roles=roles, base_src=base_src, cache_src=cache_src,
+        cache_dst=cache_dst, global_dst=global_dst, capacity=next_slot,
+        versions_stored=versions_stored,
+        commits_stored=len(slot_of) - versions_stored,
+        records=records, futility=futility)
+
+
+@dataclasses.dataclass
+class TierSchedule:
+    """Lag-tier compressed SAFA event process (see section comment above):
+    sparse [rounds, K] active-set indices/roles plus the slot maps that
+    drive the single ``[capacity+1, N]`` value buffer.  ``capacity`` is the
+    peak live-row count (O(tau + quota)); the extra row is scratch."""
+    m: int
+    idx: np.ndarray             # [rounds, K] int32, sentinel == m
+    roles: np.ndarray           # [rounds, K] uint8 of protocol.ROLE_* bits
+    base_src: np.ndarray        # [rounds, K] int32 buffer slots
+    cache_src: np.ndarray       # [rounds, K] int32
+    cache_dst: np.ndarray       # [rounds, K] int32 (scratch == discard)
+    global_dst: np.ndarray      # [rounds] int32
+    capacity: int               # live slots; scratch slot == capacity
+    versions_stored: int
+    commits_stored: int
+    records: list
+    futility: float
+
+    @property
+    def rounds(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def scratch(self) -> int:
+        return self.capacity
+
+    @property
+    def nbytes(self) -> int:
+        return (self.idx.nbytes + self.roles.nbytes + self.base_src.nbytes
+                + self.cache_src.nbytes + self.cache_dst.nbytes
+                + self.global_dst.nbytes)
+
+    def to_device(self) -> protocol.TierRoundSchedule:
+        return protocol.TierRoundSchedule(
+            idx=jnp.asarray(self.idx), roles=jnp.asarray(self.roles),
+            base_src=jnp.asarray(self.base_src),
+            cache_src=jnp.asarray(self.cache_src),
+            cache_dst=jnp.asarray(self.cache_dst),
+            global_dst=jnp.asarray(self.global_dst),
+            round_idx=jnp.arange(1, self.rounds + 1, dtype=jnp.int32))
+
+    def to_sparse(self) -> SparseSchedule:
+        """Drop the slot maps (the event stream is the sparse one)."""
+        return SparseSchedule(m=self.m, idx=self.idx, roles=self.roles,
+                              records=self.records, futility=self.futility)
+
+    def to_dense(self) -> SafaSchedule:
+        return self.to_sparse().to_dense()
+
+
+# ---------------------------------------------------------------------------
 # Fleet-major stacking: [S, rounds, m] schedules for batched sweeps
 # ---------------------------------------------------------------------------
 
@@ -446,6 +656,12 @@ class FleetSchedule(_FleetStack):
         unless an explicit capacity is given)."""
         return SparseFleetSchedule.from_members(
             [self.member(s).to_sparse() for s in range(self.size)],
+            capacity=capacity)
+
+    def to_tier(self, capacity: Optional[int] = None) -> 'TierFleetSchedule':
+        """Lag-tier compressed [S, rounds, K] form."""
+        return TierFleetSchedule.from_members(
+            [self.member(s).to_tier() for s in range(self.size)],
             capacity=capacity)
 
 
@@ -539,7 +755,11 @@ class WeightedFleetSchedule(_FleetStack):
 class _SparseFleetStack:
     """Fleet-major stacking for sparse schedules.  Members may have grown
     different capacities; stacking re-pads everyone to the fleet max (or an
-    explicit capacity) so the tensors batch."""
+    explicit capacity) so the tensors batch, while ``capacities`` keeps
+    each member's own active-set width so the sequential path hands back
+    ragged (unpadded) member schedules instead of paying the fleet-max
+    gather width.  Padded slots are sentinel no-ops (idx == m, roles == 0),
+    so fleet and ragged-member replay stay bit-identical."""
     _MEMBER_CLS = None
     _SCHEDULE_CLS = None
 
@@ -563,7 +783,9 @@ class _SparseFleetStack:
                    idx=np.stack([pad(s.idx, m) for s in members]),
                    roles=np.stack([pad(s.roles, 0) for s in members]),
                    records=[s.records for s in members],
-                   futility=np.array([s.futility for s in members]))
+                   futility=np.array([s.futility for s in members]),
+                   capacities=np.array([s.capacity for s in members],
+                                       np.int32))
 
     @property
     def size(self) -> int:
@@ -582,7 +804,12 @@ class _SparseFleetStack:
         return self.idx.nbytes + self.roles.nbytes
 
     def member(self, s: int):
-        return self._MEMBER_CLS(m=self.m, idx=self.idx[s], roles=self.roles[s],
+        """Member s's schedule at its *own* capacity (ragged slice —
+        identical to the member's standalone precompute)."""
+        cap = (int(self.capacities[s]) if self.capacities is not None
+               else self.capacity)
+        return self._MEMBER_CLS(m=self.m, idx=self.idx[s, :, :cap],
+                                roles=self.roles[s, :, :cap],
                                 records=self.records[s],
                                 futility=float(self.futility[s]))
 
@@ -602,6 +829,7 @@ class SparseFleetSchedule(_SparseFleetStack):
     roles: np.ndarray
     records: list
     futility: np.ndarray
+    capacities: Optional[np.ndarray] = None     # [S] per-member widths
 
     _MEMBER_CLS = SparseSchedule
     _SCHEDULE_CLS = protocol.SparseRoundSchedule
@@ -615,6 +843,124 @@ class SparseSyncFleetSchedule(_SparseFleetStack):
     roles: np.ndarray
     records: list
     futility: np.ndarray
+    capacities: Optional[np.ndarray] = None     # [S] per-member widths
 
     _MEMBER_CLS = SparseSyncSchedule
     _SCHEDULE_CLS = protocol.SparseSyncSchedule
+
+
+@dataclasses.dataclass
+class TierFleetSchedule:
+    """S lag-tier SAFA event processes, fleet-major ([S, rounds, K]).
+
+    Members may differ in active-set width *and* slot capacity; stacking
+    pads width with sentinel no-op slots and remaps each member's scratch
+    slot (its own ``capacity``) to the fleet-max slot so one
+    ``[S, capacity+1, N]`` value buffer batches.  ``member(s)`` hands back
+    the padded-width schedule in fleet slot space, so sequential replay of
+    a member matches the fleet run bit-for-bit."""
+    m: int
+    idx: np.ndarray             # [S, rounds, K]
+    roles: np.ndarray
+    base_src: np.ndarray
+    cache_src: np.ndarray
+    cache_dst: np.ndarray
+    global_dst: np.ndarray      # [S, rounds]
+    capacity: int               # fleet-max live slots; scratch == capacity
+    capacities: np.ndarray      # [S] per-member live-slot counts
+    widths: np.ndarray          # [S] per-member active-set widths
+    versions_stored: np.ndarray
+    commits_stored: np.ndarray
+    records: list
+    futility: np.ndarray
+
+    @classmethod
+    def from_members(cls, members: list,
+                     capacity: Optional[int] = None) -> 'TierFleetSchedule':
+        if len({(s.m, s.rounds) for s in members}) != 1:
+            raise ValueError('fleet members must share (m, rounds)')
+        m = members[0].m
+        wid = max(s.width for s in members) if capacity is None else capacity
+        need = max(s.width for s in members)
+        if wid < need:
+            raise ValueError(
+                f'sparse fleet capacity {wid} < member active-set max {need}')
+        cap = max(s.capacity for s in members)
+
+        def pad(a, fill):
+            out = np.full(a.shape[:-1] + (wid,), fill, a.dtype)
+            out[..., :a.shape[-1]] = a
+            return out
+
+        def remap(s, a):
+            # member scratch -> fleet scratch (slot layouts otherwise agree
+            # with the member's own allocator output)
+            return np.where(a == s.capacity, cap, a).astype(np.int32)
+
+        return cls(
+            m=m,
+            idx=np.stack([pad(s.idx, m) for s in members]),
+            roles=np.stack([pad(s.roles, 0) for s in members]),
+            base_src=np.stack([pad(remap(s, s.base_src), cap)
+                               for s in members]),
+            cache_src=np.stack([pad(remap(s, s.cache_src), cap)
+                                for s in members]),
+            cache_dst=np.stack([pad(remap(s, s.cache_dst), cap)
+                                for s in members]),
+            global_dst=np.stack([remap(s, s.global_dst) for s in members]),
+            capacity=cap,
+            capacities=np.array([s.capacity for s in members], np.int32),
+            widths=np.array([s.width for s in members], np.int32),
+            versions_stored=np.array([s.versions_stored for s in members],
+                                     np.int32),
+            commits_stored=np.array([s.commits_stored for s in members],
+                                    np.int32),
+            records=[s.records for s in members],
+            futility=np.array([s.futility for s in members]))
+
+    @property
+    def size(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def rounds(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def width(self) -> int:
+        return self.idx.shape[2]
+
+    @property
+    def nbytes(self) -> int:
+        return (self.idx.nbytes + self.roles.nbytes + self.base_src.nbytes
+                + self.cache_src.nbytes + self.cache_dst.nbytes
+                + self.global_dst.nbytes)
+
+    def member(self, s: int) -> TierSchedule:
+        """Member s in fleet slot space (scratch == fleet capacity) at the
+        fleet-padded width: sequential replay then runs the exact program
+        the vmapped fleet runs (same reduction widths), so fleet ==
+        sequential stays *bit*-identical.  A standalone precompute of the
+        same member (its own width/capacity) is allclose-, not bit-,
+        equivalent — padded slots contribute exact zeros, but XLA may
+        associate a different-length slot reduction differently."""
+        return TierSchedule(
+            m=self.m, idx=self.idx[s], roles=self.roles[s],
+            base_src=self.base_src[s],
+            cache_src=self.cache_src[s],
+            cache_dst=self.cache_dst[s],
+            global_dst=self.global_dst[s], capacity=self.capacity,
+            versions_stored=int(self.versions_stored[s]),
+            commits_stored=int(self.commits_stored[s]),
+            records=self.records[s], futility=float(self.futility[s]))
+
+    def to_device(self) -> protocol.TierRoundSchedule:
+        return protocol.TierRoundSchedule(
+            idx=jnp.asarray(self.idx), roles=jnp.asarray(self.roles),
+            base_src=jnp.asarray(self.base_src),
+            cache_src=jnp.asarray(self.cache_src),
+            cache_dst=jnp.asarray(self.cache_dst),
+            global_dst=jnp.asarray(self.global_dst),
+            round_idx=jnp.asarray(np.broadcast_to(
+                np.arange(1, self.rounds + 1, dtype=np.int32),
+                (self.size, self.rounds))))

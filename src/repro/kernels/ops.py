@@ -41,8 +41,10 @@ from repro.kernels.safa_aggregate import (DEFAULT_TILE, safa_aggregate,
                                           safa_aggregate_packed_q8_fleet,
                                           safa_aggregate_packed_q8_rows,
                                           safa_aggregate_packed_q8_rows_fleet,
+                                          safa_aggregate_packed_q8_tier_rows,
                                           safa_aggregate_packed_rows,
-                                          safa_aggregate_packed_rows_fleet)
+                                          safa_aggregate_packed_rows_fleet,
+                                          safa_aggregate_packed_tier_rows)
 from repro.kernels.swa_attention import swa_attention
 
 __all__ = ['safa_aggregate', 'safa_aggregate_packed',
@@ -52,6 +54,8 @@ __all__ = ['safa_aggregate', 'safa_aggregate_packed',
            'safa_aggregate_packed_rows', 'safa_aggregate_packed_rows_fleet',
            'safa_aggregate_packed_q8_rows',
            'safa_aggregate_packed_q8_rows_fleet',
+           'safa_aggregate_packed_tier_rows',
+           'safa_aggregate_packed_q8_tier_rows',
            'gather_rows', 'scatter_rows', 'gather_rows_fleet',
            'scatter_rows_fleet',
            'quantize', 'dequantize', 'quantize_packed', 'dequantize_packed',

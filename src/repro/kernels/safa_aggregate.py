@@ -742,3 +742,205 @@ def safa_aggregate_packed_q8_rows_fleet(q_rows, scales_rows, base_rows, cache,
       col(deprecated_r.astype(jnp.int32)), col(completed_r.astype(jnp.int32)),
       col(w_rows.astype(jnp.float32)))
     return new_global[:, 0], new_agg[:, 0], c2, local
+
+
+# ---------------------------------------------------------------------------
+# Lag-tier path: slot-indirected rows kernels over the tier value buffer
+# ---------------------------------------------------------------------------
+#
+# The tier engines (protocol.safa_round_sparse_tier_packed) carry one
+# [capacity+1, N] value buffer instead of [m, N] local/cache stacks; the
+# host schedule names each slot's cache-read slot (``srcs``) and cache-
+# write slot (``dsts``), both scalar-prefetched.  The kernels below are the
+# rows kernels with TWO prefetch operands and the c2 scatter folded in: the
+# c2 output block lands directly at (dsts[j], i) and the buffer input is
+# aliased to it, so one dispatch does Eq. 6-8, both delta sums, AND the
+# cache write-back in place.  Sound because the host allocator guarantees
+# per-round src/dst slot disjointness (a value written in round t is first
+# read strictly later); the shared scratch slot (read AND written by inert
+# slots) carries only zero-weight contributions, so its value never
+# matters.  Dst-duplicate scratch writes resolve last-wins over the
+# innermost grid dim, exactly like ``ops.scatter_rows``.
+
+
+def _tier_rows_kernel(srcs_ref, dsts_ref, buf_ref, trained_ref, global_ref,
+                      agg_ref, picked_ref, undrafted_ref, deprecated_ref,
+                      weights_ref, new_global_ref, new_agg_ref, newbuf_ref):
+    del srcs_ref, dsts_ref  # consumed by the index maps
+    k = pl.program_id(1)
+    c0 = buf_ref[...].astype(jnp.float32)       # [1, T] — slot-gathered row
+    tr = trained_ref[...].astype(jnp.float32)
+    g = global_ref[...].astype(jnp.float32)
+    p = picked_ref[...] != 0                    # [1, 1]
+    u = undrafted_ref[...] != 0
+    d = deprecated_ref[...] != 0
+    w = weights_ref[...].astype(jnp.float32)
+    c1 = jnp.where(d & ~p, g, c0)               # Eq. 6
+    c1 = jnp.where(p, tr, c1)
+    c2 = jnp.where(u, tr, c1)                   # Eq. 8
+    newbuf_ref[...] = c2.astype(newbuf_ref.dtype)
+
+    @pl.when(k == 0)
+    def _():
+        new_global_ref[...] = agg_ref[...]
+        new_agg_ref[...] = agg_ref[...]
+
+    new_global_ref[...] += w * (c1 - c0)        # Eq. 7 as a delta
+    new_agg_ref[...] += w * (c2 - c0)
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed_tier_rows(buf, trained_rows, global_prev, agg,
+                                    srcs, dsts, picked_r, undrafted_r,
+                                    deprecated_r, w_rows, *,
+                                    tile: int = DEFAULT_TILE):
+    """Slot-indirected Eq. 6-8 with the cache write-back fused in place.
+
+    buf: [capacity+1, N] tier value buffer (trailing scratch row);
+    trained_rows: [K, N] post-wire uploads (base rows where not
+    committed); global_prev, agg: [N]; srcs/dsts: [K] int32 slot ids
+    (cache-read / cache-write, scratch == discard); roles/weights as in
+    ``safa_aggregate_packed_rows``.  The buffer input aliases the new-
+    buffer output, so untouched slots persist with zero traffic.  Returns
+    (new_global [N] f32, new_agg [N] f32, new_buf [capacity+1, N])."""
+    r, np_ = buf.shape
+    k, _ = trained_rows.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    col = lambda arr: arr.reshape(k, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(np_ // tile, k),      # k innermost: agg blocks revisit
+        in_specs=[
+            pl.BlockSpec((1, tile),
+                         lambda i, j, srcs, dsts: (srcs[j], i)),   # buf
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (j, i)),
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (0, i)),
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j, srcs, dsts: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, srcs, dsts: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, srcs, dsts: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, srcs, dsts: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (0, i)),
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (0, i)),
+            pl.BlockSpec((1, tile),
+                         lambda i, j, srcs, dsts: (dsts[j], i)),   # new buf
+        ])
+    new_global, new_agg, new_buf = pl.pallas_call(
+        _tier_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((r, np_), buf.dtype),
+        ],
+        # operands 0/1 are the prefetched slot ids, so buf is input index 2;
+        # it aliases the new-buffer output (index 2) for the in-place write
+        input_output_aliases={2: 2},
+        interpret=INTERPRET,
+    )(srcs.astype(jnp.int32), dsts.astype(jnp.int32), buf, trained_rows,
+      global_prev.reshape(1, -1).astype(jnp.float32),
+      agg.reshape(1, -1).astype(jnp.float32),
+      col(picked_r.astype(jnp.int32)), col(undrafted_r.astype(jnp.int32)),
+      col(deprecated_r.astype(jnp.int32)), col(w_rows.astype(jnp.float32)))
+    return new_global[0], new_agg[0], new_buf
+
+
+def _q8_tier_rows_kernel(srcs_ref, dsts_ref, q_ref, scale_ref, base_ref,
+                         buf_ref, global_ref, agg_ref, picked_ref,
+                         undrafted_ref, deprecated_ref, completed_ref,
+                         weights_ref, new_global_ref, new_agg_ref,
+                         newbuf_ref):
+    del srcs_ref, dsts_ref
+    k = pl.program_id(1)
+    _, t = q_ref.shape
+    deq = (q_ref[...].astype(jnp.float32).reshape(1, t // QBLOCK, QBLOCK)
+           * scale_ref[...][:, :, None]).reshape(1, t)
+    tr = jnp.where(completed_ref[...] != 0, deq,
+                   base_ref[...].astype(jnp.float32))
+    c0 = buf_ref[...].astype(jnp.float32)
+    g = global_ref[...].astype(jnp.float32)
+    p = picked_ref[...] != 0
+    u = undrafted_ref[...] != 0
+    d = deprecated_ref[...] != 0
+    w = weights_ref[...].astype(jnp.float32)
+    c1 = jnp.where(d & ~p, g, c0)
+    c1 = jnp.where(p, tr, c1)
+    c2 = jnp.where(u, tr, c1)
+    newbuf_ref[...] = c2.astype(newbuf_ref.dtype)
+
+    @pl.when(k == 0)
+    def _():
+        new_global_ref[...] = agg_ref[...]
+        new_agg_ref[...] = agg_ref[...]
+
+    new_global_ref[...] += w * (c1 - c0)
+    new_agg_ref[...] += w * (c2 - c0)
+
+
+@functools.partial(jax.jit, static_argnames=('tile',))
+def safa_aggregate_packed_q8_tier_rows(q_rows, scales_rows, base_rows, buf,
+                                       global_prev, agg, srcs, dsts,
+                                       picked_r, undrafted_r, deprecated_r,
+                                       completed_r, w_rows, *,
+                                       tile: int = DEFAULT_TILE):
+    """int8-wire variant of ``safa_aggregate_packed_tier_rows``: uploads
+    arrive as the wire format and dequantise in-register; crashed slots
+    fall back to base_rows.  No local output exists — tier local state is
+    virtual (base rows are always version snapshots).  Returns
+    (new_global [N] f32, new_agg [N] f32, new_buf [capacity+1, N])."""
+    r, np_ = buf.shape
+    k, _ = q_rows.shape
+    if np_ % tile:
+        raise ValueError(
+            f'packed buffer width {np_} not a multiple of tile={tile}; '
+            f'pack with pad_to=tile')
+    col = lambda arr: arr.reshape(k, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(np_ // tile, k),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (j, i)),   # q
+            pl.BlockSpec((1, tile // QBLOCK),
+                         lambda i, j, srcs, dsts: (j, i)),          # scales
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (j, i)),  # base
+            pl.BlockSpec((1, tile),
+                         lambda i, j, srcs, dsts: (srcs[j], i)),    # buf
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (0, i)),
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j, srcs, dsts: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, srcs, dsts: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, srcs, dsts: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, srcs, dsts: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, srcs, dsts: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (0, i)),
+            pl.BlockSpec((1, tile), lambda i, j, srcs, dsts: (0, i)),
+            pl.BlockSpec((1, tile),
+                         lambda i, j, srcs, dsts: (dsts[j], i)),
+        ])
+    new_global, new_agg, new_buf = pl.pallas_call(
+        _q8_tier_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((r, np_), buf.dtype),
+        ],
+        # operands 0/1 are prefetched slot ids, so buf is input index 5;
+        # it aliases the new-buffer output (index 2)
+        input_output_aliases={5: 2},
+        interpret=INTERPRET,
+    )(srcs.astype(jnp.int32), dsts.astype(jnp.int32), q_rows, scales_rows,
+      base_rows, buf,
+      global_prev.reshape(1, -1).astype(jnp.float32),
+      agg.reshape(1, -1).astype(jnp.float32),
+      col(picked_r.astype(jnp.int32)), col(undrafted_r.astype(jnp.int32)),
+      col(deprecated_r.astype(jnp.int32)), col(completed_r.astype(jnp.int32)),
+      col(w_rows.astype(jnp.float32)))
+    return new_global[0], new_agg[0], new_buf

@@ -83,6 +83,67 @@ def test_sparse_matches_dense(cid):
                            f'{cid}: sparse vs dense')
 
 
+def _tier_or_skip(spec):
+    pdef = C.pdef_of(spec)
+    if pdef.tier_precompute is None:
+        pytest.skip(f'{pdef.name}: no lag-tier schedule form')
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_tier_scan_equals_loop(cid):
+    spec = CASES[cid]()
+    _tier_or_skip(spec)
+    ex = {'schedule': 'sparse_tier'}
+    h_scan = C.run_single(spec, exec_kw=ex)
+    h_loop = C.run_single(spec, engine='loop', exec_kw=ex)
+    C.assert_history_equal(h_scan, h_loop, f'{cid}: tier scan vs loop')
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_tier_fleet_equals_sequential(cid):
+    """Bitwise fleet == sequential only: tier fleet members replay the
+    fleet-padded program, so a standalone single run of the same member
+    is allclose, not bit-identical (different reduction widths)."""
+    spec = CASES[cid]()
+    _tier_or_skip(spec)
+
+    def members():
+        return [C.member_for(spec, C.fresh_env(3), seed=0),
+                C.member_for(spec, C.fresh_env(4), seed=1)]
+
+    ex = {'schedule': 'sparse_tier'}
+    h_fleet = C.run_sweep(spec, members(), engine='fleet', exec_kw=ex)
+    h_seq = C.run_sweep(spec, members(), engine='sequential', exec_kw=ex)
+    for s in range(2):
+        C.assert_history_equal(h_fleet[s], h_seq[s],
+                               f'{cid}: tier fleet vs sequential member {s}')
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_tier_checkpoint_resume_bit_identity(cid, tmp_path):
+    spec = CASES[cid]()
+    _tier_or_skip(spec)
+    ex = {'schedule': 'sparse_tier'}
+    path = str(tmp_path / 'ck')
+    partial = C.run_single(spec, checkpoint=path, max_segments=1,
+                           exec_kw=ex)
+    assert partial.final_global is not None
+    resumed = C.run_single(spec, checkpoint=path, exec_kw=ex)
+    full = C.run_single(spec, exec_kw=ex)
+    C.assert_history_equal(resumed, full,
+                           f'{cid}: tier resumed vs uninterrupted')
+
+
+@pytest.mark.parametrize('cid', IDS)
+def test_tier_wire_int8_engine_parity(cid):
+    spec = CASES[cid]()
+    _tier_or_skip(spec)
+    ex = {'schedule': 'sparse_tier', 'wire': 'int8'}
+    h_scan = C.run_single(spec, exec_kw=ex)
+    h_loop = C.run_single(spec, engine='loop', exec_kw=ex)
+    C.assert_history_equal(h_scan, h_loop, f'{cid}: tier int8 scan vs loop')
+
+
 @pytest.mark.parametrize('cid', IDS)
 def test_wire_int8_engine_parity(cid):
     spec = CASES[cid]()

@@ -150,6 +150,75 @@ def test_sparse_schedule_dense_roundtrip(cfg, rounds, fraction, lag):
 
 @settings(**SETTINGS)
 @given(cfg=env_configs, rounds=st.integers(1, 6),
+       fraction=st.floats(0.2, 1.0), lag=st.integers(1, 6))
+def test_tier_schedule_slot_invariants(cfg, rounds, fraction, lag):
+    """The lag-tier slot maps: same event stream as the sparse form,
+    every slot inside the [capacity+1] buffer, per-round writes distinct
+    and disjoint from reads (the aliased-kernel contract), and the dense
+    masks reconstructible."""
+    dense = federation.precompute_safa_schedule(
+        make_env(cfg), fraction=fraction, lag_tolerance=lag, rounds=rounds)
+    tier = federation.precompute_safa_schedule(
+        make_env(cfg), fraction=fraction, lag_tolerance=lag, rounds=rounds,
+        form='sparse_tier')
+    ref = dense.to_tier()
+    for f in ('idx', 'roles', 'base_src', 'cache_src', 'cache_dst',
+              'global_dst'):
+        np.testing.assert_array_equal(getattr(tier, f), getattr(ref, f),
+                                      err_msg=f)
+    assert tier.capacity == ref.capacity
+    # slots are reused: peak live rows never exceeds the value count
+    assert tier.capacity <= tier.versions_stored + tier.commits_stored
+    scr = tier.scratch
+    for f in ('base_src', 'cache_src', 'cache_dst'):
+        a = getattr(tier, f)
+        assert a.min() >= 0 and a.max() <= scr, f
+    assert tier.global_dst.min() >= 0 and tier.global_dst.max() <= scr
+    for t in range(tier.rounds):
+        srcs = set(tier.base_src[t]) | set(tier.cache_src[t])
+        dsts = [d for d in tier.cache_dst[t] if d != scr]
+        if tier.global_dst[t] != scr:
+            dsts.append(int(tier.global_dst[t]))
+        assert len(dsts) == len(set(dsts)), t
+        assert not (set(dsts) & (srcs - {scr})), t
+    back = tier.to_dense()
+    for field in ('committed', 'picked', 'undrafted', 'deprecated'):
+        np.testing.assert_array_equal(getattr(back, field),
+                                      getattr(dense, field), err_msg=field)
+    # round 1's population-wide bootstrap sync is elided by design
+    np.testing.assert_array_equal(back.sync[1:], dense.sync[1:])
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 6),
+       fraction=st.floats(0.2, 1.0), lag=st.integers(1, 6))
+def test_tier_base_slots_partition_clients_by_lag(cfg, rounds, fraction,
+                                                  lag):
+    """Clients at the same base version share a base slot and clients at
+    different versions never do — the 'tier' in lag-tier.  Versions are
+    replayed from the dense masks: sync resets to the current round,
+    commit advances to the round's output."""
+    dense = federation.precompute_safa_schedule(
+        make_env(cfg), fraction=fraction, lag_tolerance=lag, rounds=rounds)
+    tier = dense.to_tier()
+    m = tier.m
+    v = np.zeros(m, np.int64)
+    for t in range(tier.rounds):
+        v[dense.sync[t]] = t
+        idx, roles = tier.idx[t], tier.roles[t]
+        com_ns = (idx < m) & ((roles & protocol.ROLE_COMMITTED) != 0) \
+            & ((roles & protocol.ROLE_SYNC) == 0)
+        bver = v[np.where(idx < m, idx, 0)]
+        js = np.flatnonzero(com_ns)
+        for a in js:
+            for b in js:
+                assert (bver[a] == bver[b]) == \
+                    (tier.base_src[t, a] == tier.base_src[t, b]), (t, a, b)
+        v[dense.committed[t]] = t + 1
+
+
+@settings(**SETTINGS)
+@given(cfg=env_configs, rounds=st.integers(1, 6),
        alpha=st.floats(0.05, 1.0))
 def test_async_commit_masks_match_weighted(cfg, rounds, alpha):
     """The weighted precompute replays FedAsync's event process exactly:

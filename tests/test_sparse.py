@@ -115,6 +115,55 @@ class TestEventStreams:
         with pytest.raises(ValueError, match='capacity'):
             d.to_sparse(capacity=1)
 
+    def test_safa_tier_form_equals_dense_to_tier(self):
+        d = federation.precompute_safa_schedule(
+            _env(), fraction=0.3, lag_tolerance=2, rounds=10)
+        s = federation.precompute_safa_schedule(
+            _env(), fraction=0.3, lag_tolerance=2, rounds=10,
+            form='sparse_tier')
+        t = d.to_tier()
+        for f in ('idx', 'roles', 'base_src', 'cache_src', 'cache_dst',
+                  'global_dst'):
+            np.testing.assert_array_equal(getattr(s, f), getattr(t, f))
+        assert s.capacity == t.capacity
+        # the event stream is the sparse one; only the slot maps are new
+        sp = d.to_sparse()
+        np.testing.assert_array_equal(s.idx, sp.idx)
+        np.testing.assert_array_equal(s.roles, sp.roles)
+
+    def test_tier_to_dense_roundtrip(self):
+        d = federation.precompute_safa_schedule(
+            _env(), fraction=0.3, lag_tolerance=2, rounds=10)
+        r = d.to_tier().to_dense()
+        np.testing.assert_array_equal(r.sync[1:], d.sync[1:])
+        for f in ('committed', 'picked', 'undrafted', 'deprecated'):
+            np.testing.assert_array_equal(getattr(r, f), getattr(d, f))
+
+    def test_tier_slot_maps_stay_in_buffer(self):
+        s = federation.precompute_safa_schedule(
+            _env(), fraction=0.5, lag_tolerance=5, rounds=12,
+            form='sparse_tier')
+        scr = s.scratch
+        for f in ('base_src', 'cache_src', 'cache_dst'):
+            a = getattr(s, f)
+            assert a.min() >= 0 and a.max() <= scr
+        assert s.global_dst.min() >= 0 and s.global_dst.max() <= scr
+        # within a round the written slots are distinct and disjoint from
+        # the read slots (what lets the fused kernel alias the buffer)
+        for t in range(s.rounds):
+            srcs = set(s.base_src[t]) | set(s.cache_src[t])
+            dsts = [d for d in s.cache_dst[t] if d != scr]
+            if s.global_dst[t] != scr:
+                dsts.append(int(s.global_dst[t]))
+            assert len(dsts) == len(set(dsts))
+            assert not (set(dsts) & (srcs - {scr}))
+
+    def test_tier_explicit_capacity_too_small_raises(self):
+        d = federation.precompute_safa_schedule(
+            _env(), fraction=0.5, lag_tolerance=2, rounds=6)
+        with pytest.raises(ValueError, match='capacity'):
+            d.to_tier(capacity=1)
+
 
 # ---------------------------------------------------------------------------
 # Engine bit-identity: sparse == dense
@@ -217,6 +266,110 @@ class TestSparseDelta:
 
 
 # ---------------------------------------------------------------------------
+# sparse_tier: lag-tier compressed value buffer
+# ---------------------------------------------------------------------------
+
+class TestSparseTier:
+    """``schedule='sparse_tier'``: the [m, N] stacks collapse to one
+    [capacity+1, N] value buffer.  Allclose to dense (and to
+    sparse_delta — same running-aggregate math over different storage);
+    *bit*-identical within the form (scan == loop, fleet == sequential;
+    fleet members replay the fleet-padded program, so a standalone
+    single run is allclose, not bitwise)."""
+    TOL = dict(rtol=2e-5, atol=2e-6)
+    TOL8 = dict(rtol=2e-2, atol=2e-2)
+
+    @pytest.mark.parametrize('engine', ['scan', 'loop'])
+    def test_tree_engines_close_to_dense_and_delta(self, reg_task, engine):
+        kw = dict(fraction=0.3, lag_tolerance=2)
+        ex = dict(engine=engine, eval_every=4)
+        hd = _run(reg_task, 'safa', kw, dict(ex, schedule='dense'))
+        hs = _run(reg_task, 'safa', kw, dict(ex, schedule='sparse_delta'))
+        ht = _run(reg_task, 'safa', kw, dict(ex, schedule='sparse_tier'))
+        _trees_close(hd.final_global, ht.final_global, **self.TOL)
+        _trees_close(hs.final_global, ht.final_global, **self.TOL)
+
+    def test_scan_equals_loop_bitwise(self, reg_task):
+        kw = dict(fraction=0.3, lag_tolerance=2)
+        ex = dict(eval_every=4, schedule='sparse_tier')
+        hs = _run(reg_task, 'safa', kw, dict(ex, engine='scan'))
+        hl = _run(reg_task, 'safa', kw, dict(ex, engine='loop'))
+        _trees_equal(hs.final_global, hl.final_global)
+        assert hs.best_eval == hl.best_eval
+
+    @pytest.mark.parametrize('wire', ['f32', 'int8'])
+    def test_packed_close_to_dense(self, reg_task, wire):
+        kw = dict(fraction=0.3, lag_tolerance=2)
+        hd = _run(reg_task, 'safa', kw,
+                  dict(engine='scan', wire=wire, eval_every=4,
+                       schedule='dense'))
+        hp = _run(reg_task, 'safa', kw,
+                  dict(engine='scan', wire=wire, eval_every=4,
+                       schedule='sparse_tier', use_kernel='packed'))
+        tol = self.TOL8 if wire == 'int8' else self.TOL
+        _trees_close(hd.final_global, hp.final_global, **tol)
+
+    def test_packed_int8_scan_equals_loop_bitwise(self, reg_task):
+        kw = dict(fraction=0.3, lag_tolerance=30)
+        ex = dict(wire='int8', eval_every=4, schedule='sparse_tier',
+                  use_kernel='packed')
+        hs = _run(reg_task, 'safa', kw, dict(ex, engine='scan'))
+        hl = _run(reg_task, 'safa', kw, dict(ex, engine='loop'))
+        _trees_equal(hs.final_global, hl.final_global)
+
+    @pytest.mark.parametrize('exec_kw,tol', [
+        (dict(), 'TOL'),
+        (dict(use_kernel='packed'), 'TOL'),
+        (dict(use_kernel='packed', wire='int8'), 'TOL8'),
+    ])
+    def test_fleet_equals_sequential(self, reg_task, exec_kw, tol):
+        # fresh members per sweep: every precompute consumes its env rng
+        def members():
+            return [federation.SweepMember(env=_env(), fraction=f,
+                                           lag_tolerance=2)
+                    for f in (0.3, 0.5)]
+        def sweep(engine):
+            exp = api.Experiment(
+                reg_task, _env(),
+                api.spec('safa', fraction=0.3, lag_tolerance=2),
+                api.ExecSpec(engine=engine, schedule='sparse_tier',
+                             eval_every=4, **exec_kw), rounds=8, seed=0)
+            return exp.compile().run_sweep(members())
+        hf, hq = sweep('fleet'), sweep('sequential')
+        for a, b in zip(hf, hq):
+            _trees_equal(a.final_global, b.final_global)
+            assert a.best_eval == b.best_eval
+        # a standalone run of member 0 replays the same events at its own
+        # (unpadded) width/capacity: allclose, not bitwise
+        h0 = _run(reg_task, 'safa', dict(fraction=0.3, lag_tolerance=2),
+                  dict(engine='scan', schedule='sparse_tier', eval_every=4,
+                       **exec_kw))
+        _trees_close(hf[0].final_global, h0.final_global,
+                     **getattr(self, tol))
+
+    def test_stateless_tier_carry(self, reg_task):
+        """No [m, ...] stacks: the carry is global + [capacity+1, ...]
+        value buffer + running aggregate, built by prepare_state."""
+        exp = api.Experiment(
+            reg_task, _env(),
+            api.spec('safa', fraction=0.3, lag_tolerance=2),
+            api.ExecSpec(schedule='sparse_tier'), rounds=6, seed=0)
+        r = exp.compile()
+        from repro.core.api import _init_state
+        st = _init_state(exp.task, M, 0, r._pdef.uses_cache,
+                         r._stateless(exp.exec))
+        assert st.local_w is None and st.cache is None
+        sched = exp.precompute()
+        r._pdef.prepare_state(st, jnp.asarray(exp.env.weights), exp.exec,
+                              False, sched)
+        assert st.local_w is None
+        for leaf in jax.tree.leaves(st.cache):
+            assert leaf.shape[0] == sched.capacity + 1
+        h = r.run()
+        assert np.isfinite(h.best_eval['loss'])
+
+
+# ---------------------------------------------------------------------------
 # check_compat gating
 # ---------------------------------------------------------------------------
 
@@ -238,6 +391,21 @@ class TestCompat:
         with pytest.raises(ValueError, match='use_kernel'):
             api.check_compat(api.SafaSpec(),
                              api.ExecSpec(schedule='sparse_delta',
+                                          use_kernel=True))
+
+    def test_unknown_schedule_names_sparse_tier(self):
+        with pytest.raises(ValueError, match='sparse_tier'):
+            api.check_compat(api.SafaSpec(), api.ExecSpec(schedule='csr'))
+
+    def test_sparse_tier_needs_tier_precompute(self):
+        with pytest.raises(ValueError, match='lag-tier'):
+            api.check_compat(api.FedAvgSpec(),
+                             api.ExecSpec(schedule='sparse_tier'))
+
+    def test_sparse_tier_rejects_plain_kernel(self):
+        with pytest.raises(ValueError, match='use_kernel'):
+            api.check_compat(api.SafaSpec(),
+                             api.ExecSpec(schedule='sparse_tier',
                                           use_kernel=True))
 
     def test_bad_sampler(self):
@@ -404,5 +572,35 @@ class TestMemorySmoke:
         state_bytes = sum(getattr(l, 'nbytes', 0)
                           for l in jax.tree.leaves(st.tree()))
         assert state_bytes < 10_000          # D floats, not m*D
+        h = r.run()
+        assert np.isfinite(h.best_eval['loss'])
+
+    def test_tier_state_is_quota_bounded(self):
+        """SAFA sparse_tier at m=10_000: the whole carry is
+        O((tau + quota) * D), independent of m."""
+        from benchmarks.scale import ScaleTask, make_scale_env
+        m, quota, rounds = 10_000, 20, 6
+        env = make_scale_env(m, quota)
+        exp = api.Experiment(
+            ScaleTask(), env,
+            api.spec('safa', fraction=quota / m,
+                     lag_tolerance=10 * rounds),
+            api.ExecSpec(schedule='sparse_tier', eval_every=rounds),
+            rounds=rounds, seed=0)
+        r = exp.compile()
+        sched = exp.precompute()
+        # slot capacity tracks the active-set bound, never O(m)
+        assert sched.capacity <= 8 * quota
+        from repro.core.api import _init_state
+        st = _init_state(exp.task, m, 0, r._pdef.uses_cache,
+                         r._stateless(exp.exec))
+        r._pdef.prepare_state(st, jnp.asarray(env.weights), exp.exec,
+                              False, sched)
+        state_bytes = sum(getattr(l, 'nbytes', 0)
+                          for l in jax.tree.leaves(st.tree()))
+        d = sum(l.size for l in jax.tree.leaves(st.global_w))
+        # (capacity+1 buffer rows + global + agg) * 4 bytes, with slack
+        assert state_bytes <= (sched.capacity + 4) * d * 4
+        assert state_bytes < m * d              # << the [m, D] stack
         h = r.run()
         assert np.isfinite(h.best_eval['loss'])
