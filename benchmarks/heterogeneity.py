@@ -103,7 +103,7 @@ def run(rounds: int = ROUNDS, reps: int = 3,
             exp = api.Experiment(task, BASE, pdef.spec_cls(), ex,
                                  rounds=rounds)
 
-            def sweep():
+            def sweep(exp=exp):
                 hists = exp.compile().run_sweep(_members())
                 jax.block_until_ready(hists[-1].final_global)
                 return hists

@@ -23,8 +23,11 @@ def run(rounds=4, seed=0):
         task = cnn_task(data, lr=1e-3, epochs=1)
         tag = 'iid' if alpha is None else f'dirichlet{alpha}'
         for proto in ('fedavg', 'safa'):
-            h = run_protocol(proto, env, 0.5, rounds, task=task,
-                             eval_every=rounds)
+            # fresh env per run: a built env's rng is single-shot
+            h = run_protocol(proto,
+                             make_env('task2_cnn', cr=0.3, seed=seed,
+                                      scale=0.02),
+                             0.5, rounds, task=task, eval_every=rounds)
             emit(f'noniid/{tag}/{proto}', f'{h.best_eval["acc"]:.4f}',
                  f'loss={h.best_eval["loss"]:.4f}')
 

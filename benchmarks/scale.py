@@ -103,7 +103,7 @@ class ScaleTask:
         rows = jnp.arange(m, dtype=jnp.int32)
         return self.local_train_rows(stacked_params, rows, round_idx)
 
-    def local_train_rows(self, params_rows, rows, round_idx):
+    def local_train_rows(self, params_rows, rows, round_idx):  # noqa: ARG002
         p = params_rows['w']
         return {'w': p + self.lr * (self._targets(rows) - p)}
 

@@ -1,0 +1,73 @@
+"""repro.analysis — static contract checker for engines, kernels, and
+schedules.
+
+Three registry-driven passes, none of which execute protocol code:
+
+* **jaxpr pass** (``JAX001``-``JAX006``, ``jaxpr_checks``): lower every
+  admitted ``engine x wire x schedule x use_kernel`` cell of every spec
+  in ``api.PROTOCOLS`` at tiny shapes and prove the compiled-program
+  invariants — pallas dispatch budgets (``ProtocolDef.dispatch_budget``),
+  effective donations, ``input_output_aliases`` claims, no f64, no host
+  callbacks in scan bodies, segment re-dispatch fingerprint stability.
+* **schedule pass** (``SCH001``-``SCH006``, ``schedule_checks``): verify
+  host-precomputed schedules — tier slot disjointness and exact
+  capacity, sentinel inertness, lag <= tau, weight-row bounds, sorted
+  sparse indices.  ``verify_schedule(sched)`` is the standalone entry.
+* **conventions pass** (``REP001``-``REP006``, ``conventions``): AST /
+  registry rules — golden ``check_compat`` rejection coverage, numerics
+  hygiene, frozen specs, deprecation warnings, pallas alias inventories,
+  built-env rng reuse.
+
+``run_all()`` chains the three into one ``Report``;
+``python -m repro.analysis --all --json ANALYSIS.json`` is the CI entry.
+"""
+from __future__ import annotations
+
+from .conventions import check_conventions
+from .jaxpr_checks import check_cells, iter_cells, lower_cell
+from .report import AnalysisError, Finding, Report
+from .schedule_checks import verify_schedule
+
+__all__ = [
+    'AnalysisError', 'Finding', 'Report', 'check_cells',
+    'check_conventions', 'check_schedules', 'iter_cells', 'lower_cell',
+    'run_all', 'verify_schedule',
+]
+
+
+def check_schedules(names=None) -> Report:
+    """Verify the host-precomputed schedule of every distinct
+    (protocol, engine, schedule-form) cell — the same precompute path the
+    runners dispatch, deduplicated over wire/kernel (which don't change
+    the schedule)."""
+    from . import jaxpr_checks
+    rep = Report()
+    seen = set()
+    for cell in jaxpr_checks.iter_cells(names):
+        key = (cell.pdef.name, cell.ex.engine, cell.ex.schedule)
+        if key in seen:
+            continue
+        seen.add(key)
+        subject = f'{cell.pdef.name}[{cell.ex.engine}/{cell.ex.schedule}]'
+        try:
+            sched = jaxpr_checks.precompute_cell(cell)
+        except Exception as e:      # precompute must not break the pass
+            rep.add('SCH001', subject, False,
+                    f'schedule precompute failed: {type(e).__name__}: {e}')
+            continue
+        rep.extend(verify_schedule(
+            sched,
+            lag_tolerance=getattr(cell.spec, 'lag_tolerance', None),
+            alpha=getattr(cell.spec, 'alpha', None),
+            subject=subject))
+    return rep
+
+
+def run_all(names=None) -> Report:
+    """All three passes over the registry (or the named protocols), one
+    combined Report."""
+    rep = Report()
+    rep.extend(check_conventions())
+    rep.extend(check_schedules(names))
+    rep.extend(check_cells(names))
+    return rep

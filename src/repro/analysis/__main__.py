@@ -1,0 +1,55 @@
+"""CLI: ``python -m repro.analysis --all [--json ANALYSIS.json]``.
+
+Runs the three static passes over every registered protocol (or a named
+subset), prints the per-rule summary plus every failure, optionally
+writes the machine-readable per-spec, per-rule report, and exits
+non-zero on any violated contract — the CI contract-gate entry point.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro import api
+
+from . import run_all
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog='python -m repro.analysis',
+        description='Static contract checker: jaxpr, schedule, and '
+                    'convention passes over the protocol registry.')
+    parser.add_argument('--all', action='store_true',
+                        help='check every registered protocol (default '
+                             'when no --protocol is given)')
+    parser.add_argument('--protocol', action='append', default=None,
+                        metavar='NAME',
+                        help='check only this protocol (repeatable)')
+    parser.add_argument('--json', default=None, metavar='PATH',
+                        help='write the machine-readable report here')
+    parser.add_argument('-v', '--verbose', action='store_true',
+                        help='print every finding, not just failures')
+    args = parser.parse_args(argv)
+
+    names = None if args.all or not args.protocol else set(args.protocol)
+    if names is not None:
+        known = {p.name for p in api.PROTOCOLS.values()}
+        bad = names - known
+        if bad:
+            parser.error(f'unknown protocol(s) {sorted(bad)} '
+                         f'(registered: {sorted(known)})')
+
+    report = run_all(names)
+    shown = report.findings if args.verbose else report.failures
+    for f in shown:
+        print(f)
+    if args.json:
+        report.to_json(args.json)
+        print(f'wrote {args.json}')
+    print(report.summary())
+    return 0 if report.ok else 1
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -1,0 +1,412 @@
+"""AST convention linter: repo-wide rules (``REP001``...) that neither
+pytest nor the jaxpr pass can see.
+
+Each rule is a pure source-level (or registry-introspection) check —
+nothing here traces, compiles, or executes protocol code:
+
+* **REP001** — golden rejection coverage: every registered spec type is
+  constructed in at least one test module that pairs ``pytest.raises``
+  with ``check_compat`` (the golden-message rejection idiom of
+  ``tests/test_agg_schemes.py``), so adding a protocol without pinning
+  its compat rejections fails statically.
+* **REP002** — numerics hygiene: no ``np.random.*`` and no
+  ``float64`` spellings inside ``core/protocol.py`` or ``kernels/`` —
+  the compiled round math must stay deterministic-by-schedule and f32
+  (the host event process owns all randomness).
+* **REP003** — spec immutability: every registered protocol spec class,
+  plus ``ExecSpec`` / ``SweepSpec`` / ``fedsim.EnvSpec``, is a frozen
+  dataclass (specs are hashable cache keys and jit statics).
+* **REP004** — deprecation contract: any function/class whose docstring
+  opens with "deprecated" must actually emit ``DeprecationWarning``
+  (directly or via a ``*deprecated*`` helper).
+* **REP005** — alias inventory: every ``pallas_call`` site is keyed by
+  its kernel body in the module's ``ALIAS_CONTRACTS`` dict, and the
+  ``input_output_aliases`` literal at the call site is one of the
+  admitted forms.  (The jaxpr pass re-proves this on lowered programs
+  as JAX003; this rule catches sites in cells no registry spec lowers.)
+* **REP006** — env rng reuse: a built environment (``....build()`` /
+  ``FLEnv(...)``) feeding more than one ``run_sweep`` call — or more
+  than one ``SweepMember`` — in a single scope.  ``Env.draw_rounds``
+  raises on the second consume at runtime; this flags the hazard at
+  review time, including paths tests never execute.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+
+from .report import Report
+
+__all__ = ['check_conventions']
+
+#: repo root (…/src/repro/analysis/conventions.py -> three parents up)
+_ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+_FLOAT64_NAMES = frozenset(
+    ('jnp.float64', 'np.float64', 'numpy.float64', 'jax.numpy.float64'))
+
+
+def _parse(path: pathlib.Path) -> ast.Module:
+    return ast.parse(path.read_text(), filename=str(path))
+
+
+def _dotted(node) -> str:
+    """'a.b.c' for an Attribute/Name chain, '' if not a plain chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return ''
+    parts.append(node.id)
+    return '.'.join(reversed(parts))
+
+
+def _call_tail(call: ast.Call) -> str:
+    """Last component of the called dotted name ('api.SafaSpec' ->
+    'SafaSpec')."""
+    d = _dotted(call.func)
+    return d.rsplit('.', 1)[-1] if d else ''
+
+
+def _rel(root: pathlib.Path, path: pathlib.Path, lineno: int) -> str:
+    return f'{path.relative_to(root)}:{lineno}'
+
+
+# ---------------------------------------------------------------------------
+# REP001 — golden check_compat rejection coverage
+# ---------------------------------------------------------------------------
+
+def _is_golden_module(tree: ast.Module) -> bool:
+    """True if the module contains ``with pytest.raises(...):`` wrapping a
+    ``check_compat`` call somewhere in the block."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.With):
+            continue
+        raises = any(
+            isinstance(item.context_expr, ast.Call)
+            and _call_tail(item.context_expr) == 'raises'
+            for item in node.items)
+        if not raises:
+            continue
+        for sub in node.body:
+            for inner in ast.walk(sub):
+                if isinstance(inner, ast.Call) \
+                        and _call_tail(inner) == 'check_compat':
+                    return True
+    return False
+
+
+def _rep001(rep: Report, root: pathlib.Path) -> None:
+    from repro import api     # the package import registers every protocol
+    spec_names = sorted(cls.__name__ for cls in api.PROTOCOLS)
+    covered: dict = {}
+    for path in sorted((root / 'tests').glob('test_*.py')):
+        tree = _parse(path)
+        if not _is_golden_module(tree):
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and _call_tail(node) in spec_names:
+                covered.setdefault(_call_tail(node),
+                                   path.relative_to(root))
+    for name in spec_names:
+        where = covered.get(name)
+        rep.add('REP001', name, where is not None,
+                f'golden check_compat rejection test constructs it '
+                f'({where})' if where is not None else
+                'registered spec type is never constructed in a test '
+                'module pairing pytest.raises with check_compat — add a '
+                'golden rejection row (see tests/test_agg_schemes.py '
+                'GOLDENS)')
+
+
+# ---------------------------------------------------------------------------
+# REP002 — numerics hygiene in round math and kernels
+# ---------------------------------------------------------------------------
+
+def _rep002(rep: Report, root: pathlib.Path) -> None:
+    targets = [root / 'src/repro/core/protocol.py']
+    targets += sorted((root / 'src/repro/kernels').glob('*.py'))
+    for path in targets:
+        tree = _parse(path)
+        hits = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            d = _dotted(node)
+            if d.startswith(('np.random.', 'numpy.random.')) \
+                    or d in ('np.random', 'numpy.random'):
+                hits.append((node.lineno, f'{d} (host rng belongs in the '
+                             f'fedsim event process, not round math)'))
+            elif d in _FLOAT64_NAMES:
+                hits.append((node.lineno, f'{d} (compiled state is f32; '
+                             f'f64 doubles resident bytes and breaks '
+                             f'fingerprints)'))
+        if hits:
+            for lineno, why in hits:
+                rep.add('REP002', _rel(root, path, lineno), False, why)
+        else:
+            rep.add('REP002', str(path.relative_to(root)), True,
+                    'no np.random.* / float64 spellings')
+
+
+# ---------------------------------------------------------------------------
+# REP003 — specs are frozen dataclasses
+# ---------------------------------------------------------------------------
+
+def _rep003(rep: Report) -> None:
+    from repro import api, fedsim
+    classes = sorted(api.PROTOCOLS, key=lambda c: c.__name__)
+    classes += [api.ExecSpec, api.SweepSpec, fedsim.EnvSpec]
+    for cls in classes:
+        frozen = dataclasses.is_dataclass(cls) \
+            and cls.__dataclass_params__.frozen
+        rep.add('REP003', cls.__name__, frozen,
+                'frozen dataclass' if frozen else
+                'not a frozen dataclass — specs are hashable cache keys '
+                'and jit statics, so they must be immutable')
+
+
+# ---------------------------------------------------------------------------
+# REP004 — deprecated shims emit DeprecationWarning
+# ---------------------------------------------------------------------------
+
+def _warns_deprecation(node) -> bool:
+    for inner in ast.walk(node):
+        if not isinstance(inner, ast.Call):
+            continue
+        tail = _call_tail(inner)
+        if 'deprecated' in tail.lower():
+            return True
+        if tail == 'warn' and any(
+                _dotted(a).rsplit('.', 1)[-1] == 'DeprecationWarning'
+                for a in list(inner.args) +
+                [kw.value for kw in inner.keywords]):
+            return True
+    return False
+
+
+def _rep004(rep: Report, root: pathlib.Path) -> None:
+    shims = 0
+    for path in sorted((root / 'src/repro').rglob('*.py')):
+        tree = _parse(path)
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                continue
+            doc = ast.get_docstring(node)
+            # marker = docstring OPENS with "deprecated"; mid-sentence
+            # occurrences are SAFA's client lag state, not a deprecation
+            if not doc or not doc.lstrip().lower().startswith('deprecated'):
+                continue
+            shims += 1
+            ok = _warns_deprecation(node)
+            rep.add('REP004', _rel(root, path, node.lineno), ok,
+                    f'{node.name}: deprecated shim '
+                    + ('warns' if ok else 'never emits DeprecationWarning '
+                       '— silent deprecations rot in place'))
+    if not shims:
+        rep.add('REP004', 'src/repro', True, 'no deprecated shims declared')
+
+
+# ---------------------------------------------------------------------------
+# REP005 — every pallas_call site keys into ALIAS_CONTRACTS
+# ---------------------------------------------------------------------------
+
+def _module_contracts(tree: ast.Module):
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == 'ALIAS_CONTRACTS'
+                for t in node.targets):
+            return ast.literal_eval(node.value)
+    return None
+
+
+def _alias_forms(call: ast.Call):
+    """The input_output_aliases forms a call site can take, as tuples of
+    (in, out) pairs; no kwarg means the empty form.  Conditional sites
+    (``{0: 1} if alias else {}``) contribute both branches."""
+    kw = next((k for k in call.keywords
+               if k.arg == 'input_output_aliases'), None)
+    if kw is None:
+        return [()]
+    branches = [kw.value.body, kw.value.orelse] \
+        if isinstance(kw.value, ast.IfExp) else [kw.value]
+    forms = []
+    for b in branches:
+        d = ast.literal_eval(b)
+        forms.append(tuple(sorted((int(k), int(v)) for k, v in d.items())))
+    return forms
+
+
+def _partial_bindings(tree: ast.Module) -> dict:
+    """name -> wrapped fn name for ``x = functools.partial(_fn, ...)``
+    assignments anywhere in the module (kernels bind their static params
+    this way before the ``pallas_call``)."""
+    out = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) \
+                and isinstance(node.value, ast.Call) \
+                and _call_tail(node.value) == 'partial' \
+                and node.value.args \
+                and isinstance(node.value.args[0], ast.Name):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = node.value.args[0].id
+    return out
+
+
+def _rep005(rep: Report, root: pathlib.Path) -> None:
+    for path in sorted((root / 'src/repro').rglob('*.py')):
+        tree = _parse(path)
+        sites = [node for node in ast.walk(tree)
+                 if isinstance(node, ast.Call)
+                 and _call_tail(node) == 'pallas_call']
+        if not sites:
+            continue
+        contracts = _module_contracts(tree)
+        if contracts is None:
+            rep.add('REP005', str(path.relative_to(root)), False,
+                    f'{len(sites)} pallas_call site(s) but no module '
+                    f'ALIAS_CONTRACTS inventory')
+            continue
+        partials = _partial_bindings(tree)
+        bad = 0
+        for call in sites:
+            kernel = call.args[0].id if call.args \
+                and isinstance(call.args[0], ast.Name) else '<dynamic>'
+            kernel = partials.get(kernel, kernel)
+            subject = _rel(root, path, call.lineno)
+            if kernel not in contracts:
+                bad += 1
+                rep.add('REP005', subject, False,
+                        f'kernel {kernel!r} missing from the module '
+                        f'ALIAS_CONTRACTS inventory')
+                continue
+            for form in _alias_forms(call):
+                if form not in contracts[kernel]:
+                    bad += 1
+                    rep.add('REP005', subject, False,
+                            f'{kernel} aliases {form} not admitted by '
+                            f'inventory {contracts[kernel]}')
+        if not bad:
+            rep.add('REP005', str(path.relative_to(root)), True,
+                    f'{len(sites)} pallas_call site(s) all in inventory')
+
+
+# ---------------------------------------------------------------------------
+# REP006 — built env reused across run_sweep calls / members
+# ---------------------------------------------------------------------------
+
+def _scope_walk(scope):
+    """Walk a scope's statements without descending into nested
+    function/class scopes (their reuse is judged separately)."""
+    stack = list(scope.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.ClassDef)):
+                stack.append(child)
+
+
+def _built_env_names(scope) -> dict:
+    """var name -> lineno for ``x = <...>.build()`` / ``x = FLEnv(...)``
+    assignments in this scope."""
+    out = {}
+    for node in _scope_walk(scope):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        # ``.build()`` on ANY receiver (EnvSpec(...).build() roots the
+        # attribute chain in a Call, which _call_tail can't follow)
+        fn = node.value.func
+        built_call = (isinstance(fn, ast.Attribute) and fn.attr == 'build') \
+            or _call_tail(node.value) == 'FLEnv'
+        if not built_call:
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                out[t.id] = node.lineno
+    return out
+
+
+def _names_in(node) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _rep006_scope(rep: Report, root: pathlib.Path,
+                  path: pathlib.Path, scope) -> int:
+    built = _built_env_names(scope)
+    if not built:
+        return 0
+    uses: dict = {}
+    for node in _scope_walk(scope):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = _call_tail(node)
+        if tail not in ('run_sweep', 'SweepMember'):
+            continue
+        args = list(node.args) + [kw.value for kw in node.keywords]
+        for name in set.union(set(), *(_names_in(a) for a in args)) \
+                if args else set():
+            if name in built:
+                uses.setdefault((name, tail), []).append(node.lineno)
+    fails = 0
+    for (name, tail), lines in sorted(uses.items()):
+        if len(lines) > 1:
+            fails += 1
+            rep.add('REP006', _rel(root, path, min(lines)), False,
+                    f'built env {name!r} (line {built[name]}) feeds '
+                    f'{len(lines)} {tail} calls (lines {sorted(lines)}); '
+                    f'draw_rounds is single-shot per built env — build a '
+                    f'fresh env per sweep or pass the EnvSpec')
+    return fails
+
+
+def _rep006(rep: Report, root: pathlib.Path) -> None:
+    files = 0
+    fails = 0
+    for sub in ('src', 'tests', 'launch', 'scripts'):
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob('*.py')):
+            tree = _parse(path)
+            files += 1
+            scopes = [tree] + [n for n in ast.walk(tree)
+                               if isinstance(n, (ast.FunctionDef,
+                                                 ast.AsyncFunctionDef))]
+            for scope in scopes:
+                fails += _rep006_scope(rep, root, path, scope)
+    if not fails:
+        rep.add('REP006', 'repo', True,
+                f'{files} files scanned, no built env feeds multiple '
+                f'run_sweep calls or members')
+
+
+# ---------------------------------------------------------------------------
+# The pass
+# ---------------------------------------------------------------------------
+
+def check_conventions(root=None) -> Report:
+    """Run REP001-REP006 over the repo tree."""
+    root = pathlib.Path(root) if root is not None else _ROOT
+    rep = Report()
+    _rep001(rep, root)
+    _rep002(rep, root)
+    _rep003(rep)
+    _rep004(rep, root)
+    _rep005(rep, root)
+    _rep006(rep, root)
+    return rep
+
+
+if __name__ == '__main__':      # pragma: no cover - dev helper
+    r = check_conventions()
+    for f in r.findings:
+        print(f)
+    print(r.summary())

@@ -391,13 +391,22 @@ def _weighted_fleet_segment(st, seg, weights, train_fn, ex, ctx):
         use_kernel=ex.use_kernel, wire=ex.wire, train_ctx=ctx)
 
 
+def _weighted_dispatch_budget(ex) -> int:
+    """Pallas dispatches per compiled weighted-merge round (analysis
+    JAX001): one fused merge on the packed path, plus the int8 wire
+    round-trip (quantize + dequantize) when compressed."""
+    merge = 1 if ex.use_kernel == 'packed' else 0
+    return merge + (2 if ex.wire == 'int8' else 0)
+
+
 register(ProtocolDef(
     name='seafl', spec_cls=SeaflSpec,
     precompute=_weighted_precompute,
     fleet_precompute=_weighted_fleet_precompute,
     scan_segment=_weighted_scan_segment, loop_round=_weighted_loop_round,
     fleet_segment=_weighted_fleet_segment,
-    supports_wire=True, supports_kernel='packed', spec_overrides=True))
+    supports_wire=True, supports_kernel='packed', spec_overrides=True,
+    dispatch_budget=_weighted_dispatch_budget))
 
 register(ProtocolDef(
     name='csafl', spec_cls=CsaflSpec,
@@ -405,4 +414,5 @@ register(ProtocolDef(
     fleet_precompute=_weighted_fleet_precompute,
     scan_segment=_weighted_scan_segment, loop_round=_weighted_loop_round,
     fleet_segment=_weighted_fleet_segment,
-    supports_wire=True, supports_kernel='packed', spec_overrides=True))
+    supports_wire=True, supports_kernel='packed', spec_overrides=True,
+    dispatch_budget=_weighted_dispatch_budget))

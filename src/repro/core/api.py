@@ -243,6 +243,18 @@ class ProtocolDef:
     #: False, override keys that are not ``EnvSpec`` fields are rejected
     #: at sweep-resolution time with a golden message.
     spec_overrides: bool = False
+    #: static dispatch budget for ``repro.analysis`` (JAX001):
+    #: ``dispatch_budget(ex)`` returns the pallas dispatches one compiled
+    #: round of the admitted exec cell issues, or None for cells with no
+    #: declared budget (e.g. the leaf-wise kernel path, whose count
+    #: scales with the model's pytree).  This is where "a fully
+    #: compressed SAFA round is exactly 2 dispatches" lives as data.
+    dispatch_budget: Optional[Callable] = None
+    #: static alias claims for ``repro.analysis`` (JAX003):
+    #: ``alias_claims(ex)`` returns {kernel body name: alias pairs} that
+    #: must appear, exactly, among the cell's lowered pallas_call sites;
+    #: names/pairs key into the kernel modules' ``ALIAS_CONTRACTS``.
+    alias_claims: Optional[Callable] = None
 
 
 #: spec type -> ProtocolDef.  The single source of protocol dispatch.
@@ -967,6 +979,57 @@ def _fedasync_fleet_segment(st, seg, weights, train_fn, ex, ctx):
         train_ctx=ctx)
 
 
+def _safa_dispatch_budget(ex) -> Optional[int]:
+    """Pallas dispatches per compiled SAFA round (verified statically by
+    ``repro.analysis`` JAX001 against the lowered scan body).  The dense/
+    sparse int8 cells are the PR 4 invariant: a fully compressed round is
+    exactly 2 dispatches (quantize + fused q8 aggregate) however many
+    leaves the model has."""
+    if ex.schedule == 'sparse_tier':
+        if not ex.use_kernel:
+            return 2 if ex.wire == 'int8' else 0
+        # gather bases + fused tier aggregate (+ quantize on the wire)
+        return 3 if ex.wire == 'int8' else 2
+    if ex.schedule == 'sparse_delta':
+        if not ex.use_kernel:
+            return 2 if ex.wire == 'int8' else 0
+        # gather + rows aggregate + scatter x2 (local rows, cache rows)
+        return 5 if ex.wire == 'int8' else 4
+    if ex.wire == 'int8':
+        return 2
+    if ex.use_kernel == 'packed':
+        return 1
+    if ex.use_kernel:
+        return None     # leaf-wise: one dispatch per pytree leaf
+    return 0
+
+
+def _safa_alias_claims(ex) -> dict:
+    """In-place aliases the cell's lowered program must carry (JAX003):
+    dropping any of these silently doubles the server's resident cache/
+    buffer footprint."""
+    if ex.schedule == 'sparse_tier':
+        if not ex.use_kernel:
+            return {}
+        return ({'_q8_tier_rows_kernel': ((5, 2),)} if ex.wire == 'int8'
+                else {'_tier_rows_kernel': ((2, 2),)})
+    if ex.schedule == 'sparse_delta':
+        if not ex.use_kernel:
+            return {}
+        return {'_scatter_kernel': ((2, 0),)}
+    if ex.wire == 'int8':
+        return {'_q8_kernel': ((3, 1),)}
+    if ex.use_kernel == 'packed':
+        return {'_kernel': ((0, 1),)}
+    return {}
+
+
+def _wire_only_dispatch_budget(ex) -> int:
+    """Kernel-less protocols touch pallas only through the int8 wire
+    round-trip (quantize + dequantize)."""
+    return 2 if ex.wire == 'int8' else 0
+
+
 register(ProtocolDef(
     name='safa', spec_cls=SafaSpec,
     precompute=_safa_precompute,
@@ -977,7 +1040,9 @@ register(ProtocolDef(
     uses_cache=True, supports_wire=True, supports_kernel=True,
     sparse_precompute=_safa_sparse_precompute,
     prepare_state=_safa_prepare_state,
-    tier_precompute=_safa_tier_precompute))
+    tier_precompute=_safa_tier_precompute,
+    dispatch_budget=_safa_dispatch_budget,
+    alias_claims=_safa_alias_claims))
 
 register(ProtocolDef(
     name='fedavg', spec_cls=FedAvgSpec,
@@ -986,7 +1051,8 @@ register(ProtocolDef(
     scan_segment=_fedavg_scan_segment, loop_round=_fedavg_loop_round,
     fleet_segment=_fedavg_fleet_segment, supports_wire=True,
     sparse_precompute=_sync_precompute(fedcs=False, form='sparse'),
-    prepare_state=_fedavg_prepare_state, delta_stateless=True))
+    prepare_state=_fedavg_prepare_state, delta_stateless=True,
+    dispatch_budget=_wire_only_dispatch_budget))
 
 register(ProtocolDef(
     name='fedcs', spec_cls=FedCSSpec,
@@ -995,7 +1061,8 @@ register(ProtocolDef(
     scan_segment=_fedavg_scan_segment, loop_round=_fedavg_loop_round,
     fleet_segment=_fedavg_fleet_segment, supports_wire=True,
     sparse_precompute=_sync_precompute(fedcs=True, form='sparse'),
-    prepare_state=_fedavg_prepare_state, delta_stateless=True))
+    prepare_state=_fedavg_prepare_state, delta_stateless=True,
+    dispatch_budget=_wire_only_dispatch_budget))
 
 register(ProtocolDef(
     name='local', spec_cls=LocalSpec,
@@ -1003,14 +1070,16 @@ register(ProtocolDef(
     fleet_precompute=_local_fleet_precompute,
     scan_segment=_local_scan_segment, loop_round=_local_loop_round,
     fleet_segment=_local_fleet_segment,
-    finish_segment=_local_finish_segment))
+    finish_segment=_local_finish_segment,
+    dispatch_budget=lambda ex: 0))
 
 register(ProtocolDef(
     name='fedasync', spec_cls=FedAsyncSpec,
     precompute=_fedasync_precompute,
     fleet_precompute=_fedasync_fleet_precompute,
     scan_segment=_fedasync_scan_segment, loop_round=_fedasync_loop_round,
-    fleet_segment=_fedasync_fleet_segment, spec_overrides=True))
+    fleet_segment=_fedasync_fleet_segment, spec_overrides=True,
+    dispatch_budget=lambda ex: 0))
 
 
 # ---------------------------------------------------------------------------
@@ -1171,7 +1240,8 @@ class CompiledRunner:
         for k in range(start_seg, len(evals)):
             stop = evals[k]
             if engine == 'scan':
-                seg = jax.tree.map(lambda a: a[start:stop], self._dev)
+                seg = jax.tree.map(
+                    lambda a, s=start, e=stop: a[s:e], self._dev)
                 self._pdef.scan_segment(st, seg, weights, train_fn, ex)
             else:
                 for t in range(start + 1, stop + 1):
@@ -1282,7 +1352,8 @@ class CompiledRunner:
                     self._pdef.prepare_state(st, w_s, ex, False, msched)
                 start = 0
                 for stop in evals:
-                    seg = jax.tree.map(lambda a: a[start:stop], dev)
+                    seg = jax.tree.map(
+                        lambda a, s=start, e=stop: a[s:e], dev)
                     self._pdef.scan_segment(st, seg, w_s, train_fn, ex)
                     if self._pdef.finish_segment is not None:
                         self._pdef.finish_segment(st, w_s, False)
@@ -1342,7 +1413,8 @@ class CompiledRunner:
         g_host = jax.tree.map(np.asarray, st.global_w)
         for k in range(start_seg, len(evals)):
             stop = evals[k]
-            seg = jax.tree.map(lambda a: a[:, start:stop], dev)
+            seg = jax.tree.map(
+                lambda a, s=start, e=stop: a[:, s:e], dev)
             self._pdef.fleet_segment(st, seg, weights, train_fn, ex, ctx)
             if self._pdef.finish_segment is not None:
                 self._pdef.finish_segment(st, weights, True)

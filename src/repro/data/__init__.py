@@ -104,9 +104,9 @@ def partition(x, y, partition_sizes: np.ndarray, batch_size: int, *,
         partition_sizes=np.array([len(ci) for ci in client_idx]))
 
 
-def make_lm_tokens(n_docs=512, seq_len=128, vocab=512, seed=0, order=2):
-    """Synthetic token streams from a random Markov teacher (for federated
-    LM examples)."""
+def make_lm_tokens(n_docs=512, seq_len=128, vocab=512, seed=0):
+    """Synthetic token streams from a first-order random Markov teacher
+    (for federated LM examples)."""
     rng = np.random.default_rng(seed)
     trans = rng.dirichlet(0.3 * np.ones(vocab), size=vocab)
     toks = np.zeros((n_docs, seq_len + 1), np.int32)

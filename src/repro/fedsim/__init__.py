@@ -163,6 +163,7 @@ class Env:
             else np.random.default_rng(self.draw_seed)
         self._traces_cache = None       # (rounds, Traces)
         self._wire_mb = None            # (up_mb, down_mb) under comm='wire'
+        self._draws_consumed = False    # set by draw_rounds (single-shot)
 
     # -- per-client constants -------------------------------------------------
     @property
@@ -278,7 +279,24 @@ class Env:
         round), so schedule precompute reproduces the loop-driven event
         process bit for bit.  Availability traces raise the comparison
         threshold without touching the uniforms, so constant traces keep
-        the legacy masks exactly."""
+        the legacy masks exactly.
+
+        Single-shot per built env: a second call would silently continue
+        the generator stream, so the "same" experiment replayed on a
+        reused env gets different crash masks than a fresh one — a
+        classic source of unreproducible sweeps.  Reuse raises; build a
+        fresh env per experiment (or hand the declarative ``EnvSpec`` to
+        the api layer, which builds one for you)."""
+        if self._draws_consumed:
+            raise RuntimeError(
+                'env rng already consumed: draw_rounds() was called once '
+                'before on this built Env, so a second schedule precompute '
+                'would continue the generator stream and diverge from a '
+                'fresh environment. Build a fresh env per experiment — '
+                'EnvSpec(...).build() — or pass the EnvSpec itself to '
+                'api.Experiment / api.SweepMember (the api layer builds '
+                'each run its own env).')
+        self._draws_consumed = True
         u = self._rng.random((rounds, 2, self.m))
         return u[:, 0, :] < self._crash_threshold(rounds), u[:, 1, :]
 

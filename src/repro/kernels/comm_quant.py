@@ -30,6 +30,19 @@ from repro.kernels.backend import INTERPRET
 QBLOCK = 128
 DEFAULT_TILE = 2048  # values per program instance; must be multiple of QBLOCK
 
+#: Static alias inventory (see ``safa_aggregate.ALIAS_CONTRACTS`` for the
+#: format): the quantisation kernels change width/dtype between input and
+#: output, so none of them can — or do — alias.  ``repro.analysis`` holds
+#: the lowered cells to exactly this (JAX003/REP005); a pallas kernel
+#: added here without an entry fails the inventory check.
+ALIAS_CONTRACTS = {
+    '_quant_kernel': ((),),
+    '_dequant_kernel': ((),),
+    '_quant_packed_kernel': ((),),
+    '_dequant_packed_kernel': ((),),
+    '_quant_fleet_kernel': ((),),
+}
+
 
 def _quant_kernel(x_ref, q_ref, scale_ref):
     x = x_ref[...].astype(jnp.float32)              # [1, T]

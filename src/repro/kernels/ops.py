@@ -253,6 +253,20 @@ def unpack_fleet(buf, spec: PackSpec):
 # rows-aggregation kernels in ``safa_aggregate``.
 
 
+#: Static alias inventory for this module's pallas kernels (see
+#: ``safa_aggregate.ALIAS_CONTRACTS`` for the format): the scatter
+#: kernels alias the row buffer to the output — untouched rows never
+#: move — and everything else is copy-out.  ``repro.analysis`` checks
+#: this dict against the call sites (REP005) and lowered cells (JAX003).
+ALIAS_CONTRACTS = {
+    '_copy_kernel': ((),),
+    '_scatter_kernel': (((2, 0),),),        # buf -> out (rows prefetched)
+    '_copy_fleet_kernel': ((),),
+    '_scatter_fleet_kernel': (((2, 0),),),
+    '_weighted_merge_kernel': ((),),
+}
+
+
 def _copy_kernel(rows_ref, src_ref, dst_ref):
     del rows_ref  # consumed by the index maps
     dst_ref[...] = src_ref[...]

@@ -47,7 +47,7 @@ def quantize_packed_ref(x, qblock=128):
 def dequantize_packed_ref(q, scales, qblock=128):
     """Row-wise oracle for ``dequantize_packed``."""
     n = q.shape[1]
-    return jnp.stack([dequantize_ref(qr, sr, n)
+    return jnp.stack([dequantize_ref(qr, sr, n, qblock)
                       for qr, sr in zip(q, scales)])
 
 

@@ -47,6 +47,29 @@ from repro.kernels.comm_quant import QBLOCK
 
 DEFAULT_TILE = 2048
 
+#: Static alias inventory: kernel body name -> the admissible
+#: ``input_output_aliases`` forms its ``pallas_call`` sites declare, each
+#: form a tuple of (input_index, output_index) pairs in flattened call
+#: order.  ``repro.analysis`` cross-checks this dict against the call
+#: sites in this module (REP005) and against the lowered jaxpr of every
+#: registered engine cell (JAX003), so an alias that is dropped — or
+#: silently added — fails CI.  Keep in lock-step with the pallas_call
+#: sites below.  ``_kernel`` admits two forms because ``_launch`` serves
+#: both the leaf-wise path (fresh cache output) and the packed path
+#: (cache donated in place).
+ALIAS_CONTRACTS = {
+    '_kernel': ((), ((0, 1),)),          # cache -> new_cache when packed
+    '_fleet_kernel': (((0, 1),),),       # cache -> new_cache
+    '_q8_kernel': (((3, 1),),),          # cache -> new_cache
+    '_q8_fleet_kernel': (((3, 1),),),
+    '_rows_kernel': ((),),               # rows paths scatter via ops.py
+    '_q8_rows_kernel': ((),),
+    '_rows_fleet_kernel': ((),),
+    '_q8_rows_fleet_kernel': ((),),
+    '_tier_rows_kernel': (((2, 2),),),   # value buffer updated in place
+    '_q8_tier_rows_kernel': (((5, 2),),),
+}
+
 
 def _agg_math(cache, trained, g, picked, undrafted, deprecated, w):
     """Eq. 6-8 on one [m, T] tile; returns (new_global [1, T], new_cache)."""

@@ -25,6 +25,12 @@ from repro.kernels.backend import INTERPRET
 
 NEG_INF = -1e30
 
+#: Static alias inventory (see ``safa_aggregate.ALIAS_CONTRACTS`` for the
+#: format): the attention output is a fresh buffer — no operand aliasing.
+ALIAS_CONTRACTS = {
+    '_kernel': ((),),
+}
+
 
 def _compiler_params():
     """dimension_semantics: KV-block axis is sequential ('arbitrary')."""

@@ -39,7 +39,7 @@ def _attn_layers(cfg: ModelConfig) -> int:
 
 
 def flops_estimate(cfg: ModelConfig, *, kind: str, batch: int, seq: int,
-                   n_params: int, n_active: int, local_steps: int = 1) -> float:
+                   n_active: int, local_steps: int = 1) -> float:
     """Total FLOPs for one step across the whole mesh."""
     T = batch * seq if kind != 'decode' else batch
     H, hd = cfg.n_heads, cfg.head_dim

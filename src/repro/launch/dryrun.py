@@ -67,15 +67,15 @@ def lower_one(arch_id: str, shape_name: str, *, multi_pod: bool,
                           n_clients=mesh_lib.n_clients(mesh, n_cl_axes),
                           rules=rules)
         state_sds = setup.state_sds()
-        batch_sds = setup.client_batch(shape, mesh)
+        batch_sds = setup.client_batch(shape)
         state_sh, batch_sh = setup.shardings(mesh, shape)
         step = setup.fedavg_train_step if fedavg_baseline else setup.train_step
         with mesh:
             lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
                               donate_argnums=(0,)).lower(state_sds, batch_sds)
         tokens = shape.global_batch * shape.seq_len
-        mf = rf.model_flops_estimate(model.n_params(),
-                                     active_params(cfg, model), tokens, 'train')
+        mf = rf.model_flops_estimate(active_params(cfg, model), tokens,
+                                     'train')
     elif shape.kind == 'prefill':
         setup = ServeSetup(model, serve_rules=serve_rules)
         p_sh = setup.param_shardings(mesh)
@@ -85,8 +85,8 @@ def lower_one(arch_id: str, shape_name: str, *, multi_pod: bool,
                               in_shardings=(p_sh, b_sh)).lower(
                 model.param_shapes(), setup.prefill_batch(shape))
         tokens = shape.global_batch * shape.seq_len
-        mf = rf.model_flops_estimate(model.n_params(),
-                                     active_params(cfg, model), tokens, 'prefill')
+        mf = rf.model_flops_estimate(active_params(cfg, model), tokens,
+                                     'prefill')
     else:  # decode
         setup = ServeSetup(model, serve_rules=serve_rules)
         p_sh = setup.param_shardings(mesh)
@@ -98,8 +98,8 @@ def lower_one(arch_id: str, shape_name: str, *, multi_pod: bool,
                               donate_argnums=(1,)).lower(
                 model.param_shapes(), cache_sds, tok_sds)
         tokens = shape.global_batch  # one token per sequence
-        mf = rf.model_flops_estimate(model.n_params(),
-                                     active_params(cfg, model), tokens, 'decode')
+        mf = rf.model_flops_estimate(active_params(cfg, model), tokens,
+                                     'decode')
 
     t_lower = time.time() - t0
     t0 = time.time()
@@ -116,7 +116,7 @@ def lower_one(arch_id: str, shape_name: str, *, multi_pod: bool,
     n_cl = mesh_lib.n_clients(mesh) if shape.kind == 'train' else 1
     flops = analytic.flops_estimate(
         cfg, kind=shape.kind, batch=shape.global_batch, seq=shape.seq_len,
-        n_params=model.n_params(), n_active=active_params(cfg, model))
+        n_active=active_params(cfg, model))
     byts = analytic.bytes_estimate(
         cfg, kind=shape.kind, batch=shape.global_batch, seq=shape.seq_len,
         n_params=model.n_params(), n_clients=n_cl)

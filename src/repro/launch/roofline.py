@@ -118,7 +118,7 @@ class Roofline:
         }
 
 
-def model_flops_estimate(n_params: int, n_active_params: int, tokens: int,
+def model_flops_estimate(n_active_params: int, tokens: int,
                          kind: str) -> float:
     """MODEL_FLOPS = 6 * N * D for training, 2 * N * D for inference
     (N = active params for MoE)."""

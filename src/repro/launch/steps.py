@@ -97,8 +97,8 @@ class SiloSetup:
     learning_rate: float = 1e-2
     rules: dict = None   # sharding profile (repro.sharding.PROFILES); None=tp
 
-    def client_batch(self, shape, mesh: Mesh):
-        """ShapeDtypeStructs for one round's input batch on this mesh."""
+    def client_batch(self, shape):
+        """ShapeDtypeStructs for one round's input batch."""
         cfg = self.model.cfg
         C = self.n_clients
         b = max(1, shape.global_batch // C)
@@ -138,7 +138,7 @@ class SiloSetup:
         state_sh = _shardings_for(self.state_axes(), self.state_sds(), mesh,
                                   self.rules)
         batch_sh = _shardings_for(batch_axes_train(self.model.cfg),
-                                  self.client_batch(shape, mesh), mesh,
+                                  self.client_batch(shape), mesh,
                                   self.rules)
         return state_sh, batch_sh
 

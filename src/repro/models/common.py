@@ -151,7 +151,7 @@ def layer_norm(x, scale, bias, eps=1e-5):
 
 
 @_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def grad_cast(x, dtype):
+def grad_cast(x, dtype):  # noqa: ARG001
     """Identity forward; casts the cotangent to ``dtype`` on the way back.
 
     §Perf iteration 4: the cross-entropy upcast makes the logits cotangent
@@ -163,7 +163,7 @@ def grad_cast(x, dtype):
     return x
 
 
-def _grad_cast_fwd(x, dtype):
+def _grad_cast_fwd(x, dtype):  # noqa: ARG001
     return x, None
 
 

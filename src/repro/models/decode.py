@@ -167,7 +167,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
         nk, nv = [], []
         new_pos = cache['positions']
         for gi, (s, e) in enumerate(groups):
-            chunk = jax.tree.map(lambda a: a[s:e], params['layers'])
+            chunk = jax.tree.map(lambda a, lo=s, hi=e: a[lo:hi],
+                                 params['layers'])
 
             def body(h, inputs):
                 layer, conv_c, ssm_c = inputs

@@ -134,7 +134,7 @@ def init_mamba_block(key, d_model, d_state, headdim, dtype, expand=2):
     }
 
 
-def _split_in_proj(zxbcdt, d_inner, d_state, n_heads):
+def _split_in_proj(zxbcdt, d_inner, d_state):
     z, x, B, C, dt = jnp.split(
         zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
                  2 * d_inner + 2 * d_state], axis=-1)
@@ -154,7 +154,7 @@ def apply_mamba_block(p, x, *, d_state, headdim, chunk=128, expand=2):
     d_inner = expand * d_model
     n_heads = d_inner // headdim
     zxbcdt = jnp.einsum('bsd,de->bse', x, p['in_proj'])
-    z, xc, B, C, dt = _split_in_proj(zxbcdt, d_inner, d_state, n_heads)
+    z, xc, B, C, dt = _split_in_proj(zxbcdt, d_inner, d_state)
     xbc = _causal_conv(jnp.concatenate([xc, B, C], axis=-1), p['conv_w'], p['conv_b'])
     xc, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p['dt_bias'])
@@ -184,7 +184,7 @@ def step_mamba_block(p, cache, x_t, *, d_state, headdim, expand=2):
     d_inner = expand * d_model
     n_heads = d_inner // headdim
     zxbcdt = jnp.einsum('bsd,de->bse', x_t, p['in_proj'])[:, 0]
-    z, xc, B, C, dt = _split_in_proj(zxbcdt, d_inner, d_state, n_heads)
+    z, xc, B, C, dt = _split_in_proj(zxbcdt, d_inner, d_state)
     conv_in = jnp.concatenate([xc, B, C], axis=-1)           # [b, ch]
     conv_win = jnp.concatenate([cache['conv'], conv_in[:, None]], axis=1)  # [b,K,ch]
     conv_out = jnp.einsum('bkc,kc->bc', conv_win, p['conv_w']) + p['conv_b']

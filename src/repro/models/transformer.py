@@ -284,7 +284,8 @@ def hybrid_groups(cfg: ModelConfig):
 def run_hybrid_stack(params, x, cfg: ModelConfig, *, positions=None):
     groups = hybrid_groups(cfg)
     for gi, (s, e) in enumerate(groups):
-        chunk = jax.tree.map(lambda a: a[s:e], params['layers'])
+        chunk = jax.tree.map(lambda a, lo=s, hi=e: a[lo:hi],
+                             params['layers'])
         x = run_ssm_stack(chunk, x, cfg)
         if gi < len(groups) - 1:
             x, _ = dense_layer_fwd(params['shared_attn'], x, cfg,
@@ -296,7 +297,7 @@ def run_hybrid_stack(params, x, cfg: ModelConfig, *, positions=None):
 # Model-level forward (training / prefill logits)
 # ---------------------------------------------------------------------------
 
-def embed_tokens(params, tokens, cfg: ModelConfig):
+def embed_tokens(params, tokens, cfg: ModelConfig):  # noqa: ARG001
     return jnp.take(params['embed'], tokens, axis=0)
 
 

@@ -220,6 +220,8 @@ GOLDENS = [
      'upload-aggregate wire'),
     ('kernel-protocol', api.LocalSpec(), dict(use_kernel='packed'),
      'fused aggregation kernel'),
+    ('kernel-protocol-fedcs', api.FedCSSpec(), dict(use_kernel='packed'),
+     'fused aggregation kernel'),
     ('kernel-packed-only', api.SeaflSpec(), dict(use_kernel=True),
      'pack buffers only'),
     ('staleness-fn', api.FedAsyncSpec(staleness_fn='exp'), {},

@@ -7,11 +7,16 @@ from repro.data import make_regression, partition
 from repro.data.tasks import regression_task
 from repro.fedsim import FLEnv
 
+# one built Env's rng is single-shot (see Env.draw_rounds) — tests that
+# launch several runs build a fresh env per run from this recipe; same
+# seed => same client population, so one partition serves them all
+REG_ENV_KW = dict(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
+                  epochs=3, t_lim=830.0, seed=3)
+
 
 @pytest.fixture(scope='module')
 def reg_setup():
-    env = FLEnv(m=5, crash_prob=0.3, dataset_size=506, batch_size=5,
-                epochs=3, t_lim=830.0, seed=3)
+    env = FLEnv(**REG_ENV_KW)
     x, y = make_regression()
     data = partition(x, y, env.partition_sizes, 5, seed=1)
     task = regression_task(data, lr=1e-3, epochs=3)
@@ -21,8 +26,8 @@ def reg_setup():
 class TestProtocolRuns:
     def test_safa_converges(self, reg_setup):
         env, task = reg_setup
-        h = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
-                                rounds=40, eval_every=10)
+        h = federation.run_safa(task, FLEnv(**REG_ENV_KW), fraction=0.5,
+                                lag_tolerance=5, rounds=40, eval_every=10)
         evals = [e['loss'] for _, e in h.evals()]
         assert evals[-1] < evals[0] * 0.5
         assert 0 <= h.futility <= 1
@@ -34,27 +39,27 @@ class TestProtocolRuns:
             kw = dict(fraction=0.3, rounds=20, numeric=False)
             if name == 'safa':
                 kw['lag_tolerance'] = 5
-            h = fn(None, env, **kw)
+            h = fn(None, FLEnv(**REG_ENV_KW), **kw)
             assert len(h.records) == 20, name
             assert h.mean('round_len') > 0
 
     def test_safa_round_shorter_than_fedavg(self):
         """Paper's headline: SAFA shortens rounds, esp. at small C."""
-        env = FLEnv(m=100, crash_prob=0.3, dataset_size=70000, batch_size=40,
-                    epochs=5, t_lim=5600.0, seed=0)
-        hs = federation.run_safa(None, env, fraction=0.1, lag_tolerance=5,
-                                 rounds=30, numeric=False)
-        hf = federation.run_fedavg(None, env, fraction=0.1, rounds=30,
-                                   numeric=False)
+        env_kw = dict(m=100, crash_prob=0.3, dataset_size=70000,
+                      batch_size=40, epochs=5, t_lim=5600.0, seed=0)
+        hs = federation.run_safa(None, FLEnv(**env_kw), fraction=0.1,
+                                 lag_tolerance=5, rounds=30, numeric=False)
+        hf = federation.run_fedavg(None, FLEnv(**env_kw), fraction=0.1,
+                                   rounds=30, numeric=False)
         assert hs.mean('round_len') < 0.5 * hf.mean('round_len')
 
     def test_eur_improves_over_fedavg(self):
-        env = FLEnv(m=100, crash_prob=0.3, dataset_size=70000, batch_size=40,
-                    epochs=5, t_lim=5600.0, seed=1)
-        hs = federation.run_safa(None, env, fraction=0.3, lag_tolerance=5,
-                                 rounds=30, numeric=False)
-        hf = federation.run_fedavg(None, env, fraction=0.3, rounds=30,
-                                   numeric=False)
+        env_kw = dict(m=100, crash_prob=0.3, dataset_size=70000,
+                      batch_size=40, epochs=5, t_lim=5600.0, seed=1)
+        hs = federation.run_safa(None, FLEnv(**env_kw), fraction=0.3,
+                                 lag_tolerance=5, rounds=30, numeric=False)
+        hf = federation.run_fedavg(None, FLEnv(**env_kw), fraction=0.3,
+                                   rounds=30, numeric=False)
         assert hs.mean('eur') > hf.mean('eur')
 
     def test_sr_decreases_with_lag_tolerance(self):
@@ -152,12 +157,12 @@ class TestQuantizedUplink:
     def test_safa_with_int8_uploads_converges(self, reg_setup):
         """Beyond-paper: int8-compressed client uploads barely change the
         global model trajectory (comm_quant kernel in the loop)."""
-        env, task = reg_setup
-        h_q = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
-                                  rounds=25, eval_every=25,
+        _, task = reg_setup
+        h_q = federation.run_safa(task, FLEnv(**REG_ENV_KW), fraction=0.5,
+                                  lag_tolerance=5, rounds=25, eval_every=25,
                                   quantize_uploads=True)
-        h_f = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
-                                  rounds=25, eval_every=25)
+        h_f = federation.run_safa(task, FLEnv(**REG_ENV_KW), fraction=0.5,
+                                  lag_tolerance=5, rounds=25, eval_every=25)
         assert h_q.best_eval['loss'] < h_f.best_eval['loss'] * 1.5 + 1.0
 
 
@@ -166,10 +171,11 @@ class TestFedAsync:
         """FedAsync (related-work baseline): converges, but every client
         syncs every round (SR=1) and the server does ~m merges per round —
         the communication pressure SAFA's semi-async design avoids."""
-        env, task = reg_setup
-        ha = federation.run_fedasync(task, env, rounds=40, eval_every=20)
-        hs = federation.run_safa(task, env, fraction=0.5, lag_tolerance=5,
-                                 rounds=40, eval_every=20)
+        _, task = reg_setup
+        ha = federation.run_fedasync(task, FLEnv(**REG_ENV_KW), rounds=40,
+                                     eval_every=20)
+        hs = federation.run_safa(task, FLEnv(**REG_ENV_KW), fraction=0.5,
+                                 lag_tolerance=5, rounds=40, eval_every=20)
         assert ha.best_eval['loss'] < 5.0
         assert ha.mean('sr') == 1.0
         assert hs.mean('sr') < 1.0  # SAFA syncs only up-to-date + deprecated

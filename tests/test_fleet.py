@@ -429,9 +429,9 @@ class TestFleetKernel:
                                                     **masks)
         for s in range(3):
             ref = kops.safa_aggregate_tree_packed(
-                jax.tree.map(lambda a: a[s], cache),
-                jax.tree.map(lambda a: a[s], trained),
-                jax.tree.map(lambda a: a[s], g),
+                jax.tree.map(lambda a, i=s: a[i], cache),
+                jax.tree.map(lambda a, i=s: a[i], trained),
+                jax.tree.map(lambda a, i=s: a[i], g),
                 **{k: v[s] for k, v in masks.items()})
             for k in cache:
                 np.testing.assert_allclose(

@@ -100,7 +100,7 @@ class TestDecodeMatchesForward:
             xks, xvs = [], []
             layers = params['dec_layers']
             for i in range(cfg.n_layers):
-                layer = jax.tree.map(lambda a: a[i], layers)
+                layer = jax.tree.map(lambda a, j=i: a[j], layers)
                 kk, vv = tfm.project_enc_kv(layer['xattn'], enc, cfg)
                 xks.append(kk)
                 xvs.append(vv)

@@ -121,7 +121,7 @@ class TestLocalMeshLowering:
         with mesh:
             lowered = jax.jit(setup.train_step,
                               in_shardings=(state_sh, batch_sh)).lower(
-                setup.state_sds(), setup.client_batch(shape, mesh))
+                setup.state_sds(), setup.client_batch(shape))
             compiled = lowered.compile()
         assert compiled.cost_analysis() is not None
 
